@@ -1,0 +1,124 @@
+"""Render the EXPERIMENTS.md tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--section all]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from .roofline import ARTIFACT_DIR, roofline_rows, roofline_terms
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}g}"
+
+
+def dryrun_table():
+    print("| arch | shape | mesh | status | HBM args+temp/dev | "
+          "collective bytes/dev | compile |")
+    print("|---|---|---|---|---|---|---|")
+    for f in sorted(ARTIFACT_DIR.glob("*.json")):
+        if "__hc_" in f.name or "megatron" in f.name:
+            continue
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skipped¹ | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"ERROR | — | — | — |")
+            continue
+        mem = r["memory"]
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]) / 2 ** 30
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{hbm:.1f} GiB | {fmt(r['collective_bytes_total'])} | "
+              f"{r['compile_s']:.0f}s |")
+
+
+def roofline_table(mesh="16x16"):
+    rows = [r for r in roofline_rows() if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print("| arch | shape | compute s | memory s (analytic) | "
+          "memory s (HLO ub) | collective s | bottleneck | "
+          "useful-FLOP ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {fmt(r['compute_s'])} | "
+              f"{fmt(r['memory_s'])} | {fmt(r['memory_s_hlo'])} | "
+              f"{fmt(r['collective_s'])} | {r['bottleneck']} | "
+              f"{r['useful_flop_ratio']:.3f} | "
+              f"{r['roofline_fraction']:.4f} |")
+
+
+def hillclimb_table():
+    cells = {
+        "mistral-nemo-12b__train_4k__16x16": [
+            ("baseline (PBQP rules, dense causal attn, full remat)", ""),
+            ("+ chunked-causal attention (8 chunks)", "__hc_chunked"),
+            ("+ dots remat (8 chunks)", "__hc_chunked_dots"),
+            ("+ 4-chunk causal + dots remat", "__hc_chunked4_dots"),
+            ("H7 (refuted): KV-head pad 8->16", "__hc_kvpad"),
+        ],
+        "kimi-k2-1t-a32b__train_4k__16x16": [
+            ("baseline (gather-dispatch MoE)", ""),
+            ("+ shard_map EP all-to-all dispatch", "__hc_a2a"),
+            ("+ chunked-causal attention", "__hc_a2a_chunked"),
+        ],
+        "whisper-large-v3__train_4k__16x16": [
+            ("baseline (head_dim TP — mispriced cost table)", ""),
+            ("re-solved PBQP after cost-table fix (attn:rep)",
+             "__hc_resel"),
+            ("+ dots remat", "__hc_resel_dots"),
+        ],
+        "llava-next-34b__train_4k__16x16": [
+            ("baseline (head_dim TP — mispriced cost table)", ""),
+            ("re-solved PBQP (transfer of the whisper fix)",
+             "__hc_resel"),
+        ],
+    }
+    for base, variants in cells.items():
+        print(f"\n**{base.replace('__', ' / ')}**\n")
+        print("| step | compute s | memory s | collective s | dominant | "
+              "roofline frac |")
+        print("|---|---|---|---|---|---|")
+        for label, tag in variants:
+            p = ARTIFACT_DIR / f"{base}{tag}.json"
+            if not p.exists():
+                print(f"| {label} | — | — | — | — | — |")
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] != "ok":
+                print(f"| {label} | ERROR | | | | |")
+                continue
+            t = roofline_terms(r)
+            print(f"| {label} | {fmt(t['compute_s'])} | "
+                  f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+                  f"{fmt(t['dominant_s'])} ({t['bottleneck']}) | "
+                  f"{t['roofline_fraction']:.4f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "hillclimb"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("## Dry-run matrix\n")
+        dryrun_table()
+    if args.section in ("all", "roofline"):
+        print("\n## Roofline (single-pod 16x16)\n")
+        roofline_table()
+    if args.section in ("all", "hillclimb"):
+        print("\n## Hillclimbs\n")
+        hillclimb_table()
+
+
+if __name__ == "__main__":
+    main()

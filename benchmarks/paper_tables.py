@@ -1,0 +1,112 @@
+"""Benchmarks reproducing the paper's tables and figures.
+
+  * Figures 5/6/7 + Tables 2/3 -> ``strategy_comparison``: whole-network
+    inference time per selection strategy (SUM2D baseline, local-optimal
+    canonical layout, per-family best, PBQP) per network.
+  * Figure 4 -> ``selection_map``: the per-layer primitive the PBQP
+    optimum picks for AlexNet.
+  * Section 5.4 -> ``solver_overhead``: PBQP solve time per network.
+
+CPU notes: this container is the "general purpose platform" of the
+paper (the TPU is priced by the analytic model + dry-run roofline).  XLA
+CPU uses all cores, matching the paper's multithreaded configuration.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.convnets import NETWORKS
+from repro.core.costs import AnalyticCostModel, CostModel, ProfiledCostModel
+from repro.core.plan import compile_plan, measure
+from repro.core.selection import (
+    SelectionResult, select_family_best, select_local_optimal, select_pbqp,
+    select_sum2d,
+)
+
+FAMILIES = ["direct", "im2", "kn2", "winograd", "fft"]
+
+
+def strategies(net, cost: CostModel) -> Dict[str, SelectionResult]:
+    out = {"sum2d": select_sum2d(net, cost),
+           "local_opt": select_local_optimal(net, cost)}
+    for fam in FAMILIES:
+        out[fam] = select_family_best(net, cost, fam)
+    out["pbqp"] = select_pbqp(net, cost)
+    return out
+
+
+def strategy_comparison(net_names: List[str], cost: CostModel, *,
+                        scale: float = 1.0, reps: int = 5,
+                        run: bool = True) -> List[dict]:
+    """Tables 2/3 + Figures 5/6/7 analogue."""
+    rows = []
+    for name in net_names:
+        net = NETWORKS[name](scale)
+        params = net.init_params(seed=0)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=net.nodes["data"].out_shape).astype(np.float32)
+        sels = strategies(net, cost)
+        base_t = None
+        ref_out = None
+        for sname, sel in sels.items():
+            row = {"net": net.name, "strategy": sname,
+                   "predicted_ms": sel.predicted_cost * 1e3,
+                   "optimal": sel.optimal}
+            if run:
+                cn = compile_plan(sel, params)
+                t = measure(cn, x, reps=reps)
+                row["measured_ms"] = t["mean_s"] * 1e3
+                out = cn(x)
+                if ref_out is None:
+                    ref_out = out
+                    base_t = t["mean_s"]
+                else:
+                    for k in ref_out:
+                        np.testing.assert_allclose(
+                            np.asarray(out[k]), np.asarray(ref_out[k]),
+                            rtol=5e-3, atol=5e-3)
+                row["speedup_vs_sum2d"] = base_t / t["mean_s"]
+            rows.append(row)
+        if isinstance(cost, ProfiledCostModel):
+            cost.flush()
+    return rows
+
+
+def selection_map(net_name: str, cost: CostModel,
+                  scale: float = 1.0) -> List[dict]:
+    """Figure 4 analogue: which primitive each conv layer gets."""
+    net = NETWORKS[net_name](scale)
+    sel = select_pbqp(net, cost)
+    rows = []
+    for node in net.conv_nodes():
+        ch = sel.choices[node.id]
+        rows.append({
+            "net": net.name, "layer": node.id,
+            "scenario": node.scn.key(),
+            "primitive": ch.primitive.name,
+            "family": ch.primitive.family,
+            "layout": f"{ch.l_in}->{ch.l_out}",
+        })
+    return rows
+
+
+def solver_overhead(net_names: List[str], cost: CostModel,
+                    scale: float = 1.0) -> List[dict]:
+    """Section 5.4: solve time must be < 1 s per network."""
+    rows = []
+    for name in net_names:
+        net = NETWORKS[name](scale)
+        # warm the cost cache so we time the solver, not the profiler
+        _ = select_sum2d(net, cost)
+        _ = select_pbqp(net, cost)
+        t0 = time.perf_counter()
+        sel = select_pbqp(net, cost)
+        dt = time.perf_counter() - t0
+        rows.append({"net": net.name, "solve_s": dt,
+                     "optimal": sel.optimal,
+                     "n_convs": len(net.conv_nodes()),
+                     "stats": dict(sel.solver_stats)})
+    return rows

@@ -1,0 +1,129 @@
+"""Roofline table assembly from multi-pod dry-run artifacts.
+
+Reads the per-cell JSON files produced by ``repro.launch.dryrun`` and
+derives the three roofline terms (see EXPERIMENTS.md §Roofline):
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+Quantities in the artifacts are PER DEVICE (the compiled HLO is the
+per-device program), so the formulas reduce to per-device quantities
+over per-chip rates.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Memory-term caveat (measured, see EXPERIMENTS.md §Dry-run): XLA-CPU
+``bytes accessed`` reflects CPU fusion boundaries and over-counts TPU
+HBM traffic by an order of magnitude (every operand of every unfused op
+counts at full size).  We therefore report BOTH:
+
+  memory_s_hlo      — the raw cost_analysis value (upper bound)
+  memory_s          — analytic first-principles traffic:
+      train:   4 passes over resident params (fwd read, bwd read, grad
+               write, optimizer read+write amortised) + activation
+               write+read of ~14 residual-stream tensors per layer
+               (x2 under remat: saved + recomputed)
+      prefill: 1 param pass + activation traffic + KV-cache write
+      decode:  1 param pass + KV-cache read (+write of 1 token) — the
+               classic decode HBM roofline
+
+The bottleneck/dominant term uses the analytic memory term; both appear
+in the table.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = pathlib.Path(__file__).resolve().parent / "results" / \
+    "dryrun"
+
+
+def _analytic_memory_bytes(rec: dict) -> Optional[float]:
+    """Per-device HBM traffic estimate for one step (see module doc)."""
+    try:
+        from repro.configs import ARCHS, SHAPES
+        cfg = ARCHS[rec["arch"]]
+        shape = SHAPES[rec["shape"]]
+    except Exception:
+        return None
+    chips = rec["n_devices"]
+    p_bytes = rec["params_total"] * 2 / chips       # bf16, fully sharded
+    d = cfg.d_model
+    kind = shape.kind
+    if kind == "train":
+        b, t = shape.global_batch, shape.seq_len
+        act = b * t * d * 2 / chips
+        n_tensors = 14 * cfg.n_layers
+        return 4 * p_bytes + 2 * act * n_tensors * 2  # x2 remat
+    if kind == "prefill":
+        b, t = shape.global_batch, shape.seq_len
+        act = b * t * d * 2 / chips
+        kv = (cfg.n_layers * b * t * 2 *
+              max(cfg.n_kv_heads, 1) *
+              (cfg.resolved_head_dim if cfg.n_heads else 0) * 2) / chips
+        return p_bytes + act * 14 * cfg.n_layers + kv
+    # decode: params + cache read per emitted token
+    b, t = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    kv = (cfg.n_layers * b * t * 2 * max(cfg.n_kv_heads, 0) * hd * 2) \
+        / chips
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_headdim
+        n_mamba = cfg.n_layers if cfg.family == "ssm" else \
+            cfg.n_layers * (cfg.attn_every - 1) // cfg.attn_every
+        kv_attn_layers = 0 if cfg.family == "ssm" else \
+            cfg.n_layers // cfg.attn_every
+        kv = (kv_attn_layers * b * t * 2 * cfg.n_kv_heads *
+              (cfg.resolved_head_dim if cfg.n_heads else 0) * 2) / chips
+        kv += n_mamba * b * h * cfg.ssm_state * cfg.ssm_headdim * 4 / chips
+    # active params only stream for MoE decode (top_k experts hit)
+    p_stream = rec["params_active"] * 2 / chips if cfg.n_experts \
+        else p_bytes
+    return p_stream + kv
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    compute = rec["flops_total"] / PEAK_FLOPS
+    memory_hlo = rec["bytes_total"] / HBM_BW
+    mem_analytic_b = _analytic_memory_bytes(rec)
+    memory = (mem_analytic_b / HBM_BW) if mem_analytic_b else memory_hlo
+    collective = rec["collective_bytes_total"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    bottleneck = max(terms, key=terms.get)
+    dominant = terms[bottleneck]
+    model_time = rec["model_flops"] / (chips * PEAK_FLOPS)
+    frac = model_time / max(dominant, 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "rules_mode": rec.get("rules_mode", "pbqp"),
+        "compute_s": compute, "memory_s": memory,
+        "memory_s_hlo": memory_hlo, "collective_s": collective,
+        "bottleneck": bottleneck, "dominant_s": dominant,
+        "model_flops": rec["model_flops"],
+        "hlo_flops_total": rec["flops_total"] * chips,
+        "useful_flop_ratio": rec["model_flops"] /
+            max(rec["flops_total"] * chips, 1.0),
+        "roofline_fraction": frac,
+    }
+
+
+def roofline_rows(art_dir: pathlib.Path = ARTIFACT_DIR) -> List[dict]:
+    rows = []
+    if not art_dir.exists():
+        return rows
+    for f in sorted(art_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        rows.append(roofline_terms(rec))
+    return rows

@@ -1,0 +1,124 @@
+"""Benchmark driver.  One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a human-readable
+summary on stderr).  Results are also written to benchmarks/results/.
+
+Modes:
+  python -m benchmarks.run                 # default: profiled costs,
+                                           # CPU-feasible resolutions
+  python -m benchmarks.run --analytic      # deterministic cost model
+  python -m benchmarks.run --full          # paper-resolution networks
+  python -m benchmarks.run --nets alexnet googlenet
+  python -m benchmarks.run --roofline-only # just the dry-run roofline
+
+The profiled mode measures every (primitive, scenario) pair once and
+caches to ~/.cache/repro_profile.json — first run is slow (layerwise
+profiling, same as the paper), subsequent runs are seconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _emit(rows, fname: str):
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    (out / fname).write_text(json.dumps(rows, indent=2, default=str))
+
+
+def _csv(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def run_paper_tables(args) -> None:
+    from repro.core.costs import AnalyticCostModel, ProfiledCostModel
+
+    from .paper_tables import selection_map, solver_overhead, \
+        strategy_comparison
+
+    cost = AnalyticCostModel() if args.analytic else ProfiledCostModel()
+    scale = 1.0 if args.full else args.scale
+
+    # ---- Tables 2/3 + Figures 5/6/7 ----
+    rows = strategy_comparison(args.nets, cost, scale=scale,
+                               reps=args.reps, run=not args.no_run)
+    _emit(rows, "strategy_comparison.json")
+    by_net = {}
+    for r in rows:
+        by_net.setdefault(r["net"], {})[r["strategy"]] = r
+    for net, sts in by_net.items():
+        for st, r in sts.items():
+            us = r.get("measured_ms", r["predicted_ms"]) * 1e3
+            sp = r.get("speedup_vs_sum2d", None)
+            _csv(f"table2_3/{net}/{st}", us,
+                 f"speedup_vs_sum2d={sp:.2f}" if sp else "predicted")
+    # paper claims, checked live:
+    for net, sts in by_net.items():
+        key = "measured_ms" if "measured_ms" in next(iter(sts.values())) \
+            else "predicted_ms"
+        best_fam = min((sts[f][key] for f in
+                        ["direct", "im2", "kn2", "winograd", "fft"]))
+        ok1 = sts["pbqp"][key] <= sts["local_opt"][key] * 1.05
+        ok2 = sts["pbqp"][key] <= best_fam * 1.05
+        print(f"# claim[{net}]: pbqp<=local_opt: {ok1}; "
+              f"pbqp<=best_family: {ok2}", file=sys.stderr)
+
+    # ---- Figure 4 ----
+    smap = selection_map("alexnet", cost,
+                         scale=1.0 if args.full else args.scale)
+    _emit(smap, "selection_map.json")
+    for r in smap:
+        _csv(f"fig4/{r['net']}/{r['layer']}", 0.0,
+             f"{r['primitive']}({r['layout']})")
+
+    # ---- Section 5.4 ----
+    so = solver_overhead(args.nets, cost,
+                         scale=1.0 if args.full else args.scale)
+    _emit(so, "solver_overhead.json")
+    for r in so:
+        _csv(f"sec5.4_solver/{r['net']}", r["solve_s"] * 1e6,
+             f"optimal={r['optimal']},n_convs={r['n_convs']}")
+    if hasattr(cost, "flush"):
+        cost.flush()
+
+
+def run_roofline(args) -> None:
+    from .roofline import roofline_rows
+    rows = roofline_rows()
+    if not rows:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first", file=sys.stderr)
+        return
+    _emit(rows, "roofline.json")
+    for r in rows:
+        _csv(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             r["dominant_s"] * 1e6,
+             f"bound={r['bottleneck']};frac={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nets", nargs="+",
+                    default=["alexnet", "googlenet", "vgg-a", "vgg-d"])
+    ap.add_argument("--analytic", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-resolution inputs (slow on CPU)")
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--no-run", action="store_true",
+                    help="selection only; skip whole-net measurement")
+    ap.add_argument("--roofline-only", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    if not args.roofline_only:
+        run_paper_tables(args)
+    if not args.skip_roofline:
+        run_roofline(args)
+
+
+if __name__ == "__main__":
+    main()

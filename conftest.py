@@ -1,0 +1,13 @@
+"""Pytest bootstrap: make `repro` (src layout) and `benchmarks`
+importable regardless of how pytest is invoked.
+
+NOTE: deliberately does NOT set XLA_FLAGS — tests must see the real
+single-device CPU; only repro/launch/dryrun.py forces 512 devices.
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,41 @@
+"""The paper's technique at datacenter scale: PBQP sharding selection.
+
+  PYTHONPATH=src python examples/select_sharding.py [--arch kimi-k2-1t-a32b]
+
+Shows the solver choosing per-tensor-group sharding rules (TP vs EP vs
+replication vs sequence-parallel stream) for each architecture x shape
+on the production mesh, with the priced collective costs.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.sharding_select import select_rules
+
+MESH = {"pod": 2, "data": 16, "model": 16}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCHS)
+
+    for arch in archs:
+        cfg = ARCHS[arch]
+        print(f"\n== {arch} on mesh {MESH} ==")
+        for sname, shape in SHAPES.items():
+            if sname == "long_500k" and not cfg.sub_quadratic:
+                print(f"  {sname:12s} skipped (full attention)")
+                continue
+            rules, rep = select_rules(cfg, shape, MESH)
+            asg = " ".join(f"{k}={v.split(':')[1]}"
+                           for k, v in rep["assignment"].items())
+            print(f"  {sname:12s} comm={rep['predicted_comm_s']*1e3:9.2f}ms"
+                  f"  {asg}")
+
+
+if __name__ == "__main__":
+    main()

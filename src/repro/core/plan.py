@@ -1,0 +1,106 @@
+"""Execution of an instantiated DNN: the paper's "simple code generator
+which emitted calls to primitive operations" — here it builds a single
+jit'd function that walks the DAG in topological order, invoking the
+selected primitive per conv layer and the explicit layout-conversion
+chains the legalizer inserted on illegal edges.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Net
+from .layouts import LAYOUT_BY_NAME
+from .primitives import convert_layout
+from .selection import SelectionResult
+
+__all__ = ["compile_plan", "CompiledNet", "measure"]
+
+
+@dataclass
+class CompiledNet:
+    sel: SelectionResult
+    fn: Callable                      # (x_chw, params) -> outputs dict
+    params: Dict[str, Any]            # packed per-node parameters
+
+    def __call__(self, x_chw):
+        return self.fn(jnp.asarray(x_chw), self.params)
+
+
+def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
+                 jit: bool = True, fuse_across_layers: bool = False
+                 ) -> CompiledNet:
+    """``fuse_across_layers=False`` (default) inserts optimization
+    barriers between primitive calls: the paper's code generator emits
+    *calls into a library of routines*, so no cross-layer fusion exists
+    and per-layer profiled costs compose additively.  Letting XLA fuse
+    across layers (True) breaks that additivity — useful as an extra
+    baseline, but it is a different system than the paper's."""
+    net = sel.net
+    packed: Dict[str, Any] = {}
+    makers: Dict[str, Callable] = {}
+    for nid in net.order:
+        node = net.nodes[nid]
+        ch = sel.choices[nid]
+        if node.kind == "conv":
+            p = raw_params[nid]
+            packed[nid] = ch.primitive.prepare(node.scn, p["w"], p["b"])
+            makers[nid] = ch.primitive.make(node.scn)
+        elif node.kind == "op" and nid in raw_params:
+            packed[nid] = jax.tree.map(jnp.asarray, raw_params[nid])
+
+    barrier = (lambda v: v) if fuse_across_layers else \
+        (lambda v: jax.lax.optimization_barrier(v))
+
+    def run(x, params):
+        vals: Dict[str, Any] = {}
+        for nid in net.order:
+            node = net.nodes[nid]
+            ch = sel.choices[nid]
+            if node.kind == "input":
+                vals[nid] = x  # inputs arrive in logical CHW
+                continue
+            ins = []
+            for src in node.inputs:
+                v = vals[src]
+                chain = sel.conversions.get((src, nid))
+                if chain:
+                    for a, b in zip(chain, chain[1:]):
+                        v = barrier(convert_layout(v, a, b))
+                ins.append(v)
+            if node.kind == "conv":
+                vals[nid] = barrier(makers[nid](ins[0], params[nid]))
+            else:
+                layout = LAYOUT_BY_NAME[ch.l_in]
+                vals[nid] = node.op.fn(ins, layout, params.get(nid))
+        outs = {}
+        for nid in net.outputs():
+            v = vals[nid]
+            lo = sel.choices[nid].l_out
+            outs[nid] = convert_layout(v, lo, "CHW")
+        return outs
+
+    fn = jax.jit(run) if jit else run
+    return CompiledNet(sel, fn, packed)
+
+
+def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,
+            warmup: int = 1) -> Dict[str, float]:
+    """Wall-time one forward pass (the paper's whole-network benchmark:
+    mean of ``reps`` iterations after warmup)."""
+    x = jnp.asarray(x_chw)
+    for _ in range(warmup):
+        jax.block_until_ready(cnet.fn(x, cnet.params))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(cnet.fn(x, cnet.params))
+        times.append(time.perf_counter() - t0)
+    return {"mean_s": float(np.mean(times)),
+            "min_s": float(np.min(times)),
+            "std_s": float(np.std(times))}

@@ -1,0 +1,88 @@
+"""Convolutional scenarios — the paper's 6-tuple {C, H, W, delta, K, M}.
+
+A *scenario* captures everything a convolution primitive's runtime
+depends on (Section 3 of the paper): input channels C, spatial size
+H x W, stride delta, kernel radix K, output channels M.  We add the
+padding (the paper's benchmark networks all use explicit pads) and the
+dtype.  Minibatch is fixed at 1 per the paper's latency-sensitive
+deployment context; the batch generalisation lives at the distributed
+level (see repro/core/sharding_select.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["Scenario", "ref_conv"]
+
+
+@dataclass(frozen=True, order=True)
+class Scenario:
+    c: int          # input feature maps
+    h: int          # input height
+    w: int          # input width
+    stride: int     # convolution stride (delta)
+    k: int          # kernel radix (K x K)
+    m: int          # output feature maps
+    pad: int = -1   # -1 => "same"-style default k // 2
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.pad < 0:
+            object.__setattr__(self, "pad", self.k // 2)
+
+    @property
+    def out_h(self) -> int:
+        return (self.h + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        return (self.w + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def in_shape_chw(self) -> Tuple[int, int, int]:
+        return (self.c, self.h, self.w)
+
+    @property
+    def out_shape_chw(self) -> Tuple[int, int, int]:
+        return (self.m, self.out_h, self.out_w)
+
+    @property
+    def weight_shape(self) -> Tuple[int, int, int, int]:
+        return (self.m, self.c, self.k, self.k)
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates of the direct algorithm."""
+        return self.m * self.c * self.k * self.k * self.out_h * self.out_w
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.macs
+
+    def with_(self, **kw) -> "Scenario":
+        return replace(self, **kw)
+
+    def key(self) -> str:
+        return (f"c{self.c}h{self.h}w{self.w}s{self.stride}"
+                f"k{self.k}m{self.m}p{self.pad}{self.dtype}")
+
+
+def ref_conv(x: np.ndarray, w: np.ndarray, b: np.ndarray,
+             stride: int, pad: int) -> np.ndarray:
+    """Reference multi-channel multi-kernel DNN convolution (correlation).
+
+    Pure numpy oracle.  x: (C, H, W); w: (M, C, K, K); b: (M,).
+    Returns (M, H', W').  All primitives in the library are validated
+    against this function.
+    """
+    c, h, wdt = x.shape
+    m, c2, k, k2 = w.shape
+    assert c == c2 and k == k2
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    win = np.lib.stride_tricks.sliding_window_view(xp, (k, k), axis=(1, 2))
+    win = win[:, ::stride, ::stride]  # (C, H', W', K, K)
+    out = np.einsum("chwij,mcij->mhw", win, w, optimize=True)
+    return out + b[:, None, None]

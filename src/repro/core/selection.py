@@ -1,0 +1,206 @@
+"""PBQP construction, solving, legalization — Section 3 of the paper.
+
+The embedding:
+
+* conv node  -> PBQP node whose domain is the applicable primitives;
+  node cost vector = profiled execution time of each primitive.
+* op node    -> PBQP node whose domain is the layouts it accepts;
+  node cost vector = 0 (the paper's zero-cost dummy nodes).
+* edge (u,v) -> cost matrix T[i, j] = APSP cost in the DT graph from
+  u's choice-i output layout to v's choice-j input layout, measured on
+  the actual tensor shape flowing along the edge (inf if no chain of
+  transformations exists).
+
+``legalize`` then bisects every edge whose endpoint layouts differ with
+the explicit shortest chain of conversion layers — the cost of which the
+optimum already accounts for (the paper's key point: pricing conversions
+*after* selection is what makes greedy/local strategies sub-optimal).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import pbqp
+from .costs import CostModel
+from .graph import Net, Node
+from .layouts import DTGraph
+from .primitives import Primitive, primitives_for
+from .scenario import Scenario
+
+__all__ = ["SelectionResult", "select_pbqp", "select_fixed",
+           "select_sum2d", "select_local_optimal", "select_family_best",
+           "Choice"]
+
+
+@dataclass(frozen=True)
+class Choice:
+    """Resolved assignment for one node."""
+    primitive: Optional[Primitive]  # None for op nodes
+    l_in: str
+    l_out: str
+
+
+@dataclass
+class SelectionResult:
+    net: Net
+    choices: Dict[str, Choice]
+    #: per-edge conversion chains: (src, dst) -> [layout names] (len>=2)
+    conversions: Dict[Tuple[str, str], List[str]]
+    predicted_cost: float
+    optimal: bool
+    strategy: str
+    solver_stats: Dict[str, int] = field(default_factory=dict)
+
+
+def _conv_domain(node: Node, cost: CostModel,
+                 families: Optional[Sequence[str]] = None,
+                 require_finite: bool = True):
+    prims = primitives_for(node.scn, families=families)
+    entries = [(p, cost.primitive_cost(p, node.scn)) for p in prims]
+    if require_finite:
+        finite = [(p, c) for (p, c) in entries if np.isfinite(c)]
+        entries = finite or entries
+    if not entries:
+        raise ValueError(f"no primitive supports {node.scn}")
+    return entries
+
+
+def _edge_matrix(dt: DTGraph, shape, out_layouts: Sequence[str],
+                 in_layouts: Sequence[str]) -> np.ndarray:
+    costs, idx = dt.cost_matrix(shape)
+    M = np.zeros((len(out_layouts), len(in_layouts)))
+    for i, lo in enumerate(out_layouts):
+        for j, li in enumerate(in_layouts):
+            M[i, j] = costs[idx[lo], idx[li]]
+    return M
+
+
+def _build(net: Net, cost: CostModel, *,
+           fixed: Optional[Dict[str, Primitive]] = None,
+           families: Optional[Sequence[str]] = None):
+    """Build the PBQP instance; returns (problem, domains).
+
+    ``fixed`` pins given conv nodes to a single primitive (domain size 1)
+    — used by the baseline strategies, which still get optimal *layout*
+    legalization through the op nodes.
+    """
+    dt = cost.dt_graph()
+    pb = pbqp.PBQP()
+    domains: Dict[str, List[Choice]] = {}
+
+    for nid in net.order:
+        node = net.nodes[nid]
+        if node.kind == "input":
+            domains[nid] = [Choice(None, "CHW", "CHW")]
+            pb.add_node(nid, [0.0])
+        elif node.kind == "conv":
+            if fixed and nid in fixed:
+                p = fixed[nid]
+                c = cost.primitive_cost(p, node.scn)
+                domains[nid] = [Choice(p, p.l_in, p.l_out)]
+                pb.add_node(nid, [c if np.isfinite(c) else 1e6])
+            else:
+                entries = _conv_domain(node, cost, families)
+                domains[nid] = [Choice(p, p.l_in, p.l_out)
+                                for p, _ in entries]
+                pb.add_node(nid, [c for _, c in entries])
+        else:  # op
+            lays = list(node.op.layouts)
+            domains[nid] = [Choice(None, l, l) for l in lays]
+            pb.add_node(nid, [0.0] * len(lays))
+
+    for (src, dst) in net.edges():
+        shape = net.nodes[src].out_shape
+        M = _edge_matrix(dt, shape,
+                         [c.l_out for c in domains[src]],
+                         [c.l_in for c in domains[dst]])
+        pb.add_edge(src, dst, M)
+
+    return pb, domains, dt
+
+
+def _legalize(net: Net, dt: DTGraph,
+              choices: Dict[str, Choice]) -> Dict[Tuple[str, str], List[str]]:
+    conversions = {}
+    for (src, dst) in net.edges():
+        lo = choices[src].l_out
+        li = choices[dst].l_in
+        if lo != li:
+            chain = dt.shortest_chain(lo, li, net.nodes[src].out_shape)
+            if chain is None:
+                raise RuntimeError(
+                    f"illegal edge {src}->{dst}: no DT path {lo}->{li}")
+            conversions[(src, dst)] = chain
+    return conversions
+
+
+def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
+                families: Optional[Sequence[str]] = None) -> SelectionResult:
+    """The paper's approach: globally optimal primitive selection."""
+    pb, domains, dt = _build(net, cost, families=families)
+    sol = pbqp.solve(pb, exact=exact)
+    choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
+    conversions = _legalize(net, dt, choices)
+    return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,
+                           "pbqp", sol.stats)
+
+
+def select_fixed(net: Net, cost: CostModel,
+                 pick: Dict[str, Primitive], strategy: str) -> SelectionResult:
+    """Pin conv nodes to given primitives; op-node layouts still get the
+    optimal legalization (restricted PBQP over layouts only)."""
+    pb, domains, dt = _build(net, cost, fixed=pick)
+    sol = pbqp.solve(pb, exact=True)
+    choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
+    conversions = _legalize(net, dt, choices)
+    return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,
+                           strategy, sol.stats)
+
+
+def _sum2d_prim() -> Primitive:
+    from .primitives import registry
+    return next(p for p in registry() if p.name == "sum2d")
+
+
+def select_sum2d(net: Net, cost: CostModel) -> SelectionResult:
+    """The paper's baseline: every conv is the textbook SUM2D routine."""
+    p = _sum2d_prim()
+    pick = {n.id: p for n in net.conv_nodes()}
+    return select_fixed(net, cost, pick, "sum2d")
+
+
+def select_local_optimal(net: Net, cost: CostModel,
+                         canonical: str = "CHW") -> SelectionResult:
+    """The paper's 'local optimal': canonical layout everywhere, fastest
+    primitive that natively consumes and produces that layout."""
+    pick = {}
+    for node in net.conv_nodes():
+        cands = [p for p in primitives_for(node.scn)
+                 if p.l_in == canonical and p.l_out == canonical]
+        costs = [(cost.primitive_cost(p, node.scn), p) for p in cands]
+        costs = [(c, p) for c, p in costs if np.isfinite(c)]
+        pick[node.id] = min(costs, key=lambda t: t[0])[1]
+    return select_fixed(net, cost, pick, "local_optimal")
+
+
+def select_family_best(net: Net, cost: CostModel,
+                       family: str) -> SelectionResult:
+    """The paper's per-family bars: replace SUM2D with the family's
+    fastest variant when that variant is faster (node cost only — layout
+    transformation costs are NOT considered in the pick, which is
+    exactly the trap Section 5.8 demonstrates)."""
+    sum2d = _sum2d_prim()
+    pick = {}
+    for node in net.conv_nodes():
+        base_c = cost.primitive_cost(sum2d, node.scn)
+        cands = [p for p in primitives_for(node.scn, families=[family])]
+        best, best_c = sum2d, base_c
+        for p in cands:
+            c = cost.primitive_cost(p, node.scn)
+            if np.isfinite(c) and c < best_c:
+                best, best_c = p, c
+        pick[node.id] = best
+    return select_fixed(net, cost, pick, f"family_{family}")

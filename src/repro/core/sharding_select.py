@@ -1,0 +1,304 @@
+"""PBQP sharding selection — the paper's technique at datacenter scale.
+
+The exact analogy (DESIGN.md §Technique-mapping):
+
+  CPU world (paper)                  TPU-pod world (this module)
+  -----------------                  ---------------------------
+  data layout of a tensor            PartitionSpec of a tensor
+  primitive {L_in, P, L_out}         op variant + sharding rule-set
+  layout transform routine           resharding collective
+  DT-graph APSP cost                 collective bytes / link bandwidth
+  profiled layer cost                analytic compute+comm time per rule
+
+PBQP nodes are the tensor groups of one transformer program (embed,
+residual stream, attention, FFN/MoE, head, kv-cache); domains are
+feasibility-filtered sharding rule-sets; node costs price the
+collectives a rule implies *inside* its group (e.g. Megatron row-
+parallel out-proj => per-layer all-reduce of the activations); edge
+costs price the resharding between adjacent groups (the "layout
+transformation" of the distributed world).  The same exact solver the
+paper uses for CPU layouts finds the global optimum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..models.sharding import MEGATRON_RULES, Rules
+from . import pbqp
+
+__all__ = ["select_rules", "candidate_report", "ShardingChoice"]
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass(frozen=True)
+class ShardingChoice:
+    name: str
+    #: logical-axis updates this choice contributes to the global Rules
+    updates: Tuple[Tuple[str, object], ...]
+    #: activation "layout" on the residual stream this choice assumes
+    #: ("rep" replicated over model axis, "sp" sequence-sharded)
+    stream: str = "rep"
+
+
+def _bytes(*dims, dtype_bytes=2):
+    return float(np.prod(dims)) * dtype_bytes
+
+
+def _ring_ag_bytes(nbytes, n):
+    """all-gather over n chips moves (n-1)/n of the tensor per link."""
+    return nbytes * (n - 1) / n
+
+
+def _mesh_size(mesh_shape: Dict[str, int], axis) -> int:
+    if axis is None:
+        return 1
+    axes = (axis,) if isinstance(axis, str) else axis
+    return int(np.prod([mesh_shape[a] for a in axes]))
+
+
+def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
+                 exact: bool = True, fsdp: bool = False,
+                 return_solution: bool = False):
+    """Solve the sharding PBQP for (arch, shape) on a mesh.
+
+    Returns (Rules, report) where report logs domains, costs and the
+    chosen assignment (consumed by EXPERIMENTS.md §Perf).
+    """
+    tp = mesh_shape.get("model", 1)
+    dp = _mesh_size(mesh_shape, tuple(a for a in ("pod", "data")
+                                      if a in mesh_shape))
+    b_local = max(shape.global_batch // dp, 1)
+    t = shape.seq_len if shape.kind != "decode" else 1
+    d, v = cfg.d_model, cfg.vocab
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    nl = cfg.n_layers
+    act = _bytes(b_local, t, d)          # residual activation per device
+
+    bwd = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd flops factor
+    mxu_eff = 0.5 * PEAK_FLOPS
+
+    def mm_time(flops: float, ways: int) -> float:
+        """Matmul time when sharded ``ways`` ways (0.5 MXU efficiency)."""
+        return bwd * flops / (max(ways, 1) * mxu_eff)
+
+    pb = pbqp.PBQP()
+    domains: Dict[str, List[ShardingChoice]] = {}
+
+    def add(node: str, choices: List[Tuple[ShardingChoice, float]]):
+        choices = [c for c in choices if np.isfinite(c[1])] or choices
+        domains[node] = [c for c, _ in choices]
+        pb.add_node(node, [c for _, c in choices])
+
+    # ---------------- embed ----------------
+    emb = []
+    if v % tp == 0:
+        # vocab-sharded gather -> all-reduce of the (b,t,d) activations
+        emb.append((ShardingChoice("embed:vocab", (("vocab", "model"),)),
+                    2 * act / (LINK_BW)))
+    if d % tp == 0:
+        emb.append((ShardingChoice("embed:dmodel",
+                                   (("vocab", None),)),  # d sharded in rule
+                    _ring_ag_bytes(act, tp) / LINK_BW))
+    emb.append((ShardingChoice("embed:rep", (("vocab", None),)),
+                _bytes(v, d) / HBM_BW * 0.0))  # replicated: no collective
+    add("embed", emb)
+
+    # ---------------- attention (or mamba mixer) ----------------
+    attn = []
+    n_tok = b_local * t
+    if cfg.is_attention_free:
+        d_inner = cfg.ssm_expand * d
+        h_ssm = d_inner // cfg.ssm_headdim
+        f_ssm = 2 * n_tok * d * (2 * d_inner + 2 * cfg.ssm_state) * nl
+        if h_ssm % tp == 0:
+            attn.append((ShardingChoice(
+                "mixer:ssm_heads", (("ssm_heads", "model"),)),
+                mm_time(f_ssm, tp) + nl * 2 * act / LINK_BW))
+        attn.append((ShardingChoice("mixer:rep", (("ssm_heads", None),)),
+                     mm_time(f_ssm, 1)))
+    else:
+        # projections + score/PV flops per layer stack
+        f_proj = 2 * n_tok * d * (cfg.n_heads + 2 * cfg.n_kv_heads +
+                                  cfg.n_heads) * hd * nl
+        kv_len = shape.seq_len if shape.kind == "decode" else t
+        f_sc = 4 * b_local * t * kv_len * cfg.n_heads * hd * nl
+        f_attn = f_proj + f_sc
+        if cfg.n_heads % tp == 0:
+            # Megatron head-parallel: out-proj row-parallel all-reduce
+            kv_ax = "model" if cfg.n_kv_heads % tp == 0 else None
+            attn.append((ShardingChoice(
+                "attn:heads", (("heads", "model"), ("kv_heads", kv_ax))),
+                mm_time(f_attn, tp) +
+                nl * 2 * act * (tp - 1) / tp / LINK_BW))
+        if hd % tp == 0:
+            # head_dim-parallel (whisper/llava fallback): QK^T contracts
+            # over the sharded head_dim -> all-reduce of the FULL score
+            # tensor (B, H, T, KV) per layer.  Initially priced at 10%
+            # of this (hypothesis: partitioner reassembles lazily) —
+            # REFUTED by the whisper/llava dry-runs (65s/237s measured
+            # collective terms); full-bytes pricing below.  §Perf H3.
+            score_b = _bytes(b_local, cfg.n_heads, t, 1) * kv_len
+            attn.append((ShardingChoice(
+                "attn:head_dim", (("head_dim", "model"),
+                                  ("heads", None), ("kv_heads", None))),
+                mm_time(f_attn, tp) +
+                bwd * nl * (2 * act + score_b) * (tp - 1) / tp / LINK_BW))
+        attn.append((ShardingChoice(
+            "attn:rep", (("heads", None), ("kv_heads", None))),
+            mm_time(f_attn, 1)))
+    add("attn", attn)
+
+    # ---------------- ffn / moe ----------------
+    ffn = []
+    if cfg.n_experts:
+        n_moe = nl // cfg.moe_every
+        f_moe = 2 * n_tok * d * cfg.d_ff * 3 * cfg.top_k * n_moe
+        if cfg.n_experts % tp == 0:
+            # expert parallel: two all-to-alls of the dispatched tokens
+            disp = _bytes(b_local, t, d) * cfg.top_k
+            ffn.append((ShardingChoice("ffn:ep", (("experts", "model"),
+                                                  ("d_ff", None))),
+                        mm_time(f_moe, tp) + n_moe * 2 * disp / LINK_BW))
+        if cfg.d_ff % tp == 0:
+            ffn.append((ShardingChoice("ffn:tp", (("experts", None),
+                                                  ("d_ff", "model"))),
+                        mm_time(f_moe, tp) +
+                        n_moe * 2 * act * (tp - 1) / tp / LINK_BW))
+    elif cfg.d_ff:
+        f_ffn = 2 * n_tok * d * cfg.d_ff * 3 * nl
+        if cfg.d_ff % tp == 0:
+            ffn.append((ShardingChoice("ffn:tp", (("d_ff", "model"),)),
+                        mm_time(f_ffn, tp) +
+                        nl * 2 * act * (tp - 1) / tp / LINK_BW))
+        ffn.append((ShardingChoice("ffn:rep", (("d_ff", None),)),
+                    mm_time(f_ffn, 1)))
+    else:  # pure SSM: no FFN at all
+        ffn.append((ShardingChoice("ffn:none", ()), 0.0))
+    add("ffn", ffn)
+
+    # ---------------- residual stream "layout" ----------------
+    stream = [
+        (ShardingChoice("stream:rep", (("seq", None),), stream="rep"), 0.0),
+    ]
+    if t % tp == 0 and t > 1:
+        # sequence parallelism: norms/elementwise run seq-sharded;
+        # needs all-gather before attn + reduce-scatter after — costed
+        # on the edges below
+        stream.append(
+            (ShardingChoice("stream:sp", (("seq", "model"),), stream="sp"),
+             0.0))
+    add("stream", stream)
+
+    # ---------------- kv-cache (decode shapes) ----------------
+    if shape.kind == "decode" and not cfg.is_attention_free:
+        kv_bytes = _bytes(cfg.n_layers, shape.global_batch, shape.seq_len,
+                          cfg.n_kv_heads * hd) * 2
+        cache = []
+        dp_ax = tuple(a for a in ("pod", "data") if a in mesh_shape)
+        if shape.global_batch % dp == 0 and shape.global_batch >= dp:
+            # batch-sharded cache: no attention collectives
+            cache.append((ShardingChoice(
+                "cache:batch", (("kv_seq", None),)), 0.0))
+        if shape.seq_len % _mesh_size(mesh_shape, dp_ax) == 0:
+            # sequence-sharded cache (long-context, small batch):
+            # partial-softmax psum per step, tiny (B, H) stats
+            cache.append((ShardingChoice(
+                "cache:seq", (("kv_seq", dp_ax),
+                              ("batch", None))),
+                cfg.n_layers * _bytes(shape.global_batch, cfg.n_heads,
+                                      hd + 2, dtype_bytes=4) / LINK_BW))
+        cache.append((ShardingChoice(
+            "cache:replicated", (("kv_seq", None),)),
+            kv_bytes / HBM_BW))  # every chip reads the whole cache
+        add("cache", cache)
+
+    # ---------------- head ----------------
+    head = []
+    logits = _bytes(b_local, t, v, dtype_bytes=4)
+    if v % tp == 0:
+        head.append((ShardingChoice("head:vocab", ()),
+                     _ring_ag_bytes(_bytes(b_local, t, 1, dtype_bytes=4),
+                                    tp) / LINK_BW))
+    head.append((ShardingChoice("head:rep", (("vocab", None),)),
+                 logits / HBM_BW / tp * 0 + _bytes(d, v) / HBM_BW))
+    add("head", head)
+
+    # ---------------- edges: resharding between stream and groups ----
+    # stream "layout" transitions are the DT-graph edges: SP <-> rep
+    # costs one all-gather (rep->needs full seq) or reduce-scatter.
+    def stream_edge(group: str):
+        M = np.zeros((len(domains["stream"]), len(domains[group])))
+        for i, sc in enumerate(domains["stream"]):
+            for j, gc in enumerate(domains[group]):
+                if sc.stream == "sp":
+                    # per-layer all-gather + reduce-scatter of activations
+                    M[i, j] = nl * 2 * _ring_ag_bytes(act, tp) / LINK_BW
+                    # SP only composes with sharded compute groups
+                    if gc.name.endswith(":rep"):
+                        M[i, j] = np.inf
+                else:
+                    M[i, j] = 0.0
+        pb.add_edge("stream", group, M)
+
+    stream_edge("attn")
+    stream_edge("ffn")
+    # embed/head connect to the stream once (not per layer)
+    M = np.zeros((len(domains["embed"]), len(domains["stream"])))
+    for i, ec in enumerate(domains["embed"]):
+        for j, sc in enumerate(domains["stream"]):
+            M[i, j] = _ring_ag_bytes(act, tp) / LINK_BW \
+                if sc.stream == "sp" else 0.0
+    pb.add_edge("embed", "stream", M)
+    M = np.zeros((len(domains["stream"]), len(domains["head"])))
+    for i, sc in enumerate(domains["stream"]):
+        for j, hc in enumerate(domains["head"]):
+            M[i, j] = _ring_ag_bytes(act, tp) / LINK_BW \
+                if sc.stream == "sp" else 0.0
+    pb.add_edge("stream", "head", M)
+
+    sol = pbqp.solve(pb, exact=exact)
+    chosen = {n: domains[n][sol.assignment[n]] for n in domains}
+
+    rules = MEGATRON_RULES
+    # batch divisibility: keep the largest ("pod","data") prefix whose
+    # product divides the global batch (B=1 long-context: replicate)
+    b_axes = []
+    prod = 1
+    for ax in ("pod", "data"):
+        if ax in mesh_shape and shape.global_batch % (
+                prod * mesh_shape[ax]) == 0:
+            b_axes.append(ax)
+            prod *= mesh_shape[ax]
+    rules = rules.with_(batch=tuple(b_axes) if b_axes else None)
+    if fsdp:
+        rules = rules.with_(layers=None)
+    updates = {}
+    for c in chosen.values():
+        updates.update(dict(c.updates))
+    if chosen["embed"].name == "embed:dmodel":
+        updates["d_model"] = None  # keep activations unsharded on d
+    rules = rules.with_(**updates)
+
+    report = {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": dict(mesh_shape),
+        "assignment": {n: c.name for n, c in chosen.items()},
+        "predicted_comm_s": sol.cost,
+        "optimal": sol.optimal,
+        "domains": {n: [c.name for c in domains[n]] for n in domains},
+    }
+    if return_solution:
+        return rules, report, sol
+    return rules, report
+
+
+def candidate_report(cfg, shape, mesh_shape) -> Dict:
+    _, report = select_rules(cfg, shape, mesh_shape)
+    return report

@@ -1,0 +1,93 @@
+"""Pallas TPU kernels for the performance hot-spots.
+
+Each kernel lives in its own subpackage with:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd general wrapper (padding, batching)
+  ref.py    — pure-jnp oracle used by the allclose tests
+
+``register_pallas_primitives`` plugs the convolution kernels into the
+paper's primitive registry as the ``pallas`` family; they are tagged
+``tpu-only`` so the CPU profiler skips them (the analytic TPU cost model
+prices them instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def register_pallas_primitives(add, _sup) -> None:
+    from ..core.scenario import Scenario
+    from . import conv_direct, conv_im2col, winograd_gemm
+    from .matmul import ops as mm_ops
+
+    def vmem_ok(scn: Scenario) -> bool:
+        # the direct kernel keeps the padded input strip in VMEM
+        hp = scn.h + 2 * scn.pad
+        wp = scn.w + 2 * scn.pad
+        return hp * wp * scn.c * 4 <= 8 * 2 ** 20
+
+    # ---- direct NHWC ----
+    def direct_prepare(scn, w, b):
+        return {"w": jnp.asarray(np.transpose(w, (2, 3, 1, 0)).copy()),
+                "b": jnp.asarray(b)}
+
+    def direct_make(scn):
+        def f(x, packed):  # x: HWC
+            return conv_direct.conv_direct(
+                x, packed["w"], packed["b"], stride=scn.stride, pad=scn.pad)
+        return f
+
+    base = _sup()
+    add("pallas_direct_hwc", "pallas", "HWC", "HWC",
+        lambda s: base(s) and vmem_ok(s), direct_prepare, direct_make,
+        tags=("tpu-only",))
+
+    # ---- im2col GEMM ----
+    def im2_prepare(scn, w, b):
+        return {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+
+    def im2_make(scn):
+        def f(x, packed):  # x: CHW
+            return conv_im2col.conv_im2col(
+                x, packed["w"], packed["b"], stride=scn.stride, pad=scn.pad)
+        return f
+
+    add("pallas_im2col_chw", "pallas", "CHW", "CHW", base,
+        im2_prepare, im2_make, tags=("tpu-only",))
+
+    # ---- winograd F(2,3)/F(4,3) ----
+    for m_ in (2, 4):
+        def wino_prepare(scn, w, b, m_=m_):
+            return {"u": winograd_gemm.prepare_kernel(w, m_),
+                    "b": jnp.asarray(b)}
+
+        def wino_make(scn, m_=m_):
+            def f(x, packed):  # x: CHW
+                return winograd_gemm.conv_winograd(
+                    x, packed["u"], packed["b"], m_=m_, k=scn.k,
+                    stride=scn.stride, pad=scn.pad)
+            return f
+
+        add(f"pallas_wino_f{m_}x3_chw", "pallas", "CHW", "CHW",
+            _sup(k_in=(3,), stride1=True), wino_prepare, wino_make,
+            tags=("tpu-only",))
+
+    # ---- pointwise (K=1) MXU GEMM ----
+    def pw_prepare(scn, w, b):
+        return {"w": jnp.asarray(w.reshape(scn.m, scn.c)),
+                "b": jnp.asarray(b)}
+
+    def pw_make(scn):
+        def f(x, packed):  # x: CHW
+            s = scn.stride
+            xs = x[:, ::s, ::s] if s > 1 else x
+            y = mm_ops.matmul(packed["w"], xs.reshape(scn.c, -1))
+            y = y.reshape(scn.m, scn.out_h, scn.out_w)
+            return y + packed["b"][:, None, None]
+        return f
+
+    add("pallas_pw_gemm_chw", "pallas", "CHW", "CHW", _sup(k_in=(1,)),
+        pw_prepare, pw_make, tags=("tpu-only",))

@@ -1,0 +1,29 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
+MXU-aligned block shapes) and validated on CPU via interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode: execute kernel bodies in Python on CPU."""
+    return jax.devices()[0].platform != "tpu"
+
+
+def pad_to(x, axis: int, multiple: int, value=0.0):
+    """Pad ``axis`` of x up to a multiple; returns (padded, orig_size)."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), n
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

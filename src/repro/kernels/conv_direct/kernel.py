@@ -1,0 +1,69 @@
+"""Direct NHWC convolution Pallas kernel.
+
+TPU adaptation of the direct-loop family: instead of a 6-deep scalar
+loop nest (CPU) the kernel keeps the input strip in VMEM and performs
+one MXU matmul per kernel tap: for each (i, j) in K x K the shifted
+(OH*OW, C) window is multiplied with the (C, bm) weight slice and
+accumulated in an f32 VMEM scratch.  Grid is over output-channel tiles
+(bm, MXU-lane aligned); the spatial extent of one image layer fits VMEM
+for DNN-typical layer sizes (checked by the registry's supports()).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import use_interpret
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
+                 oh: int, ow: int, c: int):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    span_h = (oh - 1) * stride + 1
+    span_w = (ow - 1) * stride + 1
+    xa = x_ref[...]  # whole strip lives in VMEM
+    for i in range(k):
+        for j in range(k):
+            win = jax.lax.slice(
+                xa, (i, j, 0), (i + span_h, j + span_w, c),
+                (stride, stride, 1))
+            acc_ref[...] += jnp.dot(
+                win.reshape(oh * ow, c), w_ref[i, j],
+                preferred_element_type=jnp.float32)
+    o_ref[...] = (acc_ref[...] + b_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype)
+
+
+def conv_direct_pallas(x, w, b, *, stride: int = 1, bm: int = 128,
+                       interpret=None):
+    """x: (Hp, Wp, C) pre-padded NHWC (N=1); w: (K, K, C, M), M % bm == 0.
+
+    Returns (OH*OW, M) — the ops wrapper reshapes to (OH, OW, M).
+    """
+    hp, wp, c = x.shape
+    k, _, _, m = w.shape
+    assert m % bm == 0
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+    if interpret is None:
+        interpret = use_interpret()
+
+    kern = functools.partial(_conv_kernel, k=k, stride=stride, oh=oh,
+                             ow=ow, c=c)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((hp, wp, c), lambda mi: (0, 0, 0)),
+            pl.BlockSpec((k, k, c, bm), lambda mi: (0, 0, 0, mi)),
+            pl.BlockSpec((1, bm), lambda mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((oh * ow, bm), lambda mi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((oh * ow, m), x.dtype),
+        scratch_shapes=[pltpu.VMEM((oh * ow, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b.reshape(1, m))

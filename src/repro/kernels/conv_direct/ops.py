@@ -1,0 +1,25 @@
+"""jit'd wrapper for the direct NHWC Pallas convolution."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to
+from .kernel import conv_direct_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "bm"))
+def conv_direct(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128):
+    """x: (H, W, C); w: (K, K, C, M); b: (M,) -> (OH, OW, M)."""
+    h, wd, c = x.shape
+    k, _, _, m = w.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (wd + 2 * pad - k) // stride + 1
+    bm_ = min(bm, max(8, m))
+    wp, _ = pad_to(w, 3, bm_)
+    bp, _ = pad_to(b, 0, bm_)
+    out = conv_direct_pallas(xp, wp, bp, stride=stride, bm=bm_)
+    return out[:, :m].reshape(oh, ow, m)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the direct NHWC convolution."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_direct_ref(x, w, b, *, stride: int = 1, pad: int = 0):
+    """x: (H, W, C); w: (K, K, C, M); b: (M,) -> (OH, OW, M)."""
+    out = lax.conv_general_dilated(
+        x[None], w, (stride, stride), [(pad, pad)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return out + b

@@ -1,0 +1,5 @@
+from .kernel import im2col_gemm_pallas
+from .ops import conv_im2col
+from .ref import conv_im2col_ref
+
+__all__ = ["conv_im2col", "im2col_gemm_pallas", "conv_im2col_ref"]

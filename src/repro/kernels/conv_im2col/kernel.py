@@ -1,0 +1,13 @@
+"""im2col convolution: Pallas GEMM with fused bias over the patch matrix.
+
+Patch extraction (the Toeplitz build) is bandwidth-bound gather work that
+XLA's fusion handles well; the O(M * CKK * OHOW) GEMM is the hot spot and
+runs on the MXU via the fused bias matmul kernel.  This mirrors the
+paper's im2 family where the GEMM call dominates.
+"""
+from __future__ import annotations
+
+from ..matmul.kernel import matmul_pallas
+
+# the kernel itself is the fused-bias GEMM; re-exported for clarity
+im2col_gemm_pallas = matmul_pallas

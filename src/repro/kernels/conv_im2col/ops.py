@@ -1,0 +1,41 @@
+"""jit'd im2col convolution with the Pallas GEMM core."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..common import pad_to
+from .kernel import im2col_gemm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "bm", "bn",
+                                             "bk"))
+def conv_im2col(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128,
+                bn: int = 128, bk: int = 128):
+    """x: (C, H, W); w: (M, C, K, K); b: (M,) -> (M, OH, OW)."""
+    c, h, wd = x.shape
+    m, _, k, _ = w.shape
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (wd + 2 * pad - k) // stride + 1
+    pt = lax.conv_general_dilated_patches(
+        x[None], (k, k), (stride, stride), [(pad, pad)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+    pmat = pt.reshape(c * k * k, oh * ow)
+    wmat = w.reshape(m, c * k * k)
+
+    mm, kk, nn = m, c * k * k, oh * ow
+    bm_ = min(bm, max(8, mm))
+    bn_ = min(bn, max(8, nn))
+    bk_ = min(bk, max(8, kk))
+    wp, _ = pad_to(wmat, 0, bm_)
+    wp, _ = pad_to(wp, 1, bk_)
+    pp, _ = pad_to(pmat, 0, bk_)
+    pp, _ = pad_to(pp, 1, bn_)
+    bp, _ = pad_to(b, 0, bn_)  # unused pad target; bias applies to M rows
+
+    out = im2col_gemm_pallas(wp, pp, None, bm=bm_, bn=bn_, bk=bk_)
+    out = out[:mm, :nn] + b[:, None]
+    return out.reshape(m, oh, ow)

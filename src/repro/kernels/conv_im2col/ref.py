@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the im2col convolution."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_im2col_ref(x, w, b, *, stride: int = 1, pad: int = 0):
+    out = lax.conv_general_dilated(
+        x[None], w, (stride, stride), [(pad, pad)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+    return out + b[:, None, None]

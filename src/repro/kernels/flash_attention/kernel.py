@@ -1,0 +1,125 @@
+"""Flash attention Pallas kernel (online softmax over KV blocks).
+
+TPU adaptation notes (vs the CUDA flash-attention the idea comes from):
+no warps/shared-memory banking — instead the KV loop is the innermost
+*sequential* grid dimension and the running (m, l, acc) statistics live
+in VMEM scratch that persists across grid steps.  Block shapes are
+MXU/VPU aligned (bq x d and bk x d tiles, d = head_dim).
+
+Supports:
+  * causal masking              (decoder LMs)
+  * sliding-window masking      (gemma2 local layers, window W)
+  * logit soft-capping          (gemma2: cap * tanh(logits / cap))
+  * GQA                         (kv-head = q-head // group, via index_map)
+
+Grid: (n_q_heads, Lq / bq, Lk / bk) — KV innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import use_interpret
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, lk_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = k_pos < lk_valid
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v_ref[0].astype(jnp.float32))
+        m_ref[...] = m_cur
+
+    # Skip fully-masked KV blocks (causal: block entirely in the future;
+    # window: block entirely before the window).  The conditions are
+    # traced scalars over program ids, so pl.when elides the compute.
+    if causal or window > 0:
+        run = ki * bk <= qi * bq + bq - 1 if causal else (ki >= 0)
+        if window > 0:
+            run = jnp.logical_and(run, qi * bq - window < (ki + 1) * bk)
+        pl.when(run)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, scale: float, causal: bool = False,
+                           window: int = 0, softcap: float = 0.0,
+                           bq: int = 128, bk: int = 128, lk_valid=None,
+                           interpret=None):
+    """q: (Hq, Lq, D); k, v: (Hkv, Lk, D).  Lq % bq == Lk % bk == 0.
+
+    ``lk_valid``: true KV length before padding (positions beyond it are
+    masked out).  GQA is expressed in the BlockSpec index map (kv head =
+    q head // group) so KV tiles are fetched once per group, not
+    replicated.
+    """
+    hq, lq, d = q.shape
+    hkv, lk, _ = k.shape
+    assert hq % hkv == 0 and lq % bq == 0 and lk % bk == 0
+    group = hq // hkv
+    if interpret is None:
+        interpret = use_interpret()
+    if lk_valid is None:
+        lk_valid = lk
+
+    grid = (hq, lq // bq, lk // bk)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, lk_valid=lk_valid)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

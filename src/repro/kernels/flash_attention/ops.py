@@ -1,0 +1,39 @@
+"""jit'd wrapper: batching, GQA plumbing, seq padding for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..common import pad_to
+from .kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "softcap",
+                                    "bq", "bk", "scale"))
+def flash_attention(q, k, v, *, scale=None, causal: bool = False,
+                    window: int = 0, softcap: float = 0.0,
+                    bq: int = 128, bk: int = 128):
+    """Multi-head attention via the Pallas flash kernel.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+    Handles GQA (Hq % Hkv == 0) and arbitrary Lq/Lk via padding; padded
+    KV positions are masked inside the kernel via ``lk_valid``.
+    """
+    b, hq, lq, d = q.shape
+    scale = float(scale if scale is not None else d ** -0.5)
+    lk = k.shape[2]
+    bq_ = min(bq, max(8, lq))
+    bk_ = min(bk, max(8, lk))
+    qp, _ = pad_to(q, 2, bq_)
+    kp, _ = pad_to(k, 2, bk_)
+    vp, _ = pad_to(v, 2, bk_)
+
+    def one(qb, kb, vb):
+        return flash_attention_pallas(
+            qb, kb, vb, scale=scale, causal=causal, window=window,
+            softcap=softcap, bq=bq_, bk=bk_, lk_valid=lk)
+
+    out = jax.vmap(one)(qp, kp, vp)
+    return out[:, :, :lq, :]

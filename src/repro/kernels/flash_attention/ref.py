@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (dense softmax attention)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, scale=None, causal: bool = False,
+                  window: int = 0, softcap: float = 0.0):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D)."""
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = np.arange(lq)[:, None]
+    kpos = np.arange(lk)[None, :]
+    mask = np.ones((lq, lk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(jnp.asarray(mask), s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracles for the layout transforms."""
+import jax.numpy as jnp
+
+
+def chw_to_hwc_ref(x):
+    return jnp.transpose(x, (1, 2, 0))
+
+
+def hwc_to_chw_ref(x):
+    return jnp.transpose(x, (2, 0, 1))

@@ -1,0 +1,86 @@
+"""MXU-tiled GEMM Pallas kernel (with optional fused bias + ReLU).
+
+Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) grid dimension
+so the f32 VMEM accumulator carries across K steps.  Block shapes default
+to 128x128x128: MXU-aligned (the MXU is a 128x128 systolic array) and
+small enough that x-block + y-block + acc fit comfortably in the ~16 MB
+of VMEM (128*128*4 B * 3 = 192 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import use_interpret
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, fuse_relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        acc = acc_ref[...]
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _mm_bias_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *, fuse_relu: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul_pallas(x, y, bias=None, *, bm: int = 128, bn: int = 128,
+                  bk: int = 128, fuse_relu: bool = False,
+                  out_dtype=None, interpret=None):
+    """``x @ y (+ bias)`` with all dims REQUIRED to be block multiples
+    (use ops.matmul for the padded general entry point)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    if interpret is None:
+        interpret = use_interpret()
+    out_dtype = out_dtype or x.dtype
+
+    grid = (m // bm, n // bn, k // bk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = (x, y)
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args = (x, y, bias.reshape(1, n))
+        kern = functools.partial(_mm_bias_kernel, fuse_relu=fuse_relu)
+    else:
+        kern = functools.partial(_mm_kernel, fuse_relu=fuse_relu)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,31 @@
+"""jit'd wrapper around the Pallas GEMM: pads to block multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to
+from .kernel import matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "fuse_relu"))
+def matmul(x, y, bias=None, *, bm: int = 128, bn: int = 128, bk: int = 128,
+           fuse_relu: bool = False):
+    """General ``x @ y (+ bias)`` via the Pallas kernel, any shapes."""
+    m, k = x.shape
+    _, n = y.shape
+    bm_ = min(bm, max(8, m))
+    bn_ = min(bn, max(8, n))
+    bk_ = min(bk, max(8, k))
+    xp, _ = pad_to(x, 0, bm_)
+    xp, _ = pad_to(xp, 1, bk_)
+    yp, _ = pad_to(y, 0, bk_)
+    yp, _ = pad_to(yp, 1, bn_)
+    bp = None
+    if bias is not None:
+        bp, _ = pad_to(bias, 0, bn_)
+    out = matmul_pallas(xp, yp, bp, bm=bm_, bn=bn_, bk=bk_,
+                        fuse_relu=fuse_relu)
+    return out[:m, :n]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the Pallas GEMM."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, bias=None, fuse_relu: bool = False):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if fuse_relu:
+        out = jnp.maximum(out, 0.0)
+    return out.astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Winograd batched GEMM and full conv."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def bgemm_ref(u, v):
+    """u: (P, M, C), v: (P, C, N) -> (P, M, N)."""
+    return jnp.einsum("pmc,pcn->pmn", u.astype(jnp.float32),
+                      v.astype(jnp.float32)).astype(u.dtype)
+
+
+def conv_ref(x, w, b, *, pad: int = 1):
+    """Direct conv oracle for the full Winograd path.  x: (C, H, W),
+    w: (M, C, K, K)."""
+    out = lax.conv_general_dilated(
+        x[None], w, (1, 1), [(pad, pad)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+    return out + b[:, None, None]

@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  The 512 placeholder host devices exist only in
+this process — smoke tests and benches see 1 device.
+
+Per cell:
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod)
+  2. solve the sharding PBQP (repro.core.sharding_select) -> Rules
+  3. jit(step).lower(**input_specs(arch)).compile()
+  4. record memory_analysis / cost_analysis / per-opcode collective
+     bytes parsed from the compiled per-device HLO
+  5. repeat at scan-unroll=2: cost_analysis counts a while-loop body
+     ONCE regardless of trip count, so quantities are reconstructed as
+       total = outside + n_super * body,   body = Q(u2) - Q(u1)
+     (clamped at 0; exact for collectives, near-exact for flops/bytes
+     modulo fusion differences — both raw measurements are recorded).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--jobs 3] [--multi-pod both]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_TYPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|s16|s32|s64|u8|u16|u32|u64|c64|c128)"
+    r"\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Sum operand bytes of every collective op (per-device shapes)."""
+    sizes = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # type is everything up to the opcode token
+        op_m = re.search(r"([a-z][\w\-]*)\(", rhs)
+        if not op_m:
+            continue
+        type_str = rhs[:op_m.start()]
+        sizes[name] = _type_bytes(type_str)
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op_m = re.search(r"([a-z][\w\-]*)\(", rhs)
+        if not op_m:
+            continue
+        op = op_m.group(1)
+        base = re.sub(r"\.\d+$", "", op)
+        # match e.g. all-reduce, all-gather-start, all-reduce-scatter? no:
+        core = None
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start":
+                core = c
+                break
+        if core is None:
+            continue
+        args = re.findall(r"%([\w\.\-]+)", rhs[op_m.end():])
+        b = sum(sizes.get(a, 0) for a in args)
+        out[core]["count"] += 1
+        out[core]["bytes"] += b
+    return out
+
+
+def _opt_state_specs(opt_kind: str, pspecs, psds):
+    """Specs for the optimizer state, mirroring the optimizer's own
+    structure decisions (adafactor factored() rule included)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    if opt_kind == "adamw":
+        return {"m": pspecs, "v": pspecs, "count": P()}
+
+    def fac(spec, sds):
+        parts = list(spec) + [None] * (len(sds.shape) - len(list(spec)))
+        shp = sds.shape
+        if len(shp) >= 2 and shp[-1] >= 128 and shp[-2] >= 128:
+            return {"r": P(*parts[:-1]), "c": P(*(parts[:-2] + parts[-1:]))}
+        return {"v": P(*parts)}
+
+    isleaf = lambda s: isinstance(s, type(P()))
+    return {"f": jax.tree.map(fac, pspecs, psds, is_leaf=isleaf),
+            "count": P()}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_mode: str = "pbqp", unroll: int = 1,
+             donate: bool = True, extra_rules=None, variant=None):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ..configs import SHAPES, get_config
+    from ..core.sharding_select import select_rules
+    from ..models import (
+        MEGATRON_RULES, ModelRuntime, ShardingPlan, decode_step, loss_fn,
+        param_count, active_param_count,
+    )
+    from ..models.model import param_defs
+    from ..models.sharding import pspecs_from_defs, shapestructs_from_defs
+    from ..optim.optimizers import for_config
+    from .inputs import batch_axes, input_specs
+    from .mesh import make_production_mesh, mesh_shape_dict
+
+    cfg = get_config(arch)
+    if variant and "kv_heads_pad" in variant:
+        # Megatron-style KV-head replication: pad GQA kv heads up to the
+        # TP width so the KV projections shard instead of replicating
+        # (physically each rank owns one duplicated head; §Perf H7)
+        import dataclasses as _dc
+        variant = dict(variant)
+        cfg = _dc.replace(cfg, n_kv_heads=int(variant.pop("kv_heads_pad")))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mshape = mesh_shape_dict(mesh)
+    n_dev = int(mesh.devices.size)
+
+    report = {}
+    if rules_mode == "pbqp":
+        rules, report = select_rules(cfg, shape, mshape)
+    elif rules_mode == "megatron":
+        rules = MEGATRON_RULES
+    else:
+        raise ValueError(rules_mode)
+    if extra_rules:
+        rules = rules.with_(**extra_rules)
+    rules = rules.restrict(mesh.axis_names)
+    plan = ShardingPlan(mesh=mesh, rules=rules)
+
+    # SSD chunking: python-unrolled for the dry-run so cost_analysis
+    # sees every chunk, bounded at <= 32 HLO copies PER SUPERBLOCK
+    # (jamba's 7-mamba superblock would otherwise explode compile time)
+    from ..models.blocks import layer_kinds
+    n_mamba = sum(1 for k in layer_kinds(cfg) if k["mixer"] == "mamba")
+    t_eff = shape.seq_len if shape.kind != "decode" else 1
+    chunk = max(256, t_eff * max(n_mamba, 1) // 32) if t_eff > 1 else 256
+    rt_kw = dict(attn_impl="xla", remat=(shape.kind == "train"),
+                 unroll=unroll, chunk=chunk, unroll_chunks=(t_eff > 1))
+    if variant:
+        rt_kw.update(variant)
+    rt = ModelRuntime(**rt_kw)
+
+    defs = param_defs(cfg)
+    pspecs = pspecs_from_defs(defs, rules)
+    psds = shapestructs_from_defs(defs, jnp.bfloat16)
+    psds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        psds, pspecs)
+
+    in_specs, in_axes = input_specs(cfg, shape)
+    in_pspecs = batch_axes(in_axes, rules)
+    in_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        in_specs, in_pspecs)
+
+    if shape.kind == "train":
+        opt = for_config(cfg)
+        opt_kind = "adamw" if param_count(cfg) < 2e11 else "adafactor"
+        ostate_shape = jax.eval_shape(opt.init, psds)
+        ospecs = _opt_state_specs(opt_kind, pspecs, psds)
+        osds = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            ostate_shape, ospecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch, plan, rt))(params)
+            new_p, new_s = opt.update(grads, opt_state, params)
+            return loss, new_p, new_s
+
+        args = (psds, osds, in_sds)
+        donate_argnums = (0, 1) if donate else ()
+    elif shape.kind == "prefill":
+        from ..models import prefill as prefill_fn
+
+        def step(params, batch):
+            return prefill_fn(cfg, params, batch, plan, rt)
+
+        args = (psds, in_sds)
+        donate_argnums = ()
+    else:  # decode
+        def step(params, cache, tokens, cross_kv=None):
+            pos = shape.seq_len - 1
+            return decode_step(cfg, params, cache, tokens, pos, plan, rt,
+                               cross_kv=cross_kv)
+
+        extra = ()
+        if cfg.family == "encdec":
+            extra = (in_sds["cross_kv"],)
+        args = (psds, in_sds["cache"], in_sds["tokens"]) + extra
+        donate_argnums = (1,) if donate else ()
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate_argnums).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+    colls = parse_collectives(txt)
+
+    n_tok = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                  else 1)
+    n_active = active_param_count(cfg)
+    mf = (6 if shape.kind == "train" else 2) * n_active * n_tok
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules_mode": rules_mode, "unroll": unroll,
+        "variant": dict(variant) if variant else {},
+        "n_devices": n_dev,
+        "status": "ok",
+        "flops_per_device": float(ca.get("flops", -1)),
+        "bytes_per_device": float(ca.get("bytes accessed", -1)),
+        "collectives": colls,
+        "collective_bytes_per_device": int(
+            sum(v["bytes"] for v in colls.values())),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "model_flops": float(mf),
+        "params_total": param_count(cfg),
+        "params_active": n_active,
+        "n_super": _n_super(cfg),
+        "sharding_report": report,
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+
+
+def _n_super(cfg):
+    from ..models.blocks import n_super
+    return n_super(cfg)
+
+
+def _combine_unrolls(r1, r2):
+    """Reconstruct whole-program totals from unroll=1/2 measurements."""
+    n = r1["n_super"]
+    out = dict(r1)
+
+    def derive(q1, q2):
+        body = max(q2 - q1, 0.0)
+        outside = max(q1 - body, 0.0)
+        return outside + n * body
+
+    out["flops_total"] = derive(r1["flops_per_device"],
+                                r2["flops_per_device"])
+    out["bytes_total"] = derive(r1["bytes_per_device"],
+                                r2["bytes_per_device"])
+    colls = {}
+    tot = 0
+    for c in r1["collectives"]:
+        b1 = r1["collectives"][c]["bytes"]
+        b2 = r2["collectives"][c]["bytes"]
+        n1 = r1["collectives"][c]["count"]
+        n2 = r2["collectives"][c]["count"]
+        colls[c] = {"bytes": derive(b1, b2),
+                    "count": derive(n1, n2)}
+        tot += colls[c]["bytes"]
+    out["collectives_total"] = colls
+    out["collective_bytes_total"] = tot
+    out["raw_unroll1"] = {k: r1[k] for k in
+                          ("flops_per_device", "bytes_per_device",
+                           "collective_bytes_per_device")}
+    out["raw_unroll2"] = {k: r2[k] for k in
+                          ("flops_per_device", "bytes_per_device",
+                           "collective_bytes_per_device")}
+    return out
+
+
+def run_and_save(arch, shape_name, multi_pod, rules_mode="pbqp",
+                 out_dir=ARTIFACT_DIR, extra_rules=None, tag="",
+                 variant=None):
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    if rules_mode != "pbqp":
+        name += f"__{rules_mode}"
+    if tag:
+        name += f"__{tag}"
+    path = out_dir / f"{name}.json"
+    try:
+        r1 = run_cell(arch, shape_name, multi_pod=multi_pod,
+                      rules_mode=rules_mode, unroll=1,
+                      extra_rules=extra_rules, variant=variant)
+        r2 = run_cell(arch, shape_name, multi_pod=multi_pod,
+                      rules_mode=rules_mode, unroll=2,
+                      extra_rules=extra_rules, variant=variant)
+        rec = _combine_unrolls(r1, r2)
+    except Exception as e:  # record failures as artifacts too
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "rules_mode": rules_mode, "status": "error",
+               "error": repr(e), "traceback": traceback.format_exc()}
+    path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="pbqp",
+                    choices=["pbqp", "megatron"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix for variant runs")
+    ap.add_argument("--variant", default="",
+                    help="comma list of ModelRuntime overrides, e.g. "
+                         "attn_impl=xla_chunked,remat_policy=dots")
+    args = ap.parse_args()
+    variant = {}
+    for kv in filter(None, args.variant.split(",")):
+        k, v = kv.split("=")
+        variant[k] = v == "True" if v in ("True", "False") else v
+
+    if args.all:
+        # in-process loop (subprocess fan-out is in tools/run_dryruns.py)
+        from ..configs import cells
+        for arch, shape_name, skip in cells():
+            for mp in (False, True):
+                if skip:
+                    continue
+                rec = run_and_save(arch, shape_name, mp, args.rules,
+                                   args.out)
+                print(f"{arch}/{shape_name}/{rec['mesh']}: "
+                      f"{rec['status']}", flush=True)
+        return
+
+    rec = run_and_save(args.arch, args.shape, args.multi_pod, args.rules,
+                       args.out, tag=args.tag, variant=variant or None)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=2))
+    if rec["status"] != "ok":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns (specs, logical_axes): the same
+pattern as the smoke tests' real batches but weight-free, shardable and
+allocation-free — consumed by jit(...).lower(**specs) in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import init_cache
+
+__all__ = ["input_specs", "batch_axes"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (specs, axes): pytree of ShapeDtypeStruct + matching
+    logical-axis tuples for sharding resolution."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        t_text = t
+        specs: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            t_text = t - cfg.n_patches
+            specs["patches"] = _sds((b, cfg.n_patches, cfg.d_model), dtype)
+            axes["patches"] = ("batch", "seq", "d_model")
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), dtype)
+            axes["frames"] = ("batch", "enc_seq", "d_model")
+        specs["tokens"] = _sds((b, t_text), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, t_text), jnp.int32)
+            axes["labels"] = ("batch", "seq")
+        return specs, axes
+
+    # decode: one new token against a seq_len KV cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, t, dtype))
+
+    def cache_axes(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key in ("k", "v"):      # (L, B, S, Hkv, hd)
+            return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        if key == "ssm":           # (L, B, H, N, P)
+            return ("layers", "batch", "ssm_heads", None, None)
+        return ("layers", "batch", None, None)  # conv state
+
+    cache_ax = jax.tree_util.tree_map_with_path(cache_axes, cache)
+    specs = {"cache": cache, "tokens": _sds((b, 1), jnp.int32)}
+    axes = {"cache": cache_ax, "tokens": ("batch", "seq")}
+    if cfg.family == "encdec":
+        specs["cross_kv"] = _sds((b, cfg.enc_seq, cfg.d_model), dtype)
+        axes["cross_kv"] = ("batch", "enc_seq", "d_model")
+    return specs, axes
+
+
+def batch_axes(axes_tree, rules):
+    """Resolve logical axes -> PartitionSpecs for the input pytree."""
+    return jax.tree.map(
+        lambda ax: rules.spec(ax),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state — critical because the dry-run
+must set XLA_FLAGS before jax initialises.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh", "mesh_shape_dict"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip single pod; 2x16x16 = 512-chip two-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (fake) devices the test process has."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_shape_dict(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,16 @@
+"""LM-family model zoo (pure JAX, scan-over-superblocks)."""
+from .model import (
+    ModelRuntime, decode_step, encode, forward_train, init_cache,
+    init_params, loss_fn, param_count, active_param_count, param_defs,
+    param_pspecs, param_shapestructs, prefill,
+)
+from .sharding import (
+    MEGATRON_RULES, REPLICATED_RULES, Rules, ShardingPlan,
+)
+
+__all__ = [
+    "ModelRuntime", "decode_step", "encode", "forward_train", "init_cache",
+    "init_params", "loss_fn", "param_count", "active_param_count",
+    "param_defs", "param_pspecs", "param_shapestructs", "prefill",
+    "Rules", "ShardingPlan", "MEGATRON_RULES", "REPLICATED_RULES",
+]

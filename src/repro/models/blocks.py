@@ -1,0 +1,190 @@
+"""Per-family superblock definitions.
+
+Every architecture is expressed as a *superblock* of ``period`` layers
+repeated ``n_layers / period`` times via ``lax.scan`` over stacked
+parameters — this keeps the HLO O(1) in depth (compile-time critical for
+the 61-layer/384-expert dry-runs) and is what the roofline's
+unroll-differencing accounting relies on.
+
+Layer kinds within a superblock:
+  dense:   [attn+ffn]                       (gemma2: [local, global])
+  moe:     [attn+moe_ffn]
+  hybrid:  jamba 8-block period, attention at index 4, MoE every 2nd
+  ssm:     [mamba]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import attention, attention_defs, ffn, ffn_defs, rms_norm
+from .mamba import mamba_block, mamba_defs, mamba_dims
+from .moe import moe_defs, moe_ffn
+from .sharding import PDef, ShardingPlan
+
+
+def layer_kinds(cfg) -> List[Dict[str, Any]]:
+    """The layer pattern of one superblock; len == period."""
+    fam = cfg.family
+    if fam == "ssm":
+        return [{"mixer": "mamba", "ffn": "none"}]
+    if fam == "hybrid":
+        out = []
+        for i in range(cfg.attn_every):
+            out.append({
+                "mixer": "attn" if i == cfg.attn_every // 2 else "mamba",
+                "ffn": "moe" if (i % cfg.moe_every == 1) else "dense",
+                "window": 0,
+            })
+        return out
+    if fam == "moe":
+        return [{"mixer": "attn", "ffn": "moe", "window": 0}
+                for _ in range(cfg.moe_every)]
+    # dense / encdec / vlm decoders
+    period = max(1, cfg.local_global_period)
+    out = []
+    for i in range(period):
+        local = cfg.local_global_period > 0 and i % 2 == 0
+        out.append({"mixer": "attn", "ffn": "dense",
+                    "window": cfg.sliding_window if local else 0})
+    return out
+
+
+def n_super(cfg) -> int:
+    period = len(layer_kinds(cfg))
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ----------------------------------------------------------------------
+def block_defs(cfg) -> Dict[str, Dict[str, PDef]]:
+    """PDefs for ONE superblock (unstacked)."""
+    d = cfg.d_model
+    defs: Dict[str, Dict[str, PDef]] = {}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        b: Dict[str, Any] = {"norm1": PDef((d,), ("d_model",), init="ones")}
+        if kind["mixer"] == "attn":
+            b["attn"] = attention_defs(cfg)
+        else:
+            b["mamba"] = mamba_defs(cfg)
+        if cfg.family == "encdec":
+            b["norm_x"] = PDef((d,), ("d_model",), init="ones")
+            b["cross"] = attention_defs(cfg)
+        if kind["ffn"] != "none" and not cfg.parallel_block:
+            b["norm2"] = PDef((d,), ("d_model",), init="ones")
+        if kind["ffn"] == "dense":
+            b["ffn"] = ffn_defs(cfg)
+        elif kind["ffn"] == "moe":
+            b["moe"] = moe_defs(cfg)
+        if cfg.post_norms:
+            b["post_norm1"] = PDef((d,), ("d_model",), init="ones")
+            if kind["ffn"] != "none":
+                b["post_norm2"] = PDef((d,), ("d_model",), init="ones")
+        defs[f"layer{i}"] = b
+    return defs
+
+
+def stack_defs(defs, n: int):
+    """Add the scanned 'layers' leading axis to every PDef."""
+    return jax.tree.map(
+        lambda p: PDef((n,) + p.shape, ("layers",) + p.axes, p.init,
+                       p.scale),
+        defs, is_leaf=lambda x: isinstance(x, PDef))
+
+
+# ----------------------------------------------------------------------
+def empty_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, Any]:
+    """Per-superblock decode cache (unstacked shapes; stacked by model)."""
+    cache: Dict[str, Any] = {}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        if kind["mixer"] == "attn":
+            hd = cfg.resolved_head_dim
+            # NOTE: sliding-window layers also keep a full-length linear
+            # cache (window masking handles semantics); a rotary buffer
+            # is a memory optimisation left to the §Perf hillclimb.
+            cache[f"layer{i}"] = {
+                "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            }
+        else:
+            d_inner, h, p_, n = mamba_dims(cfg)
+            conv_dim = d_inner + 2 * n
+            cache[f"layer{i}"] = {
+                "ssm": jnp.zeros((batch, h, n, p_), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim),
+                                  dtype),
+            }
+    return cache
+
+
+def apply_superblock(cfg, params, h, *, positions, plan: ShardingPlan,
+                     cache=None, cache_index=None, decode: bool = False,
+                     attn_impl: str = "xla", chunk: int = 256,
+                     unroll_chunks: bool = False, moe_impl: str = "gather",
+                     cross_kv=None):
+    """Run one superblock.  Returns (h, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        p = params[f"layer{i}"]
+        c = cache.get(f"layer{i}") if cache else None
+        resid = h
+        x = rms_norm(h, p["norm1"], cfg.norm_eps)
+        if kind["mixer"] == "attn":
+            window = kind.get("window", 0)
+            kv = (c["k"], c["v"]) if c else None
+            attn_out, nkv = attention(
+                cfg, p["attn"], x, positions=positions, plan=plan,
+                causal=True, window=window, kv_cache=kv,
+                cache_index=cache_index, attn_impl=attn_impl)
+            if nkv is not None:
+                new_cache[f"layer{i}"] = {"k": nkv[0], "v": nkv[1]}
+            mix_out = attn_out
+        else:
+            mix_out, (nssm, nconv) = mamba_block(
+                cfg, p["mamba"], x, plan, chunk=chunk,
+                unroll_chunks=unroll_chunks,
+                ssm_state=c["ssm"] if (c and decode) else None,
+                conv_state=c["conv"] if (c and decode) else None,
+                decode=decode)
+            if c is not None:
+                new_cache[f"layer{i}"] = {
+                    "ssm": nssm if nssm is not None else c["ssm"],
+                    "conv": nconv if nconv is not None else c["conv"],
+                }
+        if cfg.post_norms:
+            mix_out = rms_norm(mix_out, p["post_norm1"], cfg.norm_eps)
+
+        if cfg.family == "encdec" and cross_kv is not None:
+            h = resid + mix_out
+            resid = h
+            x = rms_norm(h, p["norm_x"], cfg.norm_eps)
+            mix_out, _ = attention(cfg, p["cross"], x, positions=positions,
+                                   plan=plan, causal=False,
+                                   xk=cross_kv, attn_impl="xla")
+
+        if cfg.parallel_block and kind["ffn"] == "dense":
+            ff_out = ffn(p["ffn"], x, plan)
+            h = resid + mix_out + ff_out
+            continue
+
+        h = resid + mix_out
+        if kind["ffn"] == "none":
+            continue
+        resid = h
+        x = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if kind["ffn"] == "dense":
+            ff_out = ffn(p["ffn"], x, plan)
+        elif (moe_impl == "alltoall" and plan.mesh is not None
+              and "model" in plan.mesh.axis_names
+              and cfg.n_experts % plan.mesh.shape["model"] == 0
+              and x.shape[1] % plan.mesh.shape["model"] == 0):
+            from .moe import moe_ffn_alltoall
+            ff_out = moe_ffn_alltoall(cfg, p["moe"], x, plan)
+        else:
+            ff_out = moe_ffn(cfg, p["moe"], x, plan)
+        if cfg.post_norms:
+            ff_out = rms_norm(ff_out, p["post_norm2"], cfg.norm_eps)
+        h = resid + ff_out
+    return h, (new_cache if cache is not None else None)

@@ -1,0 +1,223 @@
+"""Shared model components: norms, rotary embeddings, GQA attention
+(train/prefill/decode paths, sliding window, softcap, cross-attention).
+
+Attention is itself a *primitive choice* at this level: ``attn_impl``
+selects between the XLA einsum path and the Pallas flash kernel — the
+LM-side analogue of the paper's per-layer primitive selection (the
+sharding/impl PBQP in repro/core/sharding_select.py prices both).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import PDef, ShardingPlan
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, D even); positions: (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+def attention_defs(cfg, d_model: Optional[int] = None) -> Dict[str, PDef]:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": PDef((d, cfg.n_heads, hd), ("d_model", "heads", "head_dim")),
+        "wk": PDef((d, cfg.n_kv_heads, hd),
+                   ("d_model", "kv_heads", "head_dim")),
+        "wv": PDef((d, cfg.n_kv_heads, hd),
+                   ("d_model", "kv_heads", "head_dim")),
+        "wo": PDef((cfg.n_heads, hd, d), ("heads", "head_dim", "d_model")),
+    }
+
+
+def _mask(lq, lk, *, causal: bool, window: int, q_offset=0):
+    qpos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 1)
+    m = jnp.ones((lq, lk), bool)
+    if causal:
+        m = jnp.logical_and(m, qpos >= kpos)
+    if window > 0:
+        m = jnp.logical_and(m, qpos - kpos < window)
+    return m
+
+
+def dot_attention(q, k, v, *, scale, causal, window, softcap, q_offset=0,
+                  kv_valid=None):
+    """q: (B, Tq, H, D); k, v: (B, Tk, Hkv, D) — XLA einsum path."""
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, tq, hkv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    m = _mask(tq, tk, causal=causal, window=window, q_offset=q_offset)
+    if kv_valid is not None:
+        m = jnp.logical_and(
+            m, (jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+                < kv_valid))
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, tq, h, d).astype(q.dtype)
+
+
+def chunked_causal_attention(q, k, v, *, scale, softcap, chunk: int = 0):
+    """Causal attention computing only the lower-triangular chunk pairs.
+
+    The XLA-path analogue of flash attention's fully-masked-block skip:
+    query chunk i attends to KV [0, (i+1)*chunk) only, so score FLOPs
+    drop from T^2 to T^2/2 (+ diagonal overhead) — visible directly in
+    the dry-run's cost_analysis (§Perf hillclimb, hypothesis H1).
+    """
+    b, t, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    if chunk <= 0:
+        # 4 chunks: 62.5% of dense score FLOPs, and few enough chunk
+        # boundaries that backward-pass dk/dv grad-psums stay cheap
+        # (§Perf H2 iteration 2: 8 chunks won on FLOPs but lost on
+        # collectives)
+        chunk = max(512, t // 4)
+    nc = max(t // chunk, 1)
+    chunk = t // nc
+    outs = []
+    for i in range(nc):
+        qi = q[:, i * chunk:(i + 1) * chunk]
+        kv_len = (i + 1) * chunk
+        ki = k[:, :kv_len]
+        vi = v[:, :kv_len]
+        qg = qi.reshape(b, chunk, hkv, g, d)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = i * chunk + jax.lax.broadcasted_iota(
+            jnp.int32, (chunk, kv_len), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, kv_len), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", pr, vi.astype(jnp.float32))
+        outs.append(o.reshape(b, chunk, h, d).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(cfg, p, x, *, positions, plan: ShardingPlan,
+              causal: bool = True, window: int = 0,
+              kv_cache: Optional[Tuple] = None,
+              cache_index=None,
+              xk: Optional[jax.Array] = None,
+              attn_impl: str = "xla"):
+    """Full attention layer: projections + rope + attention + out proj.
+
+    kv_cache: (k_cache, v_cache) of (B, S, Hkv, D); with ``cache_index``
+    given, the new k/v are written at that position (decode) and
+    attention runs against the cache.  ``xk``: cross-attention source
+    (whisper decoder).  Returns (out, new_cache).
+    """
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    src = x if xk is None else xk
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if xk is None:  # rope only for self-attention
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cache_index is None else
+                 cache_index[..., None], cfg.rope_theta)
+    q = plan.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = plan.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = plan.constrain(v, "batch", "seq", "kv_heads", "head_dim")
+
+    new_cache = None
+    kv_valid = None
+    q_offset = 0
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        if cache_index is not None:
+            # decode: write new kv at cache_index (scalar per batch)
+            idx = cache_index.reshape(-1)[0]
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, idx, axis=1)
+            k, v = ck, cv
+            kv_valid = idx + 1
+            q_offset = idx
+            causal = False  # masking handled via kv_valid
+            new_cache = (ck, cv)
+        else:
+            # prefill: the freshly-computed prompt k/v ARE the cache
+            new_cache = (k, v)
+
+    if attn_impl == "flash" and cache_index is None:
+        from ..kernels.flash_attention import flash_attention
+        o = flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), scale=scale, causal=causal,
+            window=window, softcap=cfg.attn_softcap)
+        o = jnp.swapaxes(o, 1, 2)
+    elif (attn_impl == "xla_chunked" and cache_index is None and causal
+          and window == 0 and xk is None and q.shape[1] >= 1024):
+        o = chunked_causal_attention(q, k, v, scale=scale,
+                                     softcap=cfg.attn_softcap)
+    else:
+        o = dot_attention(q, k, v, scale=scale, causal=causal,
+                          window=window, softcap=cfg.attn_softcap,
+                          q_offset=q_offset, kv_valid=kv_valid)
+    o = plan.constrain(o, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    return plan.constrain(out, "batch", "seq", "d_model"), new_cache
+
+
+# ----------------------------------------------------------------------
+def ffn_defs(cfg, d_model: Optional[int] = None, gated: bool = True):
+    d = d_model or cfg.d_model
+    f = cfg.d_ff
+    defs = {
+        "w1": PDef((d, f), ("d_model", "d_ff")),
+        "w2": PDef((f, d), ("d_ff", "d_model")),
+    }
+    if gated:
+        defs["w3"] = PDef((d, f), ("d_model", "d_ff"))
+    return defs
+
+
+def ffn(p, x, plan: ShardingPlan, act=jax.nn.silu):
+    h = jnp.einsum("btd,df->btf", x, p["w1"])
+    if "w3" in p:
+        h = act(h) * jnp.einsum("btd,df->btf", x, p["w3"])
+    else:
+        h = act(h)
+    h = plan.constrain(h, "batch", "seq", "d_ff")
+    out = jnp.einsum("btf,fd->btd", h, p["w2"])
+    return plan.constrain(out, "batch", "seq", "d_model")

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block, chunked formulation.
+
+The SSD recurrence per head h (scalar decay a_t = exp(A * dt_t)):
+
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t         (N x P state)
+    y_t = C_t . S_t + D * x_t
+
+computed chunk-parallel (arXiv 2405.21060 §6): within a chunk of Q
+tokens the output is an attention-like (Q x Q) masked matmul
+("duality"); across chunks a short scan carries the (H, N, P) state.
+The chunk loop is a ``lax.scan`` for training and a Python loop
+(``unroll_chunks=True``) for the dry-run so the HLO exposes every
+chunk's FLOPs to cost_analysis.
+
+Decode is the O(1) recurrence on a carried state — this is why the SSM
+archs run the long_500k shape that full attention cannot.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import PDef, ShardingPlan
+
+
+def mamba_dims(cfg) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    return d_inner, heads, cfg.ssm_headdim, cfg.ssm_state
+
+
+def mamba_defs(cfg) -> Dict[str, PDef]:
+    d = cfg.d_model
+    d_inner, h, p_, n = mamba_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        # packed projection: [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": PDef((d, 2 * d_inner + 2 * n + h), ("d_model", "ssm_heads")),
+        "conv_w": PDef((cfg.ssm_conv, conv_dim), (None, "ssm_heads")),
+        "conv_b": PDef((conv_dim,), ("ssm_heads",), init="zeros"),
+        "a_log": PDef((h,), ("ssm_heads",), init="ones"),
+        "d_skip": PDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": PDef((h,), ("ssm_heads",), init="zeros"),
+        "norm_w": PDef((d_inner,), ("ssm_heads",), init="ones"),
+        "out_proj": PDef((d_inner, d), ("ssm_heads", "d_model")),
+    }
+
+
+def _split(cfg, proj):
+    d_inner, h, p_, n = mamba_dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, state=None):
+    """Depthwise causal conv over time.  xbc: (B, T, C); w: (K, C).
+
+    With ``state`` (B, K-1, C) given (decode), returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, xbc], axis=1)  # (B, K-1+T, C)
+        new_state = window[:, -(k - 1):, :]
+        y = sum(window[:, i:i + xbc.shape[1], :] * w[i]
+                for i in range(k))
+        return jax.nn.silu(y + b), new_state
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(y + b), None
+
+
+def _gated_rmsnorm(y, z, w, eps=1e-5):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(
+        y.dtype) * w
+
+
+def ssd_chunked(xh, dt, a_neg, B_, C_, *, chunk: int, unroll: bool,
+                init_state=None):
+    """Chunk-parallel SSD.
+
+    xh: (B, T, H, P); dt: (B, T, H); a_neg: (H,) (negative decay rates);
+    B_, C_: (B, T, N).  Returns (y (B,T,H,P), final_state (B,H,N,P)).
+    """
+    b, t, h, p_ = xh.shape
+    n = B_.shape[-1]
+    q = min(chunk, t)
+    t_orig = t
+    if t % q:
+        # zero-pad: dt=0 => decay exp(0)=1 and zero increment, so padded
+        # positions are exactly neutral for the state
+        pad = q - t % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // q
+
+    # per-token log decay  l_t = a_neg * dt_t  (<= 0)
+    ldec = a_neg[None, None, :] * dt                     # (B, T, H)
+    xc = xh.reshape(b, nc, q, h, p_)
+    dtc = dt.reshape(b, nc, q, h)
+    lc = ldec.reshape(b, nc, q, h)
+    Bc = B_.reshape(b, nc, q, n)
+    Cc = C_.reshape(b, nc, q, n)
+    cum = jnp.cumsum(lc, axis=2)                         # (B, nc, Q, H)
+
+    def chunk_out(ci, state):
+        """state: (B, H, N, P) entering chunk ci."""
+        cumi = cum[:, ci]                                # (B, Q, H)
+        li = lc[:, ci]
+        # intra-chunk duality: M[t,s] = (C_t.B_s) exp(cum_t - cum_s) dt_s
+        seg = cumi[:, :, None, :] - cumi[:, None, :, :]  # (B, Q, Q, H)
+        tri = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        # mask BEFORE exp: exp of the (positive) upper triangle overflows
+        # and would poison gradients through the where
+        gamma = jnp.exp(jnp.where(tri, seg, -1e30))
+        cb = jnp.einsum("bqn,bsn->bqs", Cc[:, ci].astype(jnp.float32),
+                        Bc[:, ci].astype(jnp.float32))
+        m = cb[:, :, :, None] * gamma * dtc[:, ci][:, None, :, :]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", m,
+                             xc[:, ci].astype(jnp.float32))
+        # inter-chunk: contribution of entering state
+        y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp",
+                             Cc[:, ci].astype(jnp.float32), state,
+                             jnp.exp(cumi))
+        # chunk state update
+        decay_to_end = jnp.exp(cumi[:, -1:, :] - cumi)   # (B, Q, H)
+        s_new = jnp.einsum("bsn,bshp,bsh,bsh->bhnp",
+                           Bc[:, ci].astype(jnp.float32),
+                           xc[:, ci].astype(jnp.float32),
+                           dtc[:, ci], decay_to_end)
+        state = state * jnp.exp(cumi[:, -1])[..., None, None] + s_new
+        return (y_intra + y_inter).astype(xh.dtype), state
+
+    state = init_state if init_state is not None else \
+        jnp.zeros((b, h, n, p_), jnp.float32)
+    if unroll:
+        ys = []
+        for ci in range(nc):
+            y, state = chunk_out(ci, state)
+            ys.append(y)
+        y = jnp.stack(ys, axis=1)
+    else:
+        def body(st, ci):
+            y, st = chunk_out(ci, st)
+            return st, y
+        state, y = jax.lax.scan(body, state, jnp.arange(nc))
+        y = jnp.swapaxes(y, 0, 1)                        # (B, nc, Q, H, P)
+    return y.reshape(b, t, h, p_)[:, :t_orig], state
+
+
+def mamba_block(cfg, p, x, plan: ShardingPlan, *, chunk: int = 256,
+                unroll_chunks: bool = False, ssm_state=None,
+                conv_state=None, decode: bool = False):
+    """x: (B, T, D) -> (B, T, D).  decode=True carries (ssm, conv) state."""
+    d_inner, h, p_, n = mamba_dims(cfg)
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xbc, dt = _split(cfg, proj)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B, T, H)
+    raw_xbc = xbc
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 state=conv_state if decode else None)
+    if not decode:
+        # prefill/train: the conv state is the last K-1 raw inputs
+        kc = cfg.ssm_conv - 1
+        if raw_xbc.shape[1] >= kc:
+            new_conv = raw_xbc[:, -kc:, :]
+        else:
+            new_conv = jnp.pad(raw_xbc,
+                               ((0, 0), (kc - raw_xbc.shape[1], 0), (0, 0)))
+    xin = xbc[..., :d_inner]
+    B_ = xbc[..., d_inner:d_inner + n]
+    C_ = xbc[..., d_inner + n:]
+    xh = xin.reshape(*xin.shape[:-1], h, p_)
+    xh = plan.constrain(xh, "batch", "seq", "ssm_heads", None)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if decode:
+        # single-token recurrence (T == 1)
+        dt1 = dt[:, 0]                                   # (B, H)
+        decay = jnp.exp(a_neg[None] * dt1)               # (B, H)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", B_[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt1)
+        state = ssm_state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, 0].astype(jnp.float32),
+                       state)[:, None].astype(x.dtype)
+        new_state = state
+        y = y.reshape(x.shape[0], 1, h, p_)
+    else:
+        y, new_state = ssd_chunked(xh, dt, a_neg, B_, C_, chunk=chunk,
+                                   unroll=unroll_chunks,
+                                   init_state=ssm_state)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(*x.shape[:-1], d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_w"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    out = plan.constrain(out, "batch", "seq", "d_model")
+    return out, (new_state, new_conv)

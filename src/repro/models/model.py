@@ -1,0 +1,290 @@
+"""Full language-model assembly: embeddings -> scanned superblocks ->
+head; train / prefill / decode entry points for every assigned
+architecture (dense, MoE, SSM, hybrid, enc-dec, VLM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import (
+    apply_superblock, block_defs, empty_cache, layer_kinds, n_super,
+    stack_defs,
+)
+from .sharding import (
+    PDef, Rules, ShardingPlan, init_from_defs, pspecs_from_defs,
+    shapestructs_from_defs,
+)
+
+__all__ = ["ModelRuntime", "param_defs", "init_params", "param_pspecs",
+           "forward_train", "loss_fn", "prefill", "decode_step",
+           "init_cache", "encode"]
+
+
+@dataclass(frozen=True)
+class ModelRuntime:
+    """Execution knobs (the LM-side primitive/variant choices)."""
+    attn_impl: str = "xla"        # "xla" | "xla_chunked" | "flash"
+    remat: bool = False           # activation checkpointing per block
+    remat_policy: str = "full"    # "full" | "dots" (save matmul outputs)
+    unroll: int = 1               # scan unroll (dry-run accounting)
+    chunk: int = 256              # SSD chunk size
+    unroll_chunks: bool = False   # python-unroll SSD chunks (dry-run)
+    moe_impl: str = "gather"      # "gather" | "alltoall" (shard_map EP)
+
+
+# ----------------------------------------------------------------------
+def param_defs(cfg) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab
+    defs: Dict[str, Any] = {
+        "embed": PDef((v, d), ("vocab", "d_model")),
+        "blocks": stack_defs(block_defs(cfg), n_super(cfg)),
+        "final_norm": PDef((d,), ("d_model",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = PDef((d, v), ("d_model", "vocab"))
+    if cfg.family == "encdec":
+        enc_cfg = replace(cfg, family="dense", n_layers=cfg.enc_layers,
+                          local_global_period=0)
+        defs["enc_blocks"] = stack_defs(block_defs(enc_cfg),
+                                        n_super(enc_cfg))
+        defs["enc_norm"] = PDef((d,), ("d_model",), init="ones")
+        defs["enc_pos"] = PDef((cfg.enc_seq, d), ("enc_seq", "d_model"),
+                               scale=0.02)
+    if cfg.family == "vlm":
+        defs["patch_proj"] = PDef((d, d), ("d_model", "d_model"))
+    return defs
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    return init_from_defs(param_defs(cfg), key, dtype)
+
+
+def param_pspecs(cfg, rules: Rules):
+    return pspecs_from_defs(param_defs(cfg), rules)
+
+
+def param_shapestructs(cfg, dtype=jnp.bfloat16):
+    return shapestructs_from_defs(param_defs(cfg), dtype)
+
+
+def param_count(cfg) -> int:
+    leaves = jax.tree.leaves(param_defs(cfg),
+                             is_leaf=lambda x: isinstance(x, PDef))
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    leaves = jax.tree.leaves(param_defs(cfg)["blocks"],
+                             is_leaf=lambda x: isinstance(x, PDef))
+    expert = int(sum(np.prod(p.shape) for p in leaves
+                     if "experts" in p.axes))
+    inactive = expert * (1 - cfg.top_k / cfg.n_experts)
+    return int(total - inactive)
+
+
+# ----------------------------------------------------------------------
+def _embed(cfg, params, tokens, plan: ShardingPlan):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.post_norms:  # gemma2 embedding scaling
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return plan.constrain(h, "batch", "seq", "d_model")
+
+
+def _head(cfg, params, h, plan: ShardingPlan):
+    h = h.astype(jnp.float32)
+    w = (params["embed"].T if cfg.tie_embeddings else
+         params["lm_head"]).astype(jnp.float32)
+    logits = jnp.einsum("btd,dv->btv", h, w)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return plan.constrain(logits, "batch", "seq", "vocab")
+
+
+def _run_blocks(cfg, blocks_params, h, *, positions, plan, rt: ModelRuntime,
+                cache=None, cache_index=None, decode=False, cross_kv=None,
+                causal=True):
+    def body(carry, xs):
+        if cache is None:
+            pblk = xs
+            out, _ = apply_superblock(
+                cfg, pblk, carry, positions=positions, plan=plan,
+                attn_impl=rt.attn_impl, chunk=rt.chunk,
+                unroll_chunks=rt.unroll_chunks, moe_impl=rt.moe_impl,
+                cross_kv=cross_kv, decode=False)
+            return out, None
+        pblk, cblk = xs
+        out, ncache = apply_superblock(
+            cfg, pblk, carry, positions=positions, plan=plan,
+            cache=cblk, cache_index=cache_index, decode=decode,
+            attn_impl=rt.attn_impl, chunk=rt.chunk,
+            unroll_chunks=rt.unroll_chunks, moe_impl=rt.moe_impl,
+            cross_kv=cross_kv)
+        return out, ncache
+
+    if rt.remat:
+        if rt.remat_policy == "dots":
+            # selective remat: keep MXU outputs, recompute elementwise
+            fn = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            fn = jax.checkpoint(body)
+    else:
+        fn = body
+    xs = blocks_params if cache is None else (blocks_params, cache)
+    h, caches = jax.lax.scan(fn, h, xs, unroll=rt.unroll)
+    return h, caches
+
+
+# ----------------------------------------------------------------------
+def encode(cfg, params, frames, plan: ShardingPlan, rt: ModelRuntime):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    enc_cfg = replace(cfg, family="dense", n_layers=cfg.enc_layers,
+                      local_global_period=0)
+    h = frames + params["enc_pos"][None, :frames.shape[1], :].astype(
+        frames.dtype)
+    h = plan.constrain(h, "batch", "enc_seq", "d_model")
+
+    def body(carry, pblk):
+        out, _ = apply_superblock(
+            enc_cfg, pblk, carry,
+            positions=jnp.arange(frames.shape[1])[None],
+            plan=plan, attn_impl=rt.attn_impl)
+        return out, None
+
+    # encoder is bidirectional: patch causal=False through a wrapper
+    def body_bidir(carry, pblk):
+        from .common import attention, ffn, rms_norm
+        h2 = carry
+        p = pblk["layer0"]
+        x = rms_norm(h2, p["norm1"], cfg.norm_eps)
+        a, _ = attention(enc_cfg, p["attn"], x,
+                         positions=jnp.arange(frames.shape[1])[None],
+                         plan=plan, causal=False, attn_impl=rt.attn_impl)
+        h2 = h2 + a
+        x = rms_norm(h2, p["norm2"], cfg.norm_eps)
+        h2 = h2 + ffn(p["ffn"], x, plan)
+        return h2, None
+
+    fn = jax.checkpoint(body_bidir) if rt.remat else body_bidir
+    h, _ = jax.lax.scan(fn, h, params["enc_blocks"], unroll=rt.unroll)
+    from .common import rms_norm as _rn
+    return _rn(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _prepare_inputs(cfg, params, batch, plan, rt):
+    """Returns (h, positions, cross_kv, label_offset)."""
+    cross_kv = None
+    if cfg.family == "encdec":
+        cross_kv = encode(cfg, params, batch["frames"], plan, rt)
+        tokens = batch["tokens"]
+        h = _embed(cfg, params, tokens, plan)
+        positions = jnp.arange(tokens.shape[1])[None]
+        return h, positions, cross_kv, 0
+    if cfg.family == "vlm":
+        patches = jnp.einsum("bpd,de->bpe", batch["patches"],
+                             params["patch_proj"])
+        text = _embed(cfg, params, batch["tokens"], plan)
+        h = jnp.concatenate([patches.astype(text.dtype), text], axis=1)
+        positions = jnp.arange(h.shape[1])[None]
+        return h, positions, None, patches.shape[1]
+    tokens = batch["tokens"]
+    h = _embed(cfg, params, tokens, plan)
+    positions = jnp.arange(tokens.shape[1])[None]
+    return h, positions, None, 0
+
+
+def forward_train(cfg, params, batch, plan: ShardingPlan,
+                  rt: ModelRuntime = ModelRuntime()):
+    """Full forward -> logits over the label positions."""
+    from .common import rms_norm
+    h, positions, cross_kv, off = _prepare_inputs(cfg, params, batch,
+                                                  plan, rt)
+    h, _ = _run_blocks(cfg, params["blocks"], h, positions=positions,
+                       plan=plan, rt=rt, cross_kv=cross_kv)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if off:
+        h = h[:, off:, :]   # VLM: logits over text positions only
+    return _head(cfg, params, h, plan)
+
+
+def loss_fn(cfg, params, batch, plan: ShardingPlan,
+            rt: ModelRuntime = ModelRuntime()):
+    logits = forward_train(cfg, params, batch, plan, rt)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ----------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Stacked decode cache: every leaf gets the n_super leading axis."""
+    one = empty_cache(cfg, batch, max_seq, dtype)
+    n = n_super(cfg)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n,) + x.shape, x.dtype), one)
+
+
+def prefill(cfg, params, batch, plan: ShardingPlan,
+            rt: ModelRuntime = ModelRuntime(), max_seq: Optional[int] = None):
+    """Process a prompt, returning (last-position logits, filled cache)."""
+    from .common import rms_norm
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    h, positions, cross_kv, off = _prepare_inputs(cfg, params, batch,
+                                                  plan, rt)
+    # the hidden sequence may exceed the token count (VLM patch prefix)
+    max_seq = max(max_seq or 0, h.shape[1])
+    cache = init_cache(cfg, b, max_seq, h.dtype)
+    # prefill fills the cache by running the train-style forward and
+    # writing k/v at [0, t); implemented via cache_index=None + donated
+    # cache (attention writes the full prompt kv in one shot)
+    def write(c, kv):
+        return jax.lax.dynamic_update_slice_in_dim(c, kv, 0, axis=1)
+
+    h2, caches = _run_blocks(cfg, params["blocks"], h,
+                             positions=positions, plan=plan, rt=rt,
+                             cache=jax.tree.map(lambda c: c, cache),
+                             cache_index=None, decode=False,
+                             cross_kv=cross_kv)
+    h2 = rms_norm(h2, params["final_norm"], cfg.norm_eps)
+    logits = _head(cfg, params, h2[:, -1:, :], plan)
+    # merge written kv (length t) into the max_seq cache
+    def merge(full, new):
+        if new.shape == full.shape:
+            return new
+        return jax.lax.dynamic_update_slice(
+            full, new.astype(full.dtype), (0,) * new.ndim)
+
+    cache = jax.tree.map(merge, cache, caches)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, plan: ShardingPlan,
+                rt: ModelRuntime = ModelRuntime(), cross_kv=None):
+    """One decode step.  tokens: (B, 1); pos: scalar int32 (current
+    length).  Returns (logits (B, 1, V), updated cache)."""
+    from .common import rms_norm
+    h = _embed(cfg, params, tokens, plan)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    h, cache = _run_blocks(cfg, params["blocks"], h, positions=positions,
+                           plan=plan, rt=rt, cache=cache,
+                           cache_index=jnp.asarray(pos, jnp.int32)
+                           .reshape(1), decode=True, cross_kv=cross_kv)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _head(cfg, params, h, plan), cache

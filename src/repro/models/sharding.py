@@ -1,0 +1,180 @@
+"""Logical-axis sharding plans — the LM-side 'data layout' abstraction.
+
+This is the paper's idea lifted to the distributed level: a tensor's
+"layout" on a TPU pod is its PartitionSpec, primitives are the
+implementation choices per layer, and transitions between differently-
+sharded producers/consumers cost collective time (the DT-graph edges of
+the datacenter).  Models annotate tensors with *logical* axes; a
+:class:`Rules` mapping (logical axis -> mesh axis) resolves annotations
+to concrete PartitionSpecs.  ``repro.core.sharding_select`` chooses the
+rules with the same PBQP machinery the paper uses for CPU layouts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+__all__ = ["Rules", "ShardingPlan", "PDef", "init_from_defs",
+           "pspecs_from_defs", "MEGATRON_RULES", "REPLICATED_RULES"]
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Logical axis -> mesh axis mapping (MaxText-style rules)."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...] = ()
+
+    def get(self, logical: str) -> MeshAxes:
+        for k, v in self.table:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        used = set()
+        parts = []
+        for a in axes:
+            m = self.get(a) if a else None
+            # a mesh axis may appear at most once in a PartitionSpec
+            if m is None:
+                parts.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(x for x in ms if x not in used)
+            used.update(ms)
+            parts.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+        return P(*parts)
+
+    def with_(self, **kw) -> "Rules":
+        table = dict(self.table)
+        table.update(kw)
+        return Rules(tuple(table.items()))
+
+    def restrict(self, mesh_axes) -> "Rules":
+        """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on
+        the single-pod 16x16 mesh)."""
+        mesh_axes = set(mesh_axes)
+
+        def fix(v):
+            if v is None:
+                return None
+            vs = (v,) if isinstance(v, str) else tuple(v)
+            vs = tuple(x for x in vs if x in mesh_axes)
+            if not vs:
+                return None
+            return vs[0] if len(vs) == 1 else vs
+
+        return Rules(tuple((k, fix(v)) for k, v in self.table))
+
+    def feasible(self, axes: Sequence[Optional[str]],
+                 shape: Sequence[int], mesh_shape: Dict[str, int]) -> bool:
+        """Divisibility check: each sharded dim must divide evenly."""
+        for a, n in zip(axes, shape):
+            m = self.get(a) if a else None
+            if m is None:
+                continue
+            ms = (m,) if isinstance(m, str) else m
+            total = int(np.prod([mesh_shape[x] for x in ms]))
+            if n % total:
+                return False
+        return True
+
+
+#: canonical fixed-rule baselines (the LM analogue of the paper's
+#: "local optimal": one canonical layout everywhere)
+MEGATRON_RULES = Rules((
+    ("batch", ("pod", "data")),
+    ("seq", None),
+    ("d_model", None),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),
+    ("d_ff", "model"),
+    ("experts", "model"),
+    ("vocab", "model"),
+    ("layers", None),
+    ("ssm_heads", "model"),
+    ("ssm_state", None),
+    ("enc_seq", None),
+    ("kv_seq", None),
+))
+
+REPLICATED_RULES = Rules((
+    ("batch", ("pod", "data")),
+))
+
+
+@dataclass
+class ShardingPlan:
+    """Resolved plan: mesh + rules (+ per-annotation overrides)."""
+
+    mesh: Optional[Mesh] = None
+    rules: Rules = MEGATRON_RULES
+    overrides: Dict[str, P] = field(default_factory=dict)
+
+    def constrain(self, x, *axes: Optional[str], name: str = ""):
+        """Annotate an activation with logical axes -> sharding hint."""
+        if self.mesh is None:
+            return x
+        spec = self.overrides.get(name) if name else None
+        if spec is None:
+            spec = self.rules.spec(axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+# ----------------------------------------------------------------------
+# parameter definitions: single source of truth for shapes, logical
+# axes, initialisation, and shardings
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class PDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"   # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes)
+
+
+def _init_leaf(key, d: PDef, dtype):
+    import jax.numpy as jnp
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[0]
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_defs(defs, key, dtype):
+    """defs: nested dict of PDef -> same-structure dict of arrays."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, PDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def pspecs_from_defs(defs, rules: Rules):
+    return jax.tree.map(lambda d: rules.spec(d.axes), defs,
+                        is_leaf=lambda x: isinstance(x, PDef))
+
+
+def shapestructs_from_defs(defs, dtype):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+                        defs, is_leaf=lambda x: isinstance(x, PDef))

@@ -1,0 +1,56 @@
+"""Gradient compression for cross-pod synchronisation.
+
+int8 stochastic-rounding quantisation with per-tensor scales: the
+pseudo-gradient exchanged between pods in the DiLoCo-style outer loop
+(runtime/train_loop.py) shrinks 2-4x, which matters on the
+data-center-network "pod" axis where links are an order of magnitude
+slower than intra-pod ICI.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_tree"]
+
+
+def quantize_int8(x, key=None):
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    scaled = x.astype(jnp.float32) / scale
+    if key is not None:  # stochastic rounding: unbiased compression
+        noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+        scaled = scaled + noise
+    q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(tree, axis_name: str, key=None):
+    """Quantised all-reduce over ``axis_name`` (use inside shard_map).
+
+    A shared scale is agreed via a scalar pmax first (cheap), so the
+    int8 payload — the only large message — dequantises exactly:
+    int8 accumulated in int32 (no overflow below 2^23 participants).
+    Returns the mean over the axis.
+    """
+    n = jax.lax.psum(1, axis_name)
+    leaves, tdef = jax.tree.flatten(tree)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        local_max = jnp.max(jnp.abs(leaf.astype(jnp.float32)))
+        scale = jnp.maximum(jax.lax.pmax(local_max, axis_name),
+                            1e-12) / 127.0
+        scaled = leaf.astype(jnp.float32) / scale
+        if k is not None:  # stochastic rounding: unbiased
+            noise = jax.random.uniform(k, leaf.shape, jnp.float32,
+                                       -0.5, 0.5)
+            scaled = scaled + noise
+        q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        out.append((acc.astype(jnp.float32) * scale / n).astype(leaf.dtype))
+    return tdef.unflatten(out)

@@ -1,0 +1,149 @@
+"""Optimizers (pure-pytree, optax-style API surface).
+
+AdamW for <=100B models; Adafactor (factored second moment) for the
+300B-1T archs where Adam state would not fit HBM (see EXPERIMENTS.md
+§Dry-run memory notes).  Both compose with global-norm clipping and the
+warmup+cosine schedule.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "adafactor", "clip_by_global_norm",
+           "warmup_cosine", "Optimizer"]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    #: state bytes per parameter (for memory accounting in the dry-run)
+    state_bytes_per_param: float = 8.0
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), tree), norm
+
+
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused_step=None):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update, state_bytes_per_param=8.0)
+
+
+def adafactor(lr_fn, *, eps: float = 1e-30, clip_norm: float = 1.0,
+              weight_decay: float = 0.0, min_dim: int = 128) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018): matrices
+    keep only row/col statistics — O(n+m) state instead of O(nm)."""
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim and \
+            p.shape[-2] >= min_dim
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused_step=None):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        beta = 1.0 - count.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, f):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if factored(p):
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(
+                    jnp.mean(r, axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * c[..., None, :]
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                vhat = v
+                nf = {"v": v}
+            step = g32 * jax.lax.rsqrt(vhat + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_f = tdef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_f, "count": count}
+
+    return Optimizer(init, update, state_bytes_per_param=0.1)
+
+
+def for_config(cfg, *, peak_lr=3e-4, warmup=100, total=10000) -> Optimizer:
+    """Memory-aware default: Adafactor for >=200B-parameter archs."""
+    from ..models.model import param_count
+    lr = warmup_cosine(peak_lr, warmup, total)
+    if param_count(cfg) >= 2e11:
+        return adafactor(lr)
+    return adamw(lr)

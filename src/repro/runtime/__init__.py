@@ -1,0 +1,11 @@
+from .elastic import ElasticController
+from .pipeline_parallel import pipeline_apply
+from .serve_loop import Request, ServeLoop
+from .train_loop import (
+    StragglerMonitor, TrainLoopConfig, TrainState, train,
+)
+
+__all__ = [
+    "ElasticController", "pipeline_apply", "Request", "ServeLoop",
+    "StragglerMonitor", "TrainLoopConfig", "TrainState", "train",
+]

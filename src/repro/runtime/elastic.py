@@ -1,0 +1,41 @@
+"""Elastic scaling: re-mesh and resume when the fleet size changes.
+
+On a real cluster the coordinator advertises the healthy device set;
+when it changes (node failure, capacity grant) the controller
+checkpoints, rebuilds the mesh + sharding rules for the new shape, and
+re-jits.  Parameters move via the checkpoint (host DRAM) path — the
+standard preemption-safe resize.  Tested on CPU by shrinking a fake
+device mesh (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from ..models.sharding import Rules, ShardingPlan
+
+__all__ = ["ElasticController"]
+
+
+@dataclass
+class ElasticController:
+    """Tracks the device pool; yields (mesh, plan) per generation."""
+
+    make_mesh: Callable[[int], object]      # n_devices -> Mesh
+    make_rules: Callable[[Dict[str, int]], Rules]
+    generation: int = 0
+    _last_n: Optional[int] = None
+
+    def current(self) -> Tuple[object, ShardingPlan, bool]:
+        """Returns (mesh, plan, changed)."""
+        n = len(jax.devices())
+        changed = self._last_n is not None and n != self._last_n
+        if changed:
+            self.generation += 1
+        self._last_n = n
+        mesh = self.make_mesh(n)
+        shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        rules = self.make_rules(shape).restrict(mesh.axis_names)
+        return mesh, ShardingPlan(mesh=mesh, rules=rules), changed

@@ -1,0 +1,118 @@
+"""Unit tests for dry-run analysis helpers (HLO collective parsing,
+unroll-differencing reconstruction, roofline term derivation)."""
+import numpy as np
+import pytest
+
+from benchmarks.roofline import roofline_terms
+from repro.launch.dryrun import _combine_unrolls, _type_bytes, \
+    parse_collectives
+
+HLO = """
+HloModule jit_step
+
+fused_computation {
+  ...
+}
+
+ENTRY main {
+  %p0 = bf16[8,1024]{1,0} parameter(0)
+  %p1 = f32[16,16]{1,0} parameter(1)
+  %ag = bf16[8,2048]{1,0} all-gather(%p0), channel_id=1, dimensions={1}
+  %ar = f32[16,16]{1,0} all-reduce(%p1), channel_id=2, to_apply=%add
+  %rs = bf16[4,1024]{1,0} reduce-scatter(%p0), channel_id=3
+  %a2a = bf16[8,1024]{1,0} all-to-all(%p0), channel_id=4
+  %cp.1 = bf16[8,1024]{1,0} collective-permute(%p0), channel_id=5
+  %ars = f32[16,16]{1,0} all-reduce-start(%p1), channel_id=6
+  ROOT %t = (bf16[8,2048]{1,0}) tuple(%ag)
+}
+"""
+
+
+class TestTypeBytes:
+    def test_simple(self):
+        assert _type_bytes("bf16[8,1024]{1,0}") == 8 * 1024 * 2
+        assert _type_bytes("f32[16,16]{1,0}") == 16 * 16 * 4
+        assert _type_bytes("pred[4]") == 4
+
+    def test_tuple(self):
+        assert _type_bytes("(bf16[2,2]{1,0}, f32[3]{0})") == 8 + 12
+
+    def test_scalar(self):
+        assert _type_bytes("f32[]") == 4
+
+
+class TestParseCollectives:
+    def test_counts_and_bytes(self):
+        out = parse_collectives(HLO)
+        p0 = 8 * 1024 * 2
+        p1 = 16 * 16 * 4
+        assert out["all-gather"] == {"count": 1, "bytes": p0}
+        # all-reduce + all-reduce-start both count
+        assert out["all-reduce"]["count"] == 2
+        assert out["all-reduce"]["bytes"] == 2 * p1
+        assert out["reduce-scatter"]["bytes"] == p0
+        assert out["all-to-all"]["bytes"] == p0
+        assert out["collective-permute"]["count"] == 1
+
+    def test_no_false_positives(self):
+        out = parse_collectives(
+            "%x = f32[4]{0} add(%a, %b)\n%y = f32[4]{0} copy(%x)")
+        assert all(v["count"] == 0 for v in out.values())
+
+
+class TestUnrollDiff:
+    def test_reconstruction(self):
+        def rec(flops, bytes_, coll):
+            return {
+                "n_super": 10,
+                "flops_per_device": flops,
+                "bytes_per_device": bytes_,
+                "collectives": {"all-reduce": coll,
+                                "all-gather": {"count": 0, "bytes": 0},
+                                "reduce-scatter": {"count": 0, "bytes": 0},
+                                "all-to-all": {"count": 0, "bytes": 0},
+                                "collective-permute": {"count": 0,
+                                                       "bytes": 0}},
+                "collective_bytes_per_device": coll["bytes"],
+            }
+
+        # outside=100, body=50 => u1: 150, u2: 200
+        r1 = rec(150.0, 1500.0, {"count": 3, "bytes": 300})
+        r2 = rec(200.0, 2000.0, {"count": 5, "bytes": 500})
+        out = _combine_unrolls(r1, r2)
+        assert out["flops_total"] == 100 + 10 * 50
+        assert out["bytes_total"] == 1000 + 10 * 500
+        assert out["collectives_total"]["all-reduce"]["bytes"] == \
+            100 + 10 * 200
+        assert out["collective_bytes_total"] == 2100
+
+    def test_clamping_on_fusion_noise(self):
+        """u2 < u1 (fusion noise) must not produce negative totals."""
+        r1 = {"n_super": 4, "flops_per_device": 100.0,
+              "bytes_per_device": 100.0,
+              "collectives": {c: {"count": 0, "bytes": 0} for c in
+                              ("all-reduce", "all-gather",
+                               "reduce-scatter", "all-to-all",
+                               "collective-permute")},
+              "collective_bytes_per_device": 0}
+        r2 = dict(r1, flops_per_device=90.0)
+        out = _combine_unrolls(r1, r2)
+        assert out["flops_total"] >= 0
+
+
+class TestRooflineTerms:
+    def test_dominant_term(self):
+        rec = {
+            "arch": "x", "shape": "train_4k", "mesh": "16x16",
+            "n_devices": 256,
+            "flops_total": 197e12,        # exactly 1 s of compute
+            "bytes_total": 819e9 * 0.5,   # 0.5 s of memory
+            "collective_bytes_total": 50e9 * 2.0,  # 2 s of collectives
+            "model_flops": 197e12 * 256 * 0.5,     # 0.5 s ideal
+        }
+        t = roofline_terms(rec)
+        assert t["bottleneck"] == "collective"
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["memory_s"] == pytest.approx(0.5)
+        assert t["collective_s"] == pytest.approx(2.0)
+        assert t["roofline_fraction"] == pytest.approx(0.25)

@@ -1,0 +1,114 @@
+"""Tests for layouts and the DT (data-layout transformation) graph."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layouts import (
+    ALL_LAYOUTS, CHW, HWC, HCW, HWC8, DTGraph, default_dt_graph,
+)
+
+
+class TestLayoutRoundTrip:
+    @pytest.mark.parametrize("layout", ALL_LAYOUTS, ids=lambda l: l.name)
+    def test_roundtrip(self, layout):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(16, 5, 7)).astype(np.float32)
+        mem = layout.to_memory(x)
+        back = layout.from_memory(mem)
+        np.testing.assert_array_equal(back, x)
+
+    def test_hwc_memory_order(self):
+        x = np.arange(2 * 3 * 4).reshape(2, 3, 4)
+        mem = HWC.to_memory(x)
+        assert mem.shape == (3, 4, 2)
+        assert mem[1, 2, 0] == x[0, 1, 2]
+
+    def test_blocked_layout_shape(self):
+        x = np.zeros((16, 5, 7), np.float32)
+        mem = HWC8.to_memory(x)
+        assert mem.shape == (5, 7, 2, 8)
+
+    def test_blocked_layout_requires_divisible(self):
+        with pytest.raises(ValueError):
+            HWC8.to_memory(np.zeros((10, 5, 7), np.float32))
+
+
+class TestDTGraph:
+    def test_direct_edge_cost(self):
+        g = default_dt_graph()
+        d, idx = g.cost_matrix((64, 32, 32))
+        assert d[idx["CHW"], idx["HWC"]] > 0
+        assert np.isfinite(d[idx["CHW"], idx["HWC"]])
+        assert d[idx["CHW"], idx["CHW"]] == 0
+
+    def test_chain_required(self):
+        """HWC -> HCW has no direct routine: must chain via CHW."""
+        g = default_dt_graph()
+        chain = g.shortest_chain("HWC", "HCW", (64, 32, 32))
+        assert chain is not None
+        assert chain[0] == "HWC" and chain[-1] == "HCW"
+        assert len(chain) >= 3  # at least one intermediate hop
+        d, idx = g.cost_matrix((64, 32, 32))
+        # chain cost equals sum of its direct hops
+        hop_cost = sum(
+            d[idx[a], idx[b]] for a, b in zip(chain, chain[1:]))
+        assert d[idx["HWC"], idx["HCW"]] == pytest.approx(hop_cost)
+
+    def test_unreachable_is_infinite(self):
+        g = DTGraph()
+        g.add_transform("A", "B", lambda s, d: 1.0)
+        g.add_layout("Z")
+        d, idx = g.cost_matrix((4, 4, 4))
+        assert np.isinf(d[idx["A"], idx["Z"]])
+        assert g.shortest_chain("A", "Z", (4, 4, 4)) is None
+
+    def test_one_way_transform(self):
+        g = DTGraph()
+        g.add_transform("A", "B", lambda s, d: 1.0)
+        d, idx = g.cost_matrix((4, 4, 4))
+        assert np.isfinite(d[idx["A"], idx["B"]])
+        assert np.isinf(d[idx["B"], idx["A"]])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 5), st.floats(0.1, 10)),
+        min_size=1, max_size=20))
+    def test_apsp_triangle_inequality(self, edges):
+        g = DTGraph()
+        for i in range(6):
+            g.add_layout(f"L{i}")
+        for s, t, c in edges:
+            if s != t:
+                g.add_transform(f"L{s}", f"L{t}", lambda sh, dt, c=c: c)
+        d, idx = g.cost_matrix((4, 4, 4))
+        n = len(g.layouts)
+        for i in range(n):
+            for j in range(n):
+                for k in range(n):
+                    assert d[i, j] <= d[i, k] + d[k, j] + 1e-9
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 4), st.floats(0.1, 10)),
+        min_size=1, max_size=12))
+    def test_chain_realises_apsp_cost(self, edges):
+        g = DTGraph()
+        for i in range(5):
+            g.add_layout(f"L{i}")
+        costs = {}
+        for s, t, c in edges:
+            if s != t and (s, t) not in costs:
+                costs[(s, t)] = c
+                g.add_transform(f"L{s}", f"L{t}", lambda sh, dt, c=c: c)
+        d, idx = g.cost_matrix((4, 4, 4))
+        for i in range(5):
+            for j in range(5):
+                chain = g.shortest_chain(f"L{i}", f"L{j}", (4, 4, 4))
+                if np.isinf(d[idx[f"L{i}"], idx[f"L{j}"]]):
+                    assert chain is None or i == j
+                else:
+                    assert chain is not None
+                    tot = sum(costs.get((int(a[1]), int(b[1])), np.inf)
+                              for a, b in zip(chain, chain[1:]))
+                    assert tot == pytest.approx(
+                        d[idx[f"L{i}"], idx[f"L{j}"]], rel=1e-9)

@@ -1,0 +1,134 @@
+"""End-to-end selection tests: PBQP build, solve, legalize, execute.
+
+Uses the deterministic AnalyticCostModel so tests don't profile.
+Numerical equivalence across strategies is the key system invariant: a
+plan is a *performance* choice, never a semantics choice.
+"""
+import numpy as np
+import pytest
+
+from repro.convnets import NETWORKS, alexnet, googlenet, vgg
+from repro.core.costs import AnalyticCostModel
+from repro.core.plan import compile_plan
+from repro.core.selection import (
+    select_family_best, select_local_optimal, select_pbqp, select_sum2d,
+)
+
+COST = AnalyticCostModel()
+
+
+@pytest.fixture(scope="module")
+def small_alexnet():
+    return alexnet(scale=0.3)
+
+
+@pytest.fixture(scope="module")
+def small_googlenet():
+    return googlenet(scale=0.2)
+
+
+class TestSelection:
+    def test_pbqp_beats_or_ties_baselines(self, small_alexnet):
+        net = small_alexnet
+        pb = select_pbqp(net, COST)
+        s2 = select_sum2d(net, COST)
+        lo = select_local_optimal(net, COST)
+        assert pb.optimal
+        assert pb.predicted_cost <= lo.predicted_cost + 1e-12
+        assert pb.predicted_cost <= s2.predicted_cost + 1e-12
+        # SUM2D is the textbook baseline: strictly worse here
+        assert pb.predicted_cost < s2.predicted_cost
+
+    def test_family_strategies_between(self, small_alexnet):
+        net = small_alexnet
+        pb = select_pbqp(net, COST)
+        for fam in ["direct", "im2", "kn2", "winograd", "fft"]:
+            r = select_family_best(net, COST, fam)
+            assert pb.predicted_cost <= r.predicted_cost + 1e-12
+
+    def test_every_conv_assigned_and_legal(self, small_googlenet):
+        net = small_googlenet
+        r = select_pbqp(net, COST)
+        assert r.optimal
+        for node in net.conv_nodes():
+            ch = r.choices[node.id]
+            assert ch.primitive is not None
+            assert ch.primitive.supports(node.scn)
+        # all conversions reference real DT chains
+        for (u, v), chain in r.conversions.items():
+            assert chain[0] == r.choices[u].l_out
+            assert chain[-1] == r.choices[v].l_in
+            assert len(chain) >= 2
+
+    def test_restricting_families_changes_selection(self, small_alexnet):
+        r = select_pbqp(small_alexnet, COST, families=["direct"])
+        fams = {r.choices[n.id].primitive.family
+                for n in small_alexnet.conv_nodes()}
+        assert fams == {"direct"}
+
+
+class TestExecution:
+    @pytest.mark.parametrize("strategy", ["pbqp", "sum2d", "local",
+                                          "winograd", "im2"])
+    def test_strategies_numerically_equivalent(self, small_alexnet,
+                                               strategy):
+        net = small_alexnet
+        params = net.init_params(seed=3)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=net.nodes["data"].out_shape).astype(np.float32)
+
+        ref_sel = select_sum2d(net, COST)
+        ref = compile_plan(ref_sel, params)(x)
+
+        if strategy == "pbqp":
+            sel = select_pbqp(net, COST)
+        elif strategy == "sum2d":
+            sel = ref_sel
+        elif strategy == "local":
+            sel = select_local_optimal(net, COST)
+        else:
+            sel = select_family_best(net, COST, strategy)
+        got = compile_plan(sel, params)(x)
+        for k in ref:
+            np.testing.assert_allclose(
+                np.asarray(got[k]), np.asarray(ref[k]), rtol=2e-3,
+                atol=2e-3, err_msg=f"{strategy} diverges at {k}")
+
+    def test_googlenet_executes(self, small_googlenet):
+        net = small_googlenet
+        params = net.init_params(seed=1)
+        sel = select_pbqp(net, COST)
+        cn = compile_plan(sel, params)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=net.nodes["data"].out_shape).astype(np.float32)
+        out = cn(x)
+        (prob,) = out.values()
+        p = np.asarray(prob).reshape(-1)
+        assert p.shape == (1000,)
+        assert np.isfinite(p).all()
+        assert abs(p.sum() - 1.0) < 1e-3
+
+    def test_vgg_topologies(self):
+        for cfg in ["A", "B", "C", "D", "E"]:
+            net = vgg(cfg, scale=0.15)
+            convs = net.conv_nodes()
+            n = {"A": 8, "B": 10, "C": 13, "D": 13, "E": 16}[cfg]
+            assert len(convs) == n, cfg
+            if cfg == "C":
+                assert sum(1 for c in convs if c.scn.k == 1) == 3
+
+    def test_alexnet_conv_scenarios_match_paper(self):
+        net = alexnet(1.0)
+        scns = {n.id: n.scn for n in net.conv_nodes()}
+        assert scns["conv1"].k == 11 and scns["conv1"].stride == 4
+        assert scns["conv1"].out_h == 55
+        assert scns["conv2"].k == 5 and scns["conv2"].c == 96
+        assert scns["conv5"].m == 256
+        assert net.nodes["pool5"].out_shape == (256, 6, 6)
+
+    def test_googlenet_concat_channels(self):
+        net = googlenet(1.0)
+        assert net.nodes["i3a_concat"].out_shape[0] == 256
+        assert net.nodes["i4e_concat"].out_shape[0] == 832
+        assert net.nodes["i5b_concat"].out_shape[0] == 1024
+        assert len(net.conv_nodes()) == 57

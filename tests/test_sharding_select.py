@@ -1,0 +1,102 @@
+"""Tests for the distributed-level PBQP sharding selection."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.sharding_select import select_rules
+from repro.models.sharding import MEGATRON_RULES, Rules
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+class TestFeasibility:
+    def test_whisper_heads_not_divisible_falls_back(self):
+        """20 heads % 16 != 0: the PBQP must not pick heads->model."""
+        cfg = get_config("whisper-large-v3")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["attn"] != "attn:heads"
+        assert rules.get("heads") != "model"
+
+    def test_llava_56_heads_not_divisible(self):
+        cfg = get_config("llava-next-34b")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["attn"] in ("attn:head_dim", "attn:rep")
+
+    def test_dense_picks_megatron_tp(self):
+        cfg = get_config("mistral-nemo-12b")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["attn"] == "attn:heads"
+        assert report["assignment"]["ffn"] == "ffn:tp"
+        assert rules.get("heads") == "model"
+
+    def test_grok_8_experts_use_tp_within_expert(self):
+        """8 experts % 16 != 0 -> EP infeasible; d_ff=32768 TP instead."""
+        cfg = get_config("grok-1-314b")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["ffn"] == "ffn:tp"
+
+    def test_kimi_384_experts_can_use_ep(self):
+        cfg = get_config("kimi-k2-1t-a32b")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["ffn"] in ("ffn:ep", "ffn:tp")
+        assert "ffn:ep" in report["domains"]["ffn"]
+
+    def test_mamba_vocab_not_divisible(self):
+        """50280 % 16 != 0: embed must not pick vocab sharding."""
+        cfg = get_config("mamba2-2.7b")
+        rules, report = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert report["assignment"]["embed"] != "embed:vocab"
+
+    def test_long_context_decode_shards_kv_seq(self):
+        cfg = get_config("jamba-v0.1-52b")
+        rules, report = select_rules(cfg, SHAPES["long_500k"], MESH_1POD)
+        assert report["assignment"]["cache"] == "cache:seq"
+        assert rules.get("kv_seq") is not None
+
+    def test_batched_decode_prefers_batch_sharded_cache(self):
+        cfg = get_config("mistral-nemo-12b")
+        rules, report = select_rules(cfg, SHAPES["decode_32k"], MESH_1POD)
+        assert report["assignment"]["cache"] == "cache:batch"
+
+
+class TestSolverProperties:
+    @pytest.mark.parametrize("arch", ["mistral-nemo-12b", "gemma2-9b",
+                                      "kimi-k2-1t-a32b", "mamba2-2.7b",
+                                      "whisper-large-v3"])
+    @pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+    def test_always_solves_optimally(self, arch, shape):
+        cfg = get_config(arch)
+        rules, report = select_rules(cfg, SHAPES[shape], MESH_2POD)
+        assert report["optimal"]
+        assert np.isfinite(report["predicted_comm_s"])
+
+    def test_multi_pod_batch_uses_pod_axis(self):
+        cfg = get_config("tinyllama-1.1b")
+        rules, _ = select_rules(cfg, SHAPES["train_4k"], MESH_2POD)
+        batch_axes = rules.get("batch")
+        assert "pod" in (batch_axes if isinstance(batch_axes, tuple)
+                         else (batch_axes,))
+
+
+class TestRules:
+    def test_restrict_drops_missing_axes(self):
+        r = Rules((("batch", ("pod", "data")), ("heads", "model")))
+        r2 = r.restrict(["data", "model"])
+        assert r2.get("batch") == "data"
+        assert r2.get("heads") == "model"
+
+    def test_spec_dedups_mesh_axes(self):
+        r = Rules((("a", "model"), ("b", "model")))
+        spec = r.spec(("a", "b"))
+        # the same mesh axis may appear only once
+        flat = [x for part in spec if part
+                for x in ((part,) if isinstance(part, str) else part)]
+        assert flat.count("model") == 1
+
+    def test_feasible_divisibility(self):
+        r = MEGATRON_RULES
+        assert r.feasible(("d_model", "heads"), (512, 32),
+                          {"data": 16, "model": 16, "pod": 1})
+        assert not r.feasible(("d_model", "heads"), (512, 20),
+                              {"data": 16, "model": 16, "pod": 1})

@@ -1,0 +1,74 @@
+"""Equivalence tests for the §Perf hillclimb variants: every
+optimization must be a pure performance choice (identical numerics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models import (
+    ModelRuntime, ShardingPlan, forward_train, init_params,
+)
+from repro.models.common import chunked_causal_attention
+
+PLAN = ShardingPlan(mesh=None)
+
+
+class TestChunkedCausalAttention:
+    @pytest.mark.parametrize("t,chunk", [(1024, 256), (2048, 512)])
+    def test_matches_dense_causal(self, t, chunk):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(1, t, 4, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, t, 2, 32)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, t, 2, 32)), jnp.float32)
+        got = chunked_causal_attention(q, k, v, scale=32 ** -0.5,
+                                       softcap=0.0, chunk=chunk)
+        want = jnp.swapaxes(
+            attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2), causal=True), 1, 2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_model_level_equivalence(self):
+        cfg = get_config("tinyllama-1.1b").scaled_down(
+            n_layers=2, d_model=64, d_ff=128, vocab=256, n_heads=4,
+            n_kv_heads=2, head_dim=16)
+        params = init_params(cfg, jax.random.key(0), jnp.float32)
+        rng = np.random.default_rng(1)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, 256, size=(1, 1024)), jnp.int32)}
+        base = forward_train(cfg, params, batch, PLAN,
+                             ModelRuntime(attn_impl="xla"))
+        opt = forward_train(cfg, params, batch, PLAN,
+                            ModelRuntime(attn_impl="xla_chunked"))
+        np.testing.assert_allclose(np.asarray(opt), np.asarray(base),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestRematPolicy:
+    def test_dots_policy_same_grads(self):
+        cfg = get_config("tinyllama-1.1b").scaled_down(
+            n_layers=2, d_model=64, d_ff=128, vocab=256, n_heads=4,
+            n_kv_heads=2, head_dim=16)
+        params = init_params(cfg, jax.random.key(0), jnp.float32)
+        rng = np.random.default_rng(2)
+        batch = {"tokens": jnp.asarray(rng.integers(0, 256, (2, 32)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, 256, (2, 32)),
+                                       jnp.int32)}
+        from repro.models import loss_fn
+
+        def grads(rt):
+            return jax.grad(lambda p: loss_fn(cfg, p, batch, PLAN, rt))(
+                params)
+
+        g_none = grads(ModelRuntime(remat=False))
+        g_full = grads(ModelRuntime(remat=True, remat_policy="full"))
+        g_dots = grads(ModelRuntime(remat=True, remat_policy="dots"))
+        for ga, gb in zip(jax.tree.leaves(g_none), jax.tree.leaves(g_full)):
+            np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                       rtol=1e-4, atol=1e-5)
+        for ga, gb in zip(jax.tree.leaves(g_none), jax.tree.leaves(g_dots)):
+            np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                       rtol=1e-4, atol=1e-5)
