@@ -1,0 +1,134 @@
+"""Plan-cache serving benchmark: cold vs warm solve, cold vs hot requests.
+
+Measures the two amortizations the serving subsystem provides:
+
+1. **Solver**: cold exact PBQP solve vs warm-started re-solve after
+   perturbing a subset of node cost vectors (the neighbouring-bucket
+   case), on dense instances that force branch-and-bound.
+2. **End-to-end**: per-request latency through :class:`~repro.serving.
+   server.PlanServer` with a cold cache (solve + compile on the miss
+   path) vs a hot cache (executable LRU hit).
+
+Emits one JSON document (also written to benchmarks/results/) so the
+perf trajectory across PRs is machine-readable:
+
+  PYTHONPATH=src python -m benchmarks.bench_plan_cache
+  PYTHONPATH=src python -m benchmarks.bench_plan_cache --cases 10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import tempfile
+import time
+
+import numpy as np
+
+
+def bench_solver(cases: int, seed: int = 0) -> dict:
+    from repro.core.pbqp import PBQP, solve, solve_warm
+
+    rng = np.random.default_rng(seed)
+    cold_s, warm_s, bb_cold, bb_warm = [], [], [], []
+    for _ in range(cases):
+        n, k = 7, 4
+        pb = PBQP()
+        for i in range(n):
+            pb.add_node(i, rng.uniform(1, 100, size=k))
+        for i in range(n):
+            for j in range(i + 1, n):
+                pb.add_edge(i, j, rng.uniform(0, 50, size=(k, k)))
+        prev = solve(pb, exact=True)
+        # the bucket shift: re-price half the nodes
+        for i in rng.choice(n, size=n // 2, replace=False):
+            pb.set_node_cost(int(i), rng.uniform(1, 100, size=k))
+        t0 = time.perf_counter()
+        fresh = solve(pb, exact=True)
+        cold_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        warm = solve_warm(pb, prev.assignment, exact=True)
+        warm_s.append(time.perf_counter() - t0)
+        assert abs(warm.cost - fresh.cost) < 1e-9
+        bb_cold.append(fresh.stats["BB"])
+        bb_warm.append(warm.stats["BB"])
+    return {
+        "cases": cases,
+        "solve_cold_ms": statistics.median(cold_s) * 1e3,
+        "solve_warm_ms": statistics.median(warm_s) * 1e3,
+        "solve_speedup": statistics.median(cold_s) /
+        max(statistics.median(warm_s), 1e-12),
+        "bb_nodes_cold": statistics.median(bb_cold),
+        "bb_nodes_warm": statistics.median(bb_warm),
+    }
+
+
+def bench_server(reps: int, seed: int = 0) -> dict:
+    from repro.core.costs import AnalyticCostModel
+    from repro.serving import BucketPolicy, PlanServer, conv_tower
+
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as d:
+        srv = PlanServer(lambda s: conv_tower(s, depth=2, width=8),
+                         AnalyticCostModel(),
+                         policy=BucketPolicy(min_hw=8, max_hw=64),
+                         cache_dir=d, lru_capacity=4)
+        x = rng.normal(size=(3, 20, 20)).astype(np.float32)
+        t0 = time.perf_counter()
+        srv.infer(x)
+        cold = time.perf_counter() - t0
+        hot = []
+        for _ in range(reps):
+            x = rng.normal(size=(3, int(rng.integers(17, 32)),
+                                 int(rng.integers(17, 32))))
+            t0 = time.perf_counter()
+            srv.infer(x.astype(np.float32))
+            hot.append(time.perf_counter() - t0)
+        stats = srv.stats()
+        srv.close()
+
+        # disk tier: new server, same cache dir -> no solve, only compile
+        srv2 = PlanServer(lambda s: conv_tower(s, depth=2, width=8),
+                          AnalyticCostModel(),
+                          policy=BucketPolicy(min_hw=8, max_hw=64),
+                          cache_dir=d, lru_capacity=4)
+        t0 = time.perf_counter()
+        srv2.infer(rng.normal(size=(3, 20, 20)).astype(np.float32))
+        disk_warm = time.perf_counter() - t0
+        assert srv2.stats()["solves"] == 0
+        srv2.close()
+
+    return {
+        "request_cold_ms": cold * 1e3,
+        "request_hot_ms": statistics.median(hot) * 1e3,
+        "request_disk_warm_ms": disk_warm * 1e3,
+        "cold_over_hot": cold / max(statistics.median(hot), 1e-12),
+        "counters": {k: v for k, v in stats.items()
+                     if isinstance(v, (int, float))},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cases", type=int, default=20,
+                    help="solver perturbation cases")
+    ap.add_argument("--reps", type=int, default=8,
+                    help="hot-path request repetitions")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    result = {
+        "benchmark": "plan_cache",
+        "solver": bench_solver(args.cases, args.seed),
+        "server": bench_server(args.reps, args.seed),
+    }
+    doc = json.dumps(result, indent=2)
+    print(doc)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    (out / "plan_cache.json").write_text(doc)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ Two interchangeable implementations of the paper's §3.1 cost stage:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import pathlib
@@ -32,7 +33,12 @@ from .layouts import LAYOUT_BY_NAME, DTGraph, default_dt_graph
 from .primitives import Primitive, convert_layout
 from .scenario import Scenario
 
-__all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel"]
+__all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
+           "COST_MODEL_SCHEMA"]
+
+#: bump when the *meaning* of costs changes (units, conventions, embedding)
+#: — persisted plan caches keyed on older schemas are invalidated.
+COST_MODEL_SCHEMA = 1
 
 
 class CostModel:
@@ -43,6 +49,27 @@ class CostModel:
 
     def dt_graph(self) -> DTGraph:
         raise NotImplementedError
+
+    # -------------------------------------------------------------
+    def version(self) -> str:
+        """Cache-version fingerprint of this cost model.
+
+        Any change that could alter a primitive's cost (model class,
+        hardware spec, schema) must change this string: the serving plan
+        cache (repro/serving/plan_cache.py) keys persisted PBQP solutions
+        on it, so a stale cost model can never serve a stale plan.
+        """
+        return _digest(f"schema{COST_MODEL_SCHEMA}", type(self).__name__,
+                       self._version_fields())
+
+    def _version_fields(self) -> str:
+        """Subclass hook: stringify everything costs depend on."""
+        return ""
+
+
+def _digest(*parts: str) -> str:
+    h = hashlib.sha256("|".join(parts).encode()).hexdigest()[:16]
+    return h
 
 
 # ----------------------------------------------------------------------
@@ -92,6 +119,17 @@ class ProfiledCostModel(CostModel):
     def flush(self):
         if self._dirty:
             self._save()
+
+    def _version_fields(self) -> str:
+        # Profiled numbers ARE the cost model: hash the measurements
+        # themselves, so re-profiling (new host, deleted cache) can never
+        # serve plans that were optimal only for the old numbers.  The
+        # price is that refining the profile with new entries also
+        # invalidates — a re-solve per bucket, which is milliseconds.
+        content = hashlib.sha256(
+            json.dumps(sorted(self._cache.items())).encode()).hexdigest()[:16]
+        return (f"profile={content}|reps={self.reps}"
+                f"|min_time={self.min_time}|excl={sorted(self.exclude_tags)}")
 
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
         if any(t in prim.tags for t in self.exclude_tags):
@@ -182,6 +220,12 @@ class AnalyticCostModel(CostModel):
                  include_tpu_only: bool = False):
         self.spec = spec
         self.include_tpu_only = include_tpu_only
+
+    def _version_fields(self) -> str:
+        s = self.spec
+        eff = ",".join(f"{k}={v}" for k, v in sorted(s.family_eff.items()))
+        return (f"spec={s.name}|flops={s.peak_flops}|bw={s.mem_bw}|{eff}"
+                f"|tpu={self.include_tpu_only}")
 
     def _alg_flops_bytes(self, prim: Primitive, scn: Scenario):
         el = 4  # f32

@@ -8,6 +8,7 @@ PBQP domain is the set of data layouts they accept.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -101,6 +102,24 @@ class Net:
     def outputs(self) -> List[str]:
         consumed = {s for s, _ in self.edges()}
         return [n for n in self._order if n not in consumed]
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the graph: topology, scenarios, op kinds,
+        accepted layouts and shapes.  Two nets with the same fingerprint
+        build byte-identical PBQP instances under the same cost model, so
+        the serving plan cache uses this as part of its key."""
+        h = hashlib.sha256()
+        for nid in self._order:
+            n = self.nodes[nid]
+            parts = [nid, n.kind, ",".join(n.inputs),
+                     "x".join(map(str, n.out_shape))]
+            if n.scn is not None:
+                parts.append(n.scn.key())
+            if n.op is not None:
+                parts.append(n.op.name)
+                parts.append(",".join(n.op.layouts))
+            h.update(("|".join(parts) + "\n").encode())
+        return h.hexdigest()[:16]
 
     def init_params(self, seed: int = 0) -> Dict[str, Dict[str, np.ndarray]]:
         """He-initialised raw weights per node (logical layouts)."""

@@ -46,6 +46,7 @@ __all__ = [
     "Solution",
     "Infeasible",
     "solve",
+    "solve_warm",
     "brute_force",
 ]
 
@@ -111,6 +112,28 @@ class PBQP:
         else:
             self._edges[key] = mat.copy()
 
+    def set_node_cost(self, u: Hashable, costs: Sequence[float]) -> None:
+        """Replace node ``u``'s cost vector in place (same domain size).
+
+        This is the mutation hook of the incremental re-solve workflow:
+        neighbouring serving buckets share graph structure and differ only
+        in a subset of node cost vectors, so callers update those vectors
+        and re-solve with :func:`solve_warm`.
+        """
+        c = np.asarray(costs, dtype=np.float64)
+        if u not in self._costs:
+            raise KeyError(f"unknown node {u!r}")
+        if c.shape != self._costs[u].shape:
+            raise ValueError(
+                f"node {u!r}: new cost shape {c.shape} != {self._costs[u].shape}")
+        self._costs[u] = c.copy()
+
+    def copy(self) -> "PBQP":
+        new = PBQP()
+        new._costs = {u: c.copy() for u, c in self._costs.items()}
+        new._edges = {k: M.copy() for k, M in self._edges.items()}
+        return new
+
     @staticmethod
     def _key_lt(u, v) -> bool:
         return str((type(u).__name__, u)) < str((type(v).__name__, v))
@@ -147,6 +170,10 @@ class PBQP:
     # ------------------------------------------------------------------
     def solve(self, exact: bool = True, bb_budget: int = 200_000) -> Solution:
         return solve(self, exact=exact, bb_budget=bb_budget)
+
+    def solve_warm(self, warm: Dict[Hashable, int], *, exact: bool = True,
+                   bb_budget: int = 200_000) -> Solution:
+        return solve_warm(self, warm, exact=exact, bb_budget=bb_budget)
 
 
 # ----------------------------------------------------------------------
@@ -193,7 +220,8 @@ class _Graph:
                     del self.adj[v][u]
 
 
-def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000) -> Solution:
+def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000,
+          upper_bound: Optional[float] = None) -> Solution:
     """Solve a PBQP instance.
 
     exact=True attempts an exact solve: RI/RII reductions are always
@@ -201,6 +229,12 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000) -> Solution:
     branch-and-bound with a node budget.  If the budget is exhausted the
     solver falls back to the RN heuristic for the remaining component and
     flags the solution as non-optimal.
+
+    ``upper_bound`` is an optional *achievable* total-cost bound (e.g. the
+    cost of a known feasible assignment).  Branch-and-bound prunes any
+    sub-problem whose admissible lower bound strictly exceeds it, which is
+    optimality preserving: the branch containing an optimum has a lower
+    bound <= optimum <= upper_bound and thus survives.
     """
     g = _Graph(pb)
     g.prune_trivial_edges()
@@ -242,7 +276,7 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000) -> Solution:
     while g.costs:
         # All remaining nodes have degree >= 3.
         if exact and budget[0] > 0:
-            ok = _branch_and_bound(g, trail, stats, budget)
+            ok = _branch_and_bound(g, trail, stats, budget, upper_bound)
             if not ok:
                 optimal = False
                 _rn(g, trail, stats)
@@ -261,6 +295,35 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000) -> Solution:
     if not np.isfinite(cost):
         raise Infeasible("optimal assignment has infinite cost")
     return Solution(cost=cost, assignment=assignment, optimal=optimal, stats=stats)
+
+
+def solve_warm(pb: PBQP, warm: Optional[Dict[Hashable, int]], *,
+               exact: bool = True, bb_budget: int = 200_000) -> Solution:
+    """Incremental re-solve seeded by a previous solution.
+
+    ``warm`` is a (possibly stale) full assignment — typically the optimum
+    of a neighbouring instance that shares this instance's graph but had
+    different node cost vectors.  Its cost *on this instance* is a valid
+    achievable upper bound, so branch-and-bound starts with a tight
+    incumbent instead of infinity and prunes most of the search tree.  The
+    reductions (R0/RI/RII) and the bound-pruning are all optimality
+    preserving, so the result is exactly as optimal as a fresh
+    ``solve(exact=True)`` (verified bit-identical-cost in
+    tests/test_warm_start.py).
+
+    An invalid or infeasible warm assignment silently degrades to a cold
+    solve — warm starting is a pure acceleration, never a correctness
+    hazard.  ``stats['WARM']`` records whether the bound was usable.
+    """
+    ub: Optional[float] = None
+    if warm is not None and set(warm) == set(pb._costs):
+        if all(0 <= warm[u] < pb.domain(u) for u in warm):
+            cand = pb.evaluate(warm)
+            if np.isfinite(cand):
+                ub = cand
+    sol = solve(pb, exact=exact, bb_budget=bb_budget, upper_bound=ub)
+    sol.stats["WARM"] = int(ub is not None)
+    return sol
 
 
 def _r0(g: _Graph, u, trail, stats) -> None:
@@ -344,12 +407,15 @@ def _lower_bound(g: _Graph) -> float:
     return lb
 
 
-def _branch_and_bound(g: _Graph, trail, stats, budget) -> bool:
+def _branch_and_bound(g: _Graph, trail, stats, budget,
+                      ub: Optional[float] = None) -> bool:
     """Exactly resolve ONE degree->=3 node by enumerating its domain.
 
     For each choice we recursively solve the reduced sub-problem (full
     solver recursion on a copy).  Returns False if the budget is exhausted
-    (caller falls back to RN).
+    (caller falls back to RN).  ``ub`` is an optional achievable global
+    upper bound (warm start); sub-problems with lower bound > ub are
+    pruned without losing any optimum.
     """
     # Pick the highest-degree node with the smallest domain: cheap to
     # enumerate, high simplification payoff.
@@ -373,11 +439,16 @@ def _branch_and_bound(g: _Graph, trail, stats, budget) -> bool:
         for v, M in list(sub.adj[u].items()):
             sub.costs[v] = sub.costs[v] + M[i, :]
         sub.remove_node(u)
-        if _lower_bound(sub) >= best_cost:
+        lb = _lower_bound(sub)
+        # ub tolerance: lb and the warm cost are summed in different
+        # orders, so an exactly-optimal warm bound could otherwise prune
+        # the optimal branch by a rounding ulp (-> spurious Infeasible).
+        if lb >= best_cost or \
+                (ub is not None and lb > ub + 1e-9 * max(1.0, abs(ub))):
             continue
         sub_trail: List[Callable] = []
         sub_stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0}
-        ok = _solve_rec(sub, sub_trail, sub_stats, budget)
+        ok = _solve_rec(sub, sub_trail, sub_stats, budget, ub)
         if not ok:
             return False
         if sub.base < best_cost:
@@ -404,7 +475,8 @@ def _branch_and_bound(g: _Graph, trail, stats, budget) -> bool:
     return True
 
 
-def _solve_rec(g: _Graph, trail, stats, budget) -> bool:
+def _solve_rec(g: _Graph, trail, stats, budget,
+               ub: Optional[float] = None) -> bool:
     """Run reductions + B&B to completion on g (used inside B&B)."""
     def reduce_all():
         work = [u for u in g.costs if g.degree(u) <= 2]
@@ -433,7 +505,7 @@ def _solve_rec(g: _Graph, trail, stats, budget) -> bool:
     while g.costs:
         if budget[0] <= 0:
             return False
-        if not _branch_and_bound(g, trail, stats, budget):
+        if not _branch_and_bound(g, trail, stats, budget, ub):
             return False
         reduce_all()
     return True

@@ -19,7 +19,16 @@ from .layouts import LAYOUT_BY_NAME
 from .primitives import convert_layout
 from .selection import SelectionResult
 
-__all__ = ["compile_plan", "CompiledNet", "measure"]
+__all__ = ["compile_plan", "CompiledNet", "measure", "compile_count"]
+
+#: process-wide count of compile_plan() calls — executable construction is
+#: the expensive step the serving LRU exists to amortise, so tests and the
+#: plan-cache benchmark assert on this.
+_COMPILE_COUNT = 0
+
+
+def compile_count() -> int:
+    return _COMPILE_COUNT
 
 
 @dataclass
@@ -27,6 +36,7 @@ class CompiledNet:
     sel: SelectionResult
     fn: Callable                      # (x_chw, params) -> outputs dict
     params: Dict[str, Any]            # packed per-node parameters
+    build_s: float = 0.0              # wall time of weight packing + wiring
 
     def __call__(self, x_chw):
         return self.fn(jnp.asarray(x_chw), self.params)
@@ -41,6 +51,9 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     and per-layer profiled costs compose additively.  Letting XLA fuse
     across layers (True) breaks that additivity — useful as an extra
     baseline, but it is a different system than the paper's."""
+    global _COMPILE_COUNT
+    _COMPILE_COUNT += 1
+    t0 = time.perf_counter()
     net = sel.net
     packed: Dict[str, Any] = {}
     makers: Dict[str, Callable] = {}
@@ -86,7 +99,7 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         return outs
 
     fn = jax.jit(run) if jit else run
-    return CompiledNet(sel, fn, packed)
+    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0)
 
 
 def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,

@@ -32,7 +32,7 @@ from .scenario import Scenario
 
 __all__ = ["SelectionResult", "select_pbqp", "select_fixed",
            "select_sum2d", "select_local_optimal", "select_family_best",
-           "Choice"]
+           "Choice", "warm_assignment"]
 
 
 @dataclass(frozen=True)
@@ -137,11 +137,55 @@ def _legalize(net: Net, dt: DTGraph,
     return conversions
 
 
+def warm_assignment(prev: "SelectionResult",
+                    domains: Dict[str, List[Choice]]
+                    ) -> Optional[Dict[str, int]]:
+    """Map a previous selection onto new PBQP domains (warm start).
+
+    Neighbouring serving buckets share graph topology but have different
+    scenarios, so per-node domains may differ; choices are matched by
+    primitive name (conv nodes) / input layout (op nodes).  Nodes whose
+    previous choice no longer exists fall back to index 0 — the resulting
+    assignment is still feasible-or-infinite, and an infinite warm cost
+    simply disables the bound (see :func:`repro.core.pbqp.solve_warm`).
+    Returns None when the topologies do not line up at all.
+    """
+    asg: Dict[str, int] = {}
+    for nid, dom in domains.items():
+        pc = prev.choices.get(nid)
+        if pc is None:
+            return None
+        idx = 0
+        for i, ch in enumerate(dom):
+            if pc.primitive is None:
+                if ch.primitive is None and ch.l_in == pc.l_in:
+                    idx = i
+                    break
+            elif ch.primitive is not None and \
+                    ch.primitive.name == pc.primitive.name:
+                idx = i
+                break
+        asg[nid] = idx
+    return asg
+
+
 def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
-                families: Optional[Sequence[str]] = None) -> SelectionResult:
-    """The paper's approach: globally optimal primitive selection."""
+                families: Optional[Sequence[str]] = None,
+                warm_start: Optional["SelectionResult"] = None
+                ) -> SelectionResult:
+    """The paper's approach: globally optimal primitive selection.
+
+    ``warm_start`` seeds the branch-and-bound incumbent with a previous
+    :class:`SelectionResult` for a structurally-identical net (e.g. the
+    neighbouring scenario bucket in the serving plan cache) — same optimum,
+    typically far fewer branch-and-bound nodes.
+    """
     pb, domains, dt = _build(net, cost, families=families)
-    sol = pbqp.solve(pb, exact=exact)
+    if warm_start is not None:
+        warm = warm_assignment(warm_start, domains)
+        sol = pbqp.solve_warm(pb, warm, exact=exact)
+    else:
+        sol = pbqp.solve(pb, exact=exact)
     choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
     conversions = _legalize(net, dt, choices)
     return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,

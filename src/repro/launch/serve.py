@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --requests 8 --max-new 12
+
+With ``--vision-every N`` every Nth request carries a random image that
+is encoded into prompt tokens through the plan-cache serving subsystem
+(bucketed PBQP selection + compiled-executable reuse); plan-cache
+hit/miss/latency counters are printed at the end.  ``--plan-cache-dir``
+persists the PBQP plans across runs.
 """
 from __future__ import annotations
 
@@ -17,6 +23,11 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--vision-every", type=int, default=0,
+                    help="every Nth request carries an image (0: none)")
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="persist PBQP plans here (vision path)")
+    ap.add_argument("--image-tokens", type=int, default=4)
     args = ap.parse_args()
 
     import jax
@@ -29,15 +40,33 @@ def main():
 
     cfg = get_config(args.arch).scaled_down()
     params = init_params(cfg, jax.random.key(args.seed), jnp.float32)
+
+    plan_server = None
+    if args.vision_every > 0:
+        from ..core.costs import AnalyticCostModel
+        from ..serving import BucketPolicy, PlanServer, conv_tower
+        plan_server = PlanServer(
+            lambda s: conv_tower(s, depth=2, width=8),
+            AnalyticCostModel(),
+            policy=BucketPolicy(min_hw=8, max_hw=128),
+            cache_dir=args.plan_cache_dir, lru_capacity=4)
+
     loop = ServeLoop(cfg, params, max_batch=args.max_batch,
-                     max_seq=args.max_seq)
+                     max_seq=args.max_seq, plan_server=plan_server,
+                     image_tokens=args.image_tokens)
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(
-                        0, cfg.vocab,
-                        size=int(rng.integers(4, 24))).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
+    reqs = []
+    for i in range(args.requests):
+        pixels = None
+        if plan_server is not None and i % args.vision_every == 0:
+            hw = int(rng.integers(12, 40))
+            pixels = rng.normal(size=(3, hw, hw)).astype(np.float32)
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                size=int(rng.integers(4, 24)))
+            .astype(np.int32),
+            max_new_tokens=args.max_new, pixels=pixels))
     t0 = time.perf_counter()
     loop.run(reqs)
     dt = time.perf_counter() - t0
@@ -47,6 +76,17 @@ def main():
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens} "
               f"({r.latency_s*1e3:.0f} ms)")
+    if plan_server is not None:
+        s = plan_server.stats()
+        print("plan cache: "
+              f"{s['requests']} vision requests over {s['buckets']} buckets"
+              f" | solves={s['solves']} (warm={s['warm_solves']})"
+              f" compiles={s['compiles']}"
+              f" | plan hits={s['plan_hits']} exec hits={s['exec_hits']}"
+              f" | solve {s['solve_s']*1e3:.0f} ms"
+              f" compile {s['compile_s']*1e3:.0f} ms"
+              f" execute {s['execute_s']*1e3:.0f} ms")
+        plan_server.close()
 
 
 if __name__ == "__main__":

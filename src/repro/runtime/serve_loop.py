@@ -5,6 +5,16 @@ to ``max_batch`` active sequences, prefills new arrivals into free
 slots, and runs one fused decode step per tick for all active slots.
 Finished sequences (EOS or length budget) free their slot immediately —
 the slot-level continuous batching that production LM servers use.
+
+A request may additionally carry an image (``Request.pixels``, logical
+C x H x W).  When the loop is constructed with a :class:`~repro.serving.
+server.PlanServer`, the image is run through the server's
+PBQP-selected conv tower at admission time — bucket lookup, cached plan,
+cached executable — and the resulting feature vector is quantized into
+``image_tokens`` pseudo-tokens prepended to the prompt.  That is the
+bridge between the paper's primitive-selection machinery and the LM
+serving path: vision preprocessing rides the plan cache, so a hot bucket
+costs one executable call, not a PBQP solve + XLA compile.
 """
 from __future__ import annotations
 
@@ -29,6 +39,8 @@ class Request:
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
     eos_id: int = -1             # -1: never
+    #: optional image (C, H, W) handled by the loop's PlanServer
+    pixels: Optional[np.ndarray] = None
     # outputs
     tokens: List[int] = field(default_factory=list)
     done: bool = False
@@ -38,13 +50,16 @@ class Request:
 class ServeLoop:
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  max_seq: int = 128, plan: Optional[ShardingPlan] = None,
-                 rt: ModelRuntime = ModelRuntime()):
+                 rt: ModelRuntime = ModelRuntime(),
+                 plan_server=None, image_tokens: int = 4):
         self.cfg = cfg
         self.params = params
         self.plan = plan or ShardingPlan(mesh=None)
         self.rt = rt
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.plan_server = plan_server
+        self.image_tokens = image_tokens
         dtype = jax.tree.leaves(params)[0].dtype
         self.cache = init_cache(cfg, max_batch, max_seq, dtype)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -77,11 +92,35 @@ class ServeLoop:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _encode_pixels(self, req: Request):
+        """Vision-token bridge: conv-tower features -> prompt tokens.
+
+        The tower's top activations are quantized by rank: the indices of
+        the ``image_tokens`` largest features (mod vocab) become pseudo-
+        tokens.  Deterministic per image, so a repeated image yields a
+        repeated prefix — and the whole thing is one plan-cache lookup
+        once the image's bucket is hot."""
+        outs = self.plan_server.infer(req.pixels)
+        v = np.concatenate([np.asarray(o, np.float32).ravel()
+                            for o in outs.values()])
+        k = min(self.image_tokens, v.size)
+        toks = (np.argsort(v)[-k:][::-1] % self.cfg.vocab).astype(np.int32)
+        prompt = np.asarray(req.prompt, np.int32)
+        # a prompt that fit before must still fit with the vision prefix:
+        # drop the oldest text tokens, never the image tokens
+        budget = self.max_seq - req.max_new_tokens - 1 - k
+        if budget < len(prompt):
+            prompt = prompt[len(prompt) - max(budget, 0):]
+        req.prompt = np.concatenate([toks, prompt])
+        req.pixels = None
+
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 req._t0 = time.perf_counter()
+                if req.pixels is not None and self.plan_server is not None:
+                    self._encode_pixels(req)
                 t = len(req.prompt)
                 logits, cache1 = prefill(
                     self.cfg, self.params,

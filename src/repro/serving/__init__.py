@@ -1,0 +1,30 @@
+"""Plan-cache serving subsystem.
+
+Amortizes the two per-scenario costs the paper pays offline — the PBQP
+solve and kernel compilation — across a *stream* of request shapes:
+
+* :mod:`.bucketing`  — canonicalize shapes into a bounded bucket set;
+* :mod:`.plan_cache` — persistent selections + compiled-executable LRU;
+* :mod:`.server`     — the per-request :class:`PlanServer` dispatcher
+  (bucket -> cache lookup -> (miss) warm-started solve + compile ->
+  execute), with hit/miss/latency counters in :mod:`.metrics`;
+* :mod:`.towers`     — shape-parameterized demo nets for tests/examples.
+
+See the "Serving architecture" section of the README for the design.
+"""
+from .bucketing import BucketPolicy, bucket_key, bucket_shape
+from .metrics import ServingCounters
+from .plan_cache import (
+    LRU, PlanDiskCache, plan_key, selection_from_payload,
+    selection_to_payload,
+)
+from .server import PlanServer
+from .towers import conv_tower
+
+__all__ = [
+    "BucketPolicy", "bucket_key", "bucket_shape",
+    "ServingCounters",
+    "LRU", "PlanDiskCache", "plan_key",
+    "selection_from_payload", "selection_to_payload",
+    "PlanServer", "conv_tower",
+]

@@ -1,0 +1,84 @@
+"""Scenario bucketing: canonicalize a stream of request shapes.
+
+The paper solves primitive selection once, offline, for a fixed scenario
+tuple {C, H, W, delta, K, M}.  A server sees *arbitrary* input shapes; a
+separate PBQP solve + kernel compile per exact shape would make plan
+count (and XLA executable count) grow without bound.  Bucketing rounds
+every incoming (C, H, W) request shape up to a canonical bucket shape —
+by default to powers of two, clamped to a configurable range — so the
+set of distinct plans stays small and every request maps onto one.
+
+Rounding is always *up*: a request is embedded into its bucket by zero
+padding (never cropped), so the bucketed network dominates the request
+spatially.  A shape larger than ``max_*`` keeps its rounded value rather
+than being cropped — boundedness is a traffic assumption, correctness is
+not negotiable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+__all__ = ["BucketPolicy", "bucket_shape", "bucket_key"]
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+def _round_up(v: int, mode: str, step: int, lo: int, hi: int) -> int:
+    if mode == "exact":
+        return max(v, 1)
+    if mode == "pow2":
+        r = _next_pow2(max(v, lo))
+    elif mode == "linear":
+        r = -(-max(v, lo) // step) * step
+    else:
+        raise ValueError(f"unknown bucketing mode {mode!r}")
+    # clamp to the configured ceiling, but never below the request itself
+    return max(min(r, hi), v)
+
+
+@dataclass(frozen=True)
+class BucketPolicy:
+    """How request shapes collapse into buckets.
+
+    ``spatial`` / ``channel`` modes: ``"pow2"`` (round up to a power of
+    two — log-many buckets over any traffic), ``"linear"`` (round up to a
+    multiple of ``*_step``), ``"exact"`` (no rounding; one bucket per
+    distinct shape — plan count unbounded, useful for benchmarks).
+    """
+
+    spatial: str = "pow2"
+    channel: str = "pow2"
+    spatial_step: int = 32
+    channel_step: int = 16
+    min_hw: int = 8
+    max_hw: int = 512
+    min_c: int = 1
+    max_c: int = 1024
+
+    def bucket(self, shape_chw: Tuple[int, int, int]) -> Tuple[int, int, int]:
+        return bucket_shape(shape_chw, self)
+
+
+def bucket_shape(shape_chw: Tuple[int, int, int],
+                 policy: BucketPolicy) -> Tuple[int, int, int]:
+    """Canonical bucket shape (>= request in every dimension)."""
+    c, h, w = (int(v) for v in shape_chw)
+    if min(c, h, w) < 1:
+        raise ValueError(f"bad request shape {shape_chw}")
+    return (
+        _round_up(c, policy.channel, policy.channel_step,
+                  policy.min_c, policy.max_c),
+        _round_up(h, policy.spatial, policy.spatial_step,
+                  policy.min_hw, policy.max_hw),
+        _round_up(w, policy.spatial, policy.spatial_step,
+                  policy.min_hw, policy.max_hw),
+    )
+
+
+def bucket_key(bucket_chw: Tuple[int, int, int]) -> str:
+    """Human-readable stable key for a bucket (used in cache file names)."""
+    c, h, w = bucket_chw
+    return f"c{c}h{h}w{w}"

@@ -1,0 +1,54 @@
+"""Serving counters: hit/miss/latency accounting for the plan cache.
+
+One mutable :class:`ServingCounters` per :class:`~repro.serving.server.
+PlanServer`.  Everything the plan-cache benchmark and the acceptance
+tests assert on lives here — e.g. "two requests in the same bucket
+trigger exactly one PBQP solve and one compile" is
+``counters.solves == 1 and counters.compiles == 1``.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict
+
+__all__ = ["ServingCounters"]
+
+
+@dataclass
+class ServingCounters:
+    requests: int = 0
+    #: plan lookups that hit (memory or disk) vs required a PBQP solve
+    plan_mem_hits: int = 0
+    plan_disk_hits: int = 0
+    plan_misses: int = 0
+    #: compiled-executable LRU
+    exec_hits: int = 0
+    exec_misses: int = 0
+    exec_evictions: int = 0
+    #: solver / compiler work actually performed
+    solves: int = 0
+    warm_solves: int = 0          # of which seeded by a neighbouring bucket
+    compiles: int = 0
+    #: accumulated wall time (seconds)
+    solve_s: float = 0.0
+    compile_s: float = 0.0
+    execute_s: float = 0.0
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def add(self, **kw) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            d = {k: v for k, v in self.__dict__.items()
+                 if not k.startswith("_")}
+        d["plan_hits"] = d["plan_mem_hits"] + d["plan_disk_hits"]
+        total = d["plan_hits"] + d["plan_misses"]
+        d["plan_hit_rate"] = d["plan_hits"] / total if total else 0.0
+        total = d["exec_hits"] + d["exec_misses"]
+        d["exec_hit_rate"] = d["exec_hits"] / total if total else 0.0
+        return d

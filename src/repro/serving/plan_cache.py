@@ -1,0 +1,157 @@
+"""Persistent plan cache: PBQP selections on disk, executables in memory.
+
+Two tiers with very different economics:
+
+* **Disk tier** — a :class:`SelectionResult` is a few hundred bytes of
+  JSON (per-node primitive names + layouts + conversion chains).  It is
+  keyed by ``(net fingerprint, bucket key, cost-model version)`` hashed
+  into a file name, so a changed network, a different bucket, or a bumped
+  cost model each miss cleanly instead of serving a stale plan.
+
+* **Memory tier** — compiled executables (:class:`~repro.core.plan.
+  CompiledNet`) hold XLA programs and packed weights; they are *not*
+  serializable and are the expensive artifact.  A small LRU
+  (:class:`LRU`) bounds live executables while hot buckets stay resident.
+
+The JSON payload stores primitive *names*; deserialization resolves them
+against the live registry and fails loudly (``KeyError``) if a plan
+references a primitive that no longer exists — which is exactly the
+cost-model-version bump case the key is meant to prevent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.graph import Net
+from ..core.primitives import registry
+from ..core.selection import Choice, SelectionResult
+
+__all__ = ["PLAN_SCHEMA", "plan_key", "selection_to_payload",
+           "selection_from_payload", "PlanDiskCache", "LRU"]
+
+#: bump when the payload format below changes shape
+PLAN_SCHEMA = 1
+
+
+def plan_key(net_fingerprint: str, bucket_key: str,
+             cost_version: str) -> str:
+    """Cache key: every component that could change the optimal plan."""
+    raw = f"{PLAN_SCHEMA}|{net_fingerprint}|{bucket_key}|{cost_version}"
+    return hashlib.sha256(raw.encode()).hexdigest()[:24]
+
+
+# ----------------------------------------------------------------------
+# SelectionResult <-> JSON
+# ----------------------------------------------------------------------
+def selection_to_payload(sel: SelectionResult) -> Dict[str, Any]:
+    return {
+        "schema": PLAN_SCHEMA,
+        "choices": {
+            nid: [ch.primitive.name if ch.primitive else None,
+                  ch.l_in, ch.l_out]
+            for nid, ch in sel.choices.items()},
+        "conversions": [[src, dst, chain]
+                        for (src, dst), chain in sel.conversions.items()],
+        "predicted_cost": sel.predicted_cost,
+        "optimal": sel.optimal,
+        "strategy": sel.strategy,
+        "solver_stats": dict(sel.solver_stats),
+    }
+
+
+def selection_from_payload(payload: Dict[str, Any],
+                           net: Net) -> SelectionResult:
+    if payload.get("schema") != PLAN_SCHEMA:
+        raise ValueError(f"plan schema {payload.get('schema')} != "
+                         f"{PLAN_SCHEMA}")
+    by_name = {p.name: p for p in registry()}
+    choices: Dict[str, Choice] = {}
+    for nid, (pname, l_in, l_out) in payload["choices"].items():
+        prim = by_name[pname] if pname is not None else None
+        choices[nid] = Choice(prim, l_in, l_out)
+    conversions: Dict[Tuple[str, str], List[str]] = {
+        (src, dst): list(chain)
+        for src, dst, chain in payload["conversions"]}
+    return SelectionResult(
+        net=net, choices=choices, conversions=conversions,
+        predicted_cost=float(payload["predicted_cost"]),
+        optimal=bool(payload["optimal"]),
+        strategy=str(payload["strategy"]),
+        solver_stats={k: int(v)
+                      for k, v in payload["solver_stats"].items()})
+
+
+# ----------------------------------------------------------------------
+class PlanDiskCache:
+    """One JSON file per plan under ``root``; atomic writes."""
+
+    def __init__(self, root) -> None:
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> pathlib.Path:
+        return self.root / f"plan_{key}.json"
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        p = self._path(key)
+        if not p.exists():
+            self.misses += 1
+            return None
+        try:
+            payload = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return payload
+
+    def put(self, key: str, payload: Dict[str, Any]) -> None:
+        p = self._path(key)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload))
+        tmp.replace(p)
+
+    def __len__(self) -> int:
+        return len(list(self.root.glob("plan_*.json")))
+
+
+# ----------------------------------------------------------------------
+class LRU:
+    """Tiny ordered-dict LRU for compiled executables."""
+
+    def __init__(self, capacity: int) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._d: "OrderedDict[Any, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)

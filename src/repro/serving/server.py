@@ -1,0 +1,218 @@
+"""PlanServer: the per-request dispatcher of the serving subsystem.
+
+Request path (the bridge between ``core/selection.py`` and
+``runtime/serve_loop.py``)::
+
+    request shape --bucket--> bucket shape
+        --> compiled-executable LRU hit?     -> execute
+        --> persistent plan cache hit?       -> compile, execute
+        --> PBQP solve (warm-started from the nearest solved bucket),
+            persist plan, compile, execute
+
+Misses can be taken off the caller's thread with :meth:`PlanServer.
+prefetch` (async solve+compile); the synchronous :meth:`infer` is what
+the LM serving loop calls per request.  Cache bookkeeping (and the
+millisecond-scale PBQP solve) runs under one lock, but the expensive
+XLA compile + warm-up happens outside it behind a per-bucket future:
+hot-bucket requests never stall behind a cold bucket compiling, and
+concurrent requests racing into the same cold bucket still trigger
+exactly one solve and one compile (the acceptance property
+tests/test_serving.py pins down via the counters).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from threading import RLock
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core import plan as plan_mod
+from ..core.costs import CostModel
+from ..core.graph import Net
+from ..core.plan import CompiledNet, compile_plan
+from ..core.selection import SelectionResult, select_pbqp
+from .bucketing import BucketPolicy, bucket_key, bucket_shape
+from .metrics import ServingCounters
+from .plan_cache import (
+    LRU, PlanDiskCache, plan_key, selection_from_payload,
+    selection_to_payload,
+)
+
+__all__ = ["PlanServer"]
+
+Shape = Tuple[int, int, int]
+
+
+class PlanServer:
+    """Serve per-request primitive-selection plans and executables.
+
+    Parameters
+    ----------
+    net_builder:
+        ``(C, H, W) -> Net`` — must yield identical node ids across
+        shapes (see :mod:`repro.serving.towers`) so warm starts line up.
+    cost_model:
+        Prices primitives and layout transforms; its :meth:`~repro.core.
+        costs.CostModel.version` participates in the persistent cache key.
+    cache_dir:
+        Directory for the persistent plan cache; ``None`` disables the
+        disk tier (plans still cached in memory for the process lifetime).
+    lru_capacity:
+        Max live compiled executables.
+    """
+
+    def __init__(self, net_builder: Callable[[Shape], Net],
+                 cost_model: CostModel, *,
+                 policy: Optional[BucketPolicy] = None,
+                 cache_dir=None, lru_capacity: int = 8,
+                 exact: bool = True, params_seed: int = 0,
+                 jit: bool = True, max_workers: int = 2) -> None:
+        self.net_builder = net_builder
+        self.cost = cost_model
+        self.cost_version = cost_model.version()
+        self.policy = policy or BucketPolicy()
+        self.exact = exact
+        self.params_seed = params_seed
+        self.jit = jit
+        self.counters = ServingCounters()
+        self._plans: Dict[Shape, SelectionResult] = {}
+        self._compiled = LRU(lru_capacity)
+        self._building: Dict[Shape, Future] = {}
+        self._disk = PlanDiskCache(cache_dir) if cache_dir else None
+        self._lock = RLock()
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="planserver")
+
+    # -----------------------------------------------------------------
+    # plan tier
+    # -----------------------------------------------------------------
+    def plan_for(self, shape_chw: Shape) -> SelectionResult:
+        """Bucket the shape and return its (cached or fresh) selection."""
+        bshape = bucket_shape(shape_chw, self.policy)
+        with self._lock:
+            return self._plan_locked(bshape)
+
+    def _plan_locked(self, bshape: Shape) -> SelectionResult:
+        sel = self._plans.get(bshape)
+        if sel is not None:
+            self.counters.add(plan_mem_hits=1)
+            return sel
+        net = self.net_builder(bshape)
+        key = plan_key(net.fingerprint(), bucket_key(bshape),
+                       self.cost_version)
+        if self._disk is not None:
+            payload = self._disk.get(key)
+            if payload is not None:
+                try:
+                    sel = selection_from_payload(payload, net)
+                except (KeyError, ValueError):
+                    sel = None  # unknown primitive / schema: re-solve
+            if sel is not None:
+                self.counters.add(plan_disk_hits=1)
+                self._plans[bshape] = sel
+                return sel
+        self.counters.add(plan_misses=1)
+        warm = self._nearest_plan(bshape)
+        t0 = time.perf_counter()
+        sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm)
+        self.counters.add(solves=1, solve_s=time.perf_counter() - t0,
+                          warm_solves=int(sel.solver_stats.get("WARM", 0)))
+        self._plans[bshape] = sel
+        if self._disk is not None:
+            self._disk.put(key, selection_to_payload(sel))
+        return sel
+
+    def _nearest_plan(self, bshape: Shape) -> Optional[SelectionResult]:
+        """Closest already-solved bucket in log-shape space (warm start)."""
+        if not self._plans:
+            return None
+        def dist(other: Shape) -> float:
+            return sum(abs(np.log2(a / b)) for a, b in zip(bshape, other))
+        return self._plans[min(self._plans, key=dist)]
+
+    # -----------------------------------------------------------------
+    # executable tier
+    # -----------------------------------------------------------------
+    def compiled_for(self, shape_chw: Shape) -> CompiledNet:
+        bshape = bucket_shape(shape_chw, self.policy)
+        with self._lock:
+            cnet = self._compiled.get(bshape)
+            if cnet is not None:
+                self.counters.add(exec_hits=1)
+                return cnet
+            racing = self._building.get(bshape)
+            if racing is None:
+                fut = Future()
+                self._building[bshape] = fut
+                self.counters.add(exec_misses=1)
+        if racing is not None:
+            # another thread is building this bucket: wait, don't duplicate
+            return racing.result()
+        try:
+            with self._lock:
+                sel = self._plan_locked(bshape)
+            params = sel.net.init_params(self.params_seed)
+            t0 = time.perf_counter()
+            # XLA compile + warm-up outside the lock: hot buckets must
+            # not stall behind a cold bucket compiling
+            cnet = compile_plan(sel, params, jit=self.jit)
+            _block(cnet(np.zeros(bshape, np.float32)))
+            with self._lock:
+                ev0 = self._compiled.evictions
+                self._compiled.put(bshape, cnet)
+                self._building.pop(bshape, None)
+                self.counters.add(
+                    compiles=1, compile_s=time.perf_counter() - t0,
+                    exec_evictions=self._compiled.evictions - ev0)
+            fut.set_result(cnet)
+            return cnet
+        except BaseException as exc:
+            with self._lock:
+                self._building.pop(bshape, None)
+            fut.set_exception(exc)
+            raise
+
+    def prefetch(self, shape_chw: Shape) -> Future:
+        """Async solve+compile for a bucket (returns a Future[CompiledNet]).
+
+        Misses are resolved on the server's worker pool so the caller's
+        latency-sensitive loop never blocks on a cold bucket."""
+        return self._pool.submit(self.compiled_for, shape_chw)
+
+    # -----------------------------------------------------------------
+    # request path
+    # -----------------------------------------------------------------
+    def infer(self, x_chw: np.ndarray) -> Dict[str, np.ndarray]:
+        """Execute one request: bucket, pad, run, return output arrays."""
+        x = np.asarray(x_chw, np.float32)
+        if x.ndim != 3:
+            raise ValueError(f"expected (C, H, W) input, got {x.shape}")
+        cnet = self.compiled_for(x.shape)
+        bshape = bucket_shape(x.shape, self.policy)
+        pads = [(0, b - s) for b, s in zip(bshape, x.shape)]
+        xb = np.pad(x, pads)
+        t0 = time.perf_counter()
+        out = cnet(xb)
+        out = {nid: np.asarray(v) for nid, v in out.items()}
+        self.counters.add(requests=1,
+                          execute_s=time.perf_counter() - t0)
+        return out
+
+    # -----------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        d = self.counters.snapshot()
+        d["buckets"] = len(self._plans)
+        d["live_executables"] = len(self._compiled)
+        if self._disk is not None:
+            d["disk_plans"] = len(self._disk)
+        return d
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+def _block(outs) -> None:
+    import jax
+    jax.block_until_ready(outs)

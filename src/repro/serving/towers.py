@@ -1,0 +1,46 @@
+"""Shape-parameterized demo networks for the plan server.
+
+A :class:`~repro.serving.server.PlanServer` needs a *net builder*: a
+callable mapping a bucket shape (C, H, W) to a :class:`~repro.core.
+graph.Net`.  Any of the paper's networks work (``lambda s: vgg("A")``
+ignores the shape); these small towers are sized for tests, examples and
+the vision-token bridge in the LM serving loop, where compiling VGG per
+bucket would dominate the demo.
+
+Crucially, the builder must return the *same node ids* for every shape —
+that is what lets the server warm-start a new bucket's PBQP solve from a
+neighbouring bucket's optimum.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from ..core.graph import Net, fc, global_avgpool, maxpool, relu
+
+__all__ = ["conv_tower"]
+
+
+def conv_tower(shape_chw: Tuple[int, int, int], *, depth: int = 3,
+               width: int = 16, k: int = 3, features: int = 64) -> Net:
+    """A small conv/relu/pool tower ending in a feature vector.
+
+    Channel width doubles per stage; spatial size halves per stage.  For
+    inputs with ``min(h, w) >= 2**depth`` (guarantee it via the bucket
+    policy's ``min_hw``) node ids depend only on ``depth``, never on the
+    input shape, so selections for neighbouring buckets line up; smaller
+    inputs drop the trailing pools (and warm starts degrade to cold
+    solves, which is correct, just slower).
+    """
+    c, h, w = shape_chw
+    net = Net(f"tower{depth}w{width}")
+    x = net.input("data", (c, h, w))
+    for i in range(depth):
+        m = width << i
+        x = net.conv(f"conv{i}", x, k=k, m=m, pad=k // 2)
+        x = net.op(f"relu{i}", [x], relu())
+        _, ch, cw = net.nodes[x].out_shape
+        if min(ch, cw) >= 2:  # pool whenever legal (2x2, stride 2)
+            x = net.op(f"pool{i}", [x], maxpool(2, 2))
+    x = net.op("gap", [x], global_avgpool())
+    net.op("feat", [x], fc(features))
+    return net

@@ -1,7 +1,11 @@
 """Tests for layouts and the DT (data-layout transformation) graph."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install: property tests skip, units run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.layouts import (
     ALL_LAYOUTS, CHW, HWC, HCW, HWC8, DTGraph, default_dt_graph,

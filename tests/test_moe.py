@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal install: property tests skip, units run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_config
 from repro.models.moe import capacity, moe_defs, moe_ffn

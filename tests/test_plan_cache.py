@@ -1,0 +1,132 @@
+"""Plan-cache tests: hit/miss accounting, disk round-trip, invalidation."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.costs import (
+    CPU_SPEC, AnalyticCostModel, HardwareSpec, ProfiledCostModel,
+)
+from repro.core.selection import select_pbqp
+from repro.serving import (
+    LRU, PlanDiskCache, conv_tower, plan_key, selection_from_payload,
+    selection_to_payload,
+)
+
+CM = AnalyticCostModel()
+
+
+def _small_selection():
+    net = conv_tower((4, 16, 16), depth=2, width=8)
+    return net, select_pbqp(net, CM, exact=True)
+
+
+class TestSerialization:
+    def test_disk_round_trip(self, tmp_path):
+        net, sel = _small_selection()
+        cache = PlanDiskCache(tmp_path)
+        key = plan_key(net.fingerprint(), "c4h16w16", CM.version())
+        cache.put(key, selection_to_payload(sel))
+        back = selection_from_payload(cache.get(key), net)
+        assert back.predicted_cost == pytest.approx(sel.predicted_cost)
+        assert back.optimal == sel.optimal
+        assert back.strategy == sel.strategy
+        assert set(back.choices) == set(sel.choices)
+        for nid, ch in sel.choices.items():
+            b = back.choices[nid]
+            assert (ch.primitive.name if ch.primitive else None) == \
+                (b.primitive.name if b.primitive else None)
+            assert (ch.l_in, ch.l_out) == (b.l_in, b.l_out)
+        assert back.conversions == sel.conversions
+
+    def test_payload_is_json(self):
+        _, sel = _small_selection()
+        payload = selection_to_payload(sel)
+        json.dumps(payload)  # must be pure-JSON serializable
+
+    def test_unknown_primitive_rejected(self):
+        net, sel = _small_selection()
+        payload = selection_to_payload(sel)
+        nid = next(n for n, v in payload["choices"].items()
+                   if v[0] is not None)
+        payload["choices"][nid][0] = "no_such_primitive"
+        with pytest.raises(KeyError):
+            selection_from_payload(payload, net)
+
+    def test_schema_mismatch_rejected(self):
+        net, sel = _small_selection()
+        payload = selection_to_payload(sel)
+        payload["schema"] = -1
+        with pytest.raises(ValueError):
+            selection_from_payload(payload, net)
+
+
+class TestDiskCacheAccounting:
+    def test_hit_miss_counters(self, tmp_path):
+        cache = PlanDiskCache(tmp_path)
+        assert cache.get("abc") is None
+        assert (cache.hits, cache.misses) == (0, 1)
+        cache.put("abc", {"x": 1})
+        assert cache.get("abc") == {"x": 1}
+        assert (cache.hits, cache.misses) == (1, 1)
+        assert len(cache) == 1
+
+    def test_corrupt_file_is_a_miss(self, tmp_path):
+        cache = PlanDiskCache(tmp_path)
+        cache.put("abc", {"x": 1})
+        (tmp_path / "plan_abc.json").write_text("{not json")
+        assert cache.get("abc") is None
+        assert cache.misses == 1
+
+
+class TestKeyInvalidation:
+    def test_cost_model_version_changes_key(self):
+        """Bumping the cost model must invalidate persisted plans."""
+        net, _ = _small_selection()
+        fp, bk = net.fingerprint(), "c4h16w16"
+        base = plan_key(fp, bk, AnalyticCostModel().version())
+        other_spec = HardwareSpec(
+            name=CPU_SPEC.name, peak_flops=CPU_SPEC.peak_flops * 2,
+            mem_bw=CPU_SPEC.mem_bw, family_eff=dict(CPU_SPEC.family_eff))
+        assert plan_key(fp, bk, AnalyticCostModel(other_spec).version()) \
+            != base
+        assert plan_key(fp, bk, ProfiledCostModel(
+            cache_path="/tmp/x.json").version()) != base
+
+    def test_version_is_stable(self):
+        assert AnalyticCostModel().version() == \
+            AnalyticCostModel().version()
+
+    def test_net_fingerprint_tracks_shape_and_topology(self):
+        a = conv_tower((4, 16, 16), depth=2, width=8)
+        b = conv_tower((4, 16, 16), depth=2, width=8)
+        assert a.fingerprint() == b.fingerprint()
+        assert conv_tower((4, 32, 32), depth=2, width=8).fingerprint() \
+            != a.fingerprint()
+        assert conv_tower((4, 16, 16), depth=3, width=8).fingerprint() \
+            != a.fingerprint()
+
+    def test_bucket_changes_key(self):
+        net, _ = _small_selection()
+        v = CM.version()
+        assert plan_key(net.fingerprint(), "c4h16w16", v) != \
+            plan_key(net.fingerprint(), "c4h32w32", v)
+
+
+class TestLRU:
+    def test_hit_miss_eviction(self):
+        lru = LRU(2)
+        assert lru.get("a") is None
+        lru.put("a", 1)
+        lru.put("b", 2)
+        assert lru.get("a") == 1      # refreshes "a"
+        lru.put("c", 3)               # evicts "b" (least recent)
+        assert lru.get("b") is None
+        assert lru.get("a") == 1 and lru.get("c") == 3
+        assert lru.evictions == 1
+        assert (lru.hits, lru.misses) == (3, 2)
+        assert len(lru) == 2
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            LRU(0)

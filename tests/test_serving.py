@@ -1,0 +1,177 @@
+"""PlanServer round-trip and bucketing tests (acceptance criteria)."""
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.costs import AnalyticCostModel
+from repro.serving import (
+    BucketPolicy, PlanServer, bucket_key, bucket_shape, conv_tower,
+)
+
+CM = AnalyticCostModel()
+POLICY = BucketPolicy(min_hw=8, max_hw=64)
+
+
+def _server(tmp_path=None, **kw):
+    kw.setdefault("policy", POLICY)
+    kw.setdefault("lru_capacity", 4)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=8), CM,
+                      cache_dir=tmp_path, **kw)
+
+
+class TestBucketing:
+    def test_pow2_rounds_up(self):
+        assert bucket_shape((3, 20, 20), POLICY) == (4, 32, 32)
+        assert bucket_shape((4, 32, 32), POLICY) == (4, 32, 32)
+        assert bucket_shape((5, 33, 17), POLICY) == (8, 64, 32)
+
+    def test_clamps(self):
+        assert bucket_shape((1, 2, 2), POLICY) == (1, 8, 8)
+        # above the ceiling the request wins: round to the request, never crop
+        assert bucket_shape((3, 100, 100), POLICY) == (4, 100, 100)
+
+    def test_linear_mode(self):
+        p = BucketPolicy(spatial="linear", channel="linear",
+                         spatial_step=24, channel_step=4)
+        assert bucket_shape((3, 25, 49), p) == (4, 48, 72)
+
+    def test_exact_mode(self):
+        p = BucketPolicy(spatial="exact", channel="exact")
+        assert bucket_shape((3, 21, 37), p) == (3, 21, 37)
+
+    def test_bad_shape_rejected(self):
+        with pytest.raises(ValueError):
+            bucket_shape((0, 4, 4), POLICY)
+        with pytest.raises(ValueError):
+            bucket_shape((3, 4), POLICY)  # type: ignore[arg-type]
+
+    def test_bucket_key_stable(self):
+        assert bucket_key((4, 32, 32)) == "c4h32w32"
+
+
+class TestPlanServerRoundTrip:
+    def test_same_bucket_one_solve_one_compile(self):
+        """Acceptance: two requests in the same bucket trigger exactly one
+        PBQP solve and one compile, asserted via counters."""
+        srv = _server()
+        c0 = plan_mod.compile_count()
+        srv.infer(np.random.default_rng(0)
+                  .normal(size=(3, 20, 20)).astype(np.float32))
+        srv.infer(np.random.default_rng(1)
+                  .normal(size=(3, 24, 28)).astype(np.float32))
+        s = srv.stats()
+        assert s["requests"] == 2
+        assert s["solves"] == 1
+        assert s["compiles"] == 1
+        assert plan_mod.compile_count() - c0 == 1
+        assert s["exec_hits"] == 1 and s["exec_misses"] == 1
+        assert s["buckets"] == 1
+        srv.close()
+
+    def test_output_shape_independent_of_request_shape_in_bucket(self):
+        srv = _server()
+        o1 = srv.infer(np.zeros((3, 20, 20), np.float32))
+        o2 = srv.infer(np.zeros((3, 27, 31), np.float32))
+        assert {k: v.shape for k, v in o1.items()} == \
+            {k: v.shape for k, v in o2.items()}
+        srv.close()
+
+    def test_second_bucket_warm_starts(self):
+        # 20 -> bucket (4,32,32); 40 -> bucket (4,64,64): same topology,
+        # so the second solve is seeded by the first bucket's optimum
+        srv = _server()
+        srv.infer(np.zeros((3, 20, 20), np.float32))
+        srv.infer(np.zeros((3, 40, 40), np.float32))
+        s = srv.stats()
+        assert s["solves"] == 2
+        assert s["warm_solves"] == 1
+        assert s["buckets"] == 2
+        srv.close()
+
+    def test_disk_persistence_across_servers(self, tmp_path):
+        srv = _server(tmp_path)
+        srv.infer(np.zeros((3, 20, 20), np.float32))
+        assert srv.stats()["disk_plans"] == 1
+        srv.close()
+        # a new process-equivalent: fresh server, same cache dir
+        srv2 = _server(tmp_path)
+        srv2.infer(np.zeros((3, 18, 22), np.float32))  # same bucket
+        s = srv2.stats()
+        assert s["solves"] == 0
+        assert s["plan_disk_hits"] == 1
+        assert s["compiles"] == 1  # executables are not persistable
+        srv2.close()
+
+    def test_cost_version_bump_invalidates_disk(self, tmp_path):
+        srv = _server(tmp_path)
+        srv.infer(np.zeros((3, 20, 20), np.float32))
+        srv.close()
+        from repro.core.costs import TPU_V5E_SPEC
+        srv2 = PlanServer(lambda s: conv_tower(s, depth=2, width=8),
+                          AnalyticCostModel(TPU_V5E_SPEC),
+                          policy=POLICY, cache_dir=tmp_path)
+        srv2.plan_for((3, 20, 20))
+        s = srv2.stats()
+        assert s["plan_disk_hits"] == 0
+        assert s["solves"] == 1  # re-solved under the new cost model
+        srv2.close()
+
+    def test_lru_eviction_recompiles_but_reuses_plan(self):
+        srv = _server(lru_capacity=1)
+        srv.infer(np.zeros((3, 16, 16), np.float32))
+        srv.infer(np.zeros((3, 48, 48), np.float32))  # evicts bucket 1
+        srv.infer(np.zeros((3, 16, 16), np.float32))  # recompile, plan hit
+        s = srv.stats()
+        assert s["exec_evictions"] >= 1
+        assert s["compiles"] == 3
+        assert s["solves"] == 2          # plans survived the eviction
+        assert s["plan_mem_hits"] == 1
+        srv.close()
+
+    def test_prefetch_async(self):
+        srv = _server()
+        fut = srv.prefetch((3, 20, 20))
+        cnet = fut.result(timeout=120)
+        assert cnet is srv.compiled_for((3, 20, 20))  # now a hit
+        s = srv.stats()
+        assert s["solves"] == 1 and s["compiles"] == 1
+        srv.close()
+
+    def test_plan_predictions_are_finite_and_optimal(self):
+        srv = _server()
+        sel = srv.plan_for((3, 20, 20))
+        assert np.isfinite(sel.predicted_cost)
+        assert sel.optimal
+        srv.close()
+
+
+class TestServeLoopVisionBridge:
+    def test_pixels_become_prompt_tokens(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.runtime import Request, ServeLoop
+
+        cfg = get_config("tinyllama-1.1b").scaled_down(
+            n_layers=2, d_model=64, d_ff=128, vocab=256)
+        params = init_params(cfg, jax.random.key(0), jnp.float32)
+        srv = _server()
+        loop = ServeLoop(cfg, params, max_batch=2, max_seq=64,
+                         plan_server=srv, image_tokens=3)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=2,
+                        pixels=rng.normal(size=(3, 18, 18))
+                        .astype(np.float32))
+                for i in range(2)]
+        loop.run(reqs)
+        for r in reqs:
+            assert r.done and len(r.tokens) == 2
+            assert r.pixels is None
+            assert len(r.prompt) == 4 + 3  # vision tokens prepended
+            assert np.all(r.prompt[:3] < cfg.vocab)
+        s = srv.stats()
+        assert s["requests"] == 2 and s["solves"] == 1 \
+            and s["compiles"] == 1
+        srv.close()

@@ -1,0 +1,169 @@
+"""Warm-start (incremental) PBQP re-solve correctness.
+
+The serving subsystem re-solves a bucket's PBQP instance starting from a
+neighbouring bucket's optimum: the previous assignment's cost on the new
+instance seeds branch-and-bound as an achievable upper bound.  These are
+the acceptance-criteria tests: across randomized perturbations of node
+cost vectors, the warm solve must return exactly the fresh exact-solve
+optimum (bound pruning is optimality preserving), including under stale,
+invalid or infeasible warm assignments.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pbqp
+from repro.core.pbqp import PBQP, Infeasible, brute_force, solve, solve_warm
+
+N_CASES = 60  # acceptance criterion: >= 50 randomized perturbation cases
+
+
+def _random_instance(rng, n_lo=4, n_hi=7, inf_frac=0.1):
+    n = int(rng.integers(n_lo, n_hi + 1))
+    pb = PBQP()
+    doms = []
+    for i in range(n):
+        k = int(rng.integers(2, 4))
+        doms.append(k)
+        pb.add_node(i, rng.uniform(0, 100, size=k))
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < 0.55:
+                M = rng.choice([0.0, 1.0, 5.0, 25.0], size=(doms[i], doms[j]))
+                M = np.where(rng.random(M.shape) < inf_frac, np.inf, M)
+                pb.add_edge(i, j, M)
+    return pb, doms
+
+
+def _perturb(pb, doms, rng):
+    """Replace a random subset of node cost vectors (the bucket-shift)."""
+    nodes = pb.nodes
+    subset = rng.choice(len(nodes), size=max(1, len(nodes) // 2),
+                        replace=False)
+    for i in subset:
+        pb.set_node_cost(nodes[i], rng.uniform(0, 100, size=doms[i]))
+
+
+class TestWarmMatchesFresh:
+    def test_randomized_perturbations(self):
+        rng = np.random.default_rng(7)
+        checked = 0
+        while checked < N_CASES:
+            pb, doms = _random_instance(rng)
+            try:
+                prev = solve(pb, exact=True)
+            except Infeasible:
+                continue  # nothing to warm-start from
+            _perturb(pb, doms, rng)
+            try:
+                fresh = solve(pb, exact=True)
+            except Infeasible:
+                with pytest.raises(Infeasible):
+                    solve_warm(pb, prev.assignment, exact=True)
+                checked += 1
+                continue
+            warm = solve_warm(pb, prev.assignment, exact=True)
+            assert warm.optimal and fresh.optimal
+            assert warm.cost == pytest.approx(fresh.cost, abs=1e-9)
+            assert pb.evaluate(warm.assignment) == pytest.approx(warm.cost)
+            checked += 1
+        assert checked >= N_CASES
+
+    def test_warm_matches_brute_force_small(self):
+        rng = np.random.default_rng(11)
+        checked = 0
+        while checked < 25:
+            pb, doms = _random_instance(rng, n_lo=3, n_hi=5)
+            try:
+                prev = solve(pb, exact=True)
+            except Infeasible:
+                continue
+            _perturb(pb, doms, rng)
+            try:
+                bf = brute_force(pb)
+            except Infeasible:
+                continue
+            warm = solve_warm(pb, prev.assignment, exact=True)
+            assert warm.cost == pytest.approx(bf.cost, abs=1e-9)
+            checked += 1
+
+
+class TestWarmStartRobustness:
+    def _dense(self, rng, n=5, k=3):
+        """Dense instance: guaranteed to exercise branch-and-bound."""
+        pb = PBQP()
+        for i in range(n):
+            pb.add_node(i, rng.uniform(1, 100, size=k))
+        for i in range(n):
+            for j in range(i + 1, n):
+                pb.add_edge(i, j, rng.uniform(0, 50, size=(k, k)))
+        return pb
+
+    def test_warm_bound_recorded(self):
+        rng = np.random.default_rng(0)
+        pb = self._dense(rng)
+        prev = solve(pb, exact=True)
+        warm = solve_warm(pb, prev.assignment, exact=True)
+        assert warm.stats["WARM"] == 1
+        assert warm.cost == pytest.approx(prev.cost)
+
+    def test_identity_warm_start_prunes(self):
+        """Re-solving with its own optimum as bound must not search more
+        branch-and-bound nodes than the cold solve."""
+        rng = np.random.default_rng(3)
+        pb = self._dense(rng, n=6, k=3)
+        cold = solve(pb, exact=True)
+        warm = solve_warm(pb, cold.assignment, exact=True)
+        assert warm.cost == pytest.approx(cold.cost)
+        assert warm.stats["BB"] <= cold.stats["BB"]
+
+    def test_invalid_warm_assignment_degrades_to_cold(self):
+        rng = np.random.default_rng(1)
+        pb = self._dense(rng)
+        cold = solve(pb, exact=True)
+        for bad in (None, {}, {0: 0}, {i: 99 for i in pb.nodes}):
+            warm = solve_warm(pb, bad, exact=True)
+            assert warm.stats["WARM"] == 0
+            assert warm.cost == pytest.approx(cold.cost)
+
+    def test_infeasible_warm_cost_degrades_to_cold(self):
+        pb = PBQP()
+        pb.add_node("a", [0.0, 5.0])
+        pb.add_node("b", [0.0, 5.0])
+        pb.add_edge("a", "b", np.array([[np.inf, 0.0], [0.0, 0.0]]))
+        warm = solve_warm(pb, {"a": 0, "b": 0})  # inf-cost assignment
+        assert warm.stats["WARM"] == 0
+        assert warm.cost == pytest.approx(5.0)
+
+    def test_set_node_cost_validates(self):
+        pb = PBQP()
+        pb.add_node("a", [1.0, 2.0])
+        with pytest.raises(KeyError):
+            pb.set_node_cost("zzz", [1.0, 2.0])
+        with pytest.raises(ValueError):
+            pb.set_node_cost("a", [1.0, 2.0, 3.0])
+
+    def test_copy_is_independent(self):
+        pb = PBQP()
+        pb.add_node("a", [1.0, 2.0])
+        pb.add_node("b", [3.0, 4.0])
+        pb.add_edge("a", "b", np.eye(2))
+        cp = pb.copy()
+        cp.set_node_cost("a", [100.0, 200.0])
+        assert solve(pb).cost != solve(cp).cost
+
+
+class TestSelectionWarmStart:
+    def test_neighbouring_bucket_same_optimum(self):
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import select_pbqp
+        from repro.serving import conv_tower
+
+        cm = AnalyticCostModel()
+        net_a = conv_tower((4, 32, 32), depth=2, width=8)
+        net_b = conv_tower((4, 64, 64), depth=2, width=8)
+        prev = select_pbqp(net_a, cm, exact=True)
+        fresh = select_pbqp(net_b, cm, exact=True)
+        warm = select_pbqp(net_b, cm, exact=True, warm_start=prev)
+        assert warm.optimal and fresh.optimal
+        assert warm.predicted_cost == pytest.approx(fresh.predicted_cost)
+        assert warm.solver_stats.get("WARM") == 1
