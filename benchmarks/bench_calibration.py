@@ -1,0 +1,157 @@
+"""Calibration benchmark: analytic vs measured PBQP selection.
+
+Answers the two questions the calibration subsystem exists for, with
+real on-device measurements (not synthetic tables):
+
+1. **Selection deltas** — calibrate a HardwareProfile over the exact
+   scenario buckets of small serving towers, then solve the PBQP under
+   the analytic roofline and under the measured table.  Per network:
+   which conv nodes changed primitive, and what each model predicts the
+   network costs.  On any real machine the measured ranking diverges
+   from the roofline, so at least one network flips at least one node.
+
+2. **Recalibration invalidates cached plans** — serve through a
+   :class:`~repro.serving.server.PlanServer` backed by the measured
+   profile with a persistent plan-cache dir, then recalibrate (perturb
+   the table, as a re-sweep on drifted hardware would) and open a new
+   server on the *same* dir: the cost-model version key must miss, so
+   the second server re-solves instead of reusing the stale plan, while
+   an identical profile reuses it (zero solves).
+
+Emits one JSON document (also written to benchmarks/results/
+calibration.json):
+
+  PYTHONPATH=src python -m benchmarks.bench_calibration
+  PYTHONPATH=src python -m benchmarks.bench_calibration --reps 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+
+
+def _towers():
+    from repro.serving import conv_tower
+    return {
+        "tower_d1w16": lambda: conv_tower((8, 16, 16), depth=1, width=16),
+        "tower_d2w8": lambda: conv_tower((4, 32, 32), depth=2, width=8),
+    }
+
+
+def calibrate(reps: int, min_time: float, verbose: bool):
+    from repro.calibrate import HardwareProfile, plan_sweep, run_sweep, \
+        scenarios_from_net
+
+    scns = []
+    for build in _towers().values():
+        scns.extend(scenarios_from_net(build()))
+    items = plan_sweep(scns)
+    profile = HardwareProfile.new(reps=reps, min_time=min_time)
+
+    def progress(i, n, item, t):
+        if verbose:
+            print(f"  [{i + 1}/{n}] {item.label}: {t * 1e3:.3f} ms")
+
+    report = run_sweep(profile, items, progress=progress)
+    return profile, {"buckets": len(scns), **report}
+
+
+def selection_deltas(profile) -> dict:
+    from repro.calibrate import CalibratedCostModel
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.selection import select_pbqp
+
+    analytic = AnalyticCostModel()
+    out = {}
+    for name, build in _towers().items():
+        calibrated = CalibratedCostModel(profile, fallback=analytic)
+        net = build()
+        sa = select_pbqp(net, analytic)
+        sc = select_pbqp(net, calibrated)
+        deltas = []
+        for node in net.conv_nodes():
+            a = sa.choices[node.id].primitive.name
+            c = sc.choices[node.id].primitive.name
+            if a != c:
+                deltas.append({"node": node.id, "scenario": node.scn.key(),
+                               "analytic": a, "measured": c})
+        out[name] = {
+            "conv_nodes": len(net.conv_nodes()),
+            "changed_nodes": len(deltas),
+            "deltas": deltas,
+            "analytic_predicted_s": sa.predicted_cost,
+            "measured_predicted_s": sc.predicted_cost,
+            "cost_model_coverage": calibrated.coverage(),
+        }
+    return out
+
+
+def invalidation(profile) -> dict:
+    """Same cache dir, three servers: v1, v1 again, recalibrated v2."""
+    from repro.calibrate import CalibratedCostModel
+    from repro.serving import PlanServer, conv_tower
+
+    builder = lambda s: conv_tower(s, depth=2, width=8)
+    x = np.random.default_rng(0).normal(size=(4, 20, 20)).astype(np.float32)
+
+    def serve_once(prof):
+        srv = PlanServer(builder, CalibratedCostModel(prof),
+                         cache_dir=d, lru_capacity=2)
+        srv.infer(x)
+        stats = srv.stats()
+        srv.close()
+        return stats
+
+    with tempfile.TemporaryDirectory() as d:
+        cold = serve_once(profile)
+        warm = serve_once(profile)          # identical profile: disk hit
+        recal = profile.from_payload(profile.to_payload())
+        rng = np.random.default_rng(1)      # drifted re-measurement
+        recal.entries = {k: v * float(rng.uniform(0.5, 2.0))
+                         for k, v in recal.entries.items()}
+        fresh = serve_once(recal)
+
+    return {
+        "v1_version": CalibratedCostModel(profile).version(),
+        "v2_version": CalibratedCostModel(recal).version(),
+        "cold_solves": cold["solves"],
+        "same_profile_solves": warm["solves"],
+        "same_profile_disk_hits": warm["plan_disk_hits"],
+        "recalibrated_solves": fresh["solves"],
+        "recalibration_invalidates": fresh["solves"] > 0
+        and warm["solves"] == 0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--min-time", type=float, default=2e-3)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    profile, sweep_report = calibrate(args.reps, args.min_time, args.verbose)
+    result = {
+        "benchmark": "calibration",
+        "device": profile.device,
+        "profile_entries": len(profile),
+        "profile_content": profile.content_hash(),
+        "sweep": sweep_report,
+        "selection": selection_deltas(profile),
+        "invalidation": invalidation(profile),
+    }
+    result["any_network_changed"] = any(
+        n["changed_nodes"] > 0 for n in result["selection"].values())
+    doc = json.dumps(result, indent=2)
+    print(doc)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    (out / "calibration.json").write_text(doc)
+
+
+if __name__ == "__main__":
+    main()

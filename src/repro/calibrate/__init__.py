@@ -1,0 +1,39 @@
+"""Measured-cost calibration subsystem.
+
+Closes the loop between the kernels this repo ships and the PBQP
+decisions it makes: the paper's selections are only optimal with respect
+to *measured* per-primitive and per-transform costs, so this package
+sweeps every registered kernel variant across a grid of scenario
+buckets, times them on-device, and persists the results as versioned
+per-device cost tables that drive selection at serving time.
+
+* :mod:`.profile` — :class:`HardwareProfile`: the on-disk table, keyed
+  by device fingerprint + primitive-registry hash;
+* :mod:`.sweep`   — resumable plan/run split over (primitive, bucket)
+  pairs, layout transforms and standalone kernel microbenchmarks;
+* :mod:`.model`   — :class:`CalibratedCostModel`: serves measured
+  costs with analytic fallback for uncovered buckets, and folds the
+  profile's content hash into ``CostModel.version()`` so recalibration
+  invalidates the serving plan cache.
+
+Entry points: ``python -m repro.launch.calibrate`` (build a profile),
+``python -m repro.launch.serve --profile <path>`` (serve with it),
+``python -m benchmarks.bench_calibration`` (analytic-vs-measured
+selection deltas).  See docs/calibration.md.
+"""
+from .model import CalibratedCostModel
+from .profile import (
+    PROFILE_SCHEMA, HardwareProfile, device_fingerprint, registry_hash,
+)
+from .sweep import (
+    GRIDS, SweepItem, plan_sweep, run_sweep, scenario_grid,
+    scenarios_from_net,
+)
+
+__all__ = [
+    "CalibratedCostModel",
+    "PROFILE_SCHEMA", "HardwareProfile", "device_fingerprint",
+    "registry_hash",
+    "GRIDS", "SweepItem", "plan_sweep", "run_sweep", "scenario_grid",
+    "scenarios_from_net",
+]

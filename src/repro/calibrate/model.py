@@ -1,0 +1,124 @@
+"""CalibratedCostModel: serve measured costs, fall back analytically.
+
+The paper's headline result depends on *measured* per-primitive and
+per-transform costs; the analytic roofline is only the "simple
+heuristic" it is compared against.  This model closes that gap for the
+serving path: costs come from a :class:`~repro.calibrate.profile.
+HardwareProfile` measured offline on the target device, and any
+(primitive, scenario) or transform the sweep did not cover falls back to
+a configurable analytic model — selection never fails just because
+coverage is partial.
+
+Scenario lookup goes through :func:`repro.serving.bucketing.
+bucket_scenario`: per-layer scenarios are canonicalized onto the same
+finite bucket grid the sweep measured, so one sweep prices every request
+shape the serving tier can produce (the sweep and the model must agree
+on the :class:`~repro.serving.bucketing.BucketPolicy`).
+
+``version()`` folds in the profile's content hash, the bucket policy and
+the fallback's own version: *any* recalibration — a new device, a new
+measurement, an edited table — changes the version string, and the
+serving plan cache (keyed on it) re-solves instead of serving plans that
+were optimal only for the old numbers.  docs/calibration.md walks
+through this invalidation chain end to end.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..core.costs import (
+    AnalyticCostModel, CostModel, prim_cost_key, transform_cost_key,
+)
+from ..core.layouts import transform_feasible
+from ..core.primitives import Primitive
+from ..core.scenario import Scenario
+from ..serving.bucketing import BucketPolicy, bucket_scenario, bucket_shape
+from .profile import HardwareProfile, device_fingerprint
+
+__all__ = ["CalibratedCostModel"]
+
+
+class CalibratedCostModel(CostModel):
+    """Measured cost tables with analytic fallback for uncovered buckets.
+
+    Parameters
+    ----------
+    profile:
+        The measured table (``HardwareProfile.load(path)``).
+    fallback:
+        Prices anything the profile does not cover; defaults to
+        :class:`~repro.core.costs.AnalyticCostModel`.
+    policy:
+        Bucket policy mapping scenarios onto the profile's grid; must
+        match the policy the sweep was planned with.
+    check_device:
+        When True (default), a profile measured on a different device
+        class than the current process raises ``ValueError`` — measured
+        numbers are only transferable when you say so (``check_device=
+        False``, the PolyDL-style cross-device transfer case).
+    exclude_tags:
+        Primitives carrying any of these tags are priced infinite, table
+        entry or not.  Defaults to ``("tpu-only",)`` unless the profile
+        was measured on a TPU — a CPU profile must never legitimize a
+        Pallas kernel (any CPU timing of one is interpret-mode noise).
+    """
+
+    def __init__(self, profile: HardwareProfile, *,
+                 fallback: Optional[CostModel] = None,
+                 policy: Optional[BucketPolicy] = None,
+                 check_device: bool = True,
+                 exclude_tags: Optional[Tuple[str, ...]] = None) -> None:
+        if check_device and profile.device != device_fingerprint():
+            raise ValueError(
+                f"profile measured on {profile.device!r} but this process "
+                f"runs on {device_fingerprint()!r}; pass check_device="
+                f"False to transfer it anyway")
+        self.profile = profile
+        self.fallback = fallback or AnalyticCostModel()
+        self.policy = policy or BucketPolicy()
+        if exclude_tags is None:
+            exclude_tags = () if profile.device.startswith("tpu") \
+                else ("tpu-only",)
+        self.exclude_tags = tuple(exclude_tags)
+        #: lookup accounting: how often the table actually served
+        self.table_hits = 0
+        self.fallback_hits = 0
+
+    # -----------------------------------------------------------------
+    def _version_fields(self) -> str:
+        return (f"profile={self.profile.content_hash()}"
+                f"|policy={self.policy!r}"
+                f"|excl={sorted(self.exclude_tags)}"
+                f"|fallback={self.fallback.version()}")
+
+    # -----------------------------------------------------------------
+    def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
+        if any(t in prim.tags for t in self.exclude_tags):
+            return float("inf")
+        b = bucket_scenario(scn, self.policy)
+        v = self.profile.get(prim_cost_key(prim.name, b))
+        if v is not None:
+            self.table_hits += 1
+            return v
+        self.fallback_hits += 1
+        return self.fallback.primitive_cost(prim, scn)
+
+    def transform_cost(self, src: str, dst: str,
+                       shape_chw: Tuple[int, int, int], dtype) -> float:
+        if not transform_feasible(src, dst, shape_chw):
+            return float("inf")
+        bshape = bucket_shape(shape_chw, self.policy)
+        v = self.profile.get(transform_cost_key(src, dst, bshape))
+        if v is not None:
+            self.table_hits += 1
+            return v
+        self.fallback_hits += 1
+        return self.fallback.transform_cost(src, dst, shape_chw, dtype)
+
+    # -----------------------------------------------------------------
+    def coverage(self) -> dict:
+        """Lookup accounting since construction (for logs/benchmarks)."""
+        total = self.table_hits + self.fallback_hits
+        return {"table_hits": self.table_hits,
+                "fallback_hits": self.fallback_hits,
+                "table_rate": self.table_hits / total if total else 0.0}

@@ -14,6 +14,17 @@ Two interchangeable implementations of the paper's §3.1 cost stage:
   the TPU Pallas primitives that cannot be meaningfully timed on CPU.
   The paper notes "simple heuristics might be almost as effective" —
   this is that heuristic, and the benchmarks compare both.
+
+A third implementation, :class:`~repro.calibrate.CalibratedCostModel`,
+serves costs from a persisted, versioned :class:`~repro.calibrate.
+HardwareProfile` built offline by the calibration sweep
+(``python -m repro.launch.calibrate``) and falls back to the analytic
+model for uncovered buckets.  It lives in :mod:`repro.calibrate` (which
+imports this module, never the reverse); the shared measurement
+discipline — :func:`time_callable`, :func:`measure_primitive`,
+:func:`measure_transform` and the cache key helpers — is defined here so
+both the online :class:`ProfiledCostModel` and the offline sweep time
+things identically.  See docs/calibration.md.
 """
 from __future__ import annotations
 
@@ -34,7 +45,8 @@ from .primitives import Primitive, convert_layout
 from .scenario import Scenario
 
 __all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
-           "COST_MODEL_SCHEMA"]
+           "COST_MODEL_SCHEMA", "time_callable", "measure_primitive",
+           "measure_transform", "prim_cost_key", "transform_cost_key"]
 
 #: bump when the *meaning* of costs changes (units, conventions, embedding)
 #: — persisted plan caches keyed on older schemas are invalidated.
@@ -47,8 +59,20 @@ class CostModel:
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
         raise NotImplementedError
 
-    def dt_graph(self) -> DTGraph:
+    def transform_cost(self, src: str, dst: str,
+                       shape_chw: Tuple[int, int, int], dtype) -> float:
         raise NotImplementedError
+
+    def dt_graph(self) -> DTGraph:
+        """The library's DT graph priced by this model's transform_cost."""
+        g = default_dt_graph()
+        out = DTGraph()
+        for (s, t) in g.direct_edges:
+            out.add_transform(
+                s, t,
+                lambda shape, dtype, s=s, t=t:
+                    self.transform_cost(s, t, shape, dtype))
+        return out
 
     # -------------------------------------------------------------
     def version(self) -> str:
@@ -73,10 +97,21 @@ def _digest(*parts: str) -> str:
 
 
 # ----------------------------------------------------------------------
-def _time_fn(fn, args, *, reps: int = 3, min_time: float = 5e-3) -> float:
-    """Median-of-reps wall time of a jit'd callable (seconds)."""
-    out = fn(*args)
-    jax.block_until_ready(out)  # compile + warm
+# measurement discipline (shared by ProfiledCostModel and repro.calibrate)
+# ----------------------------------------------------------------------
+def time_callable(fn, args, *, reps: int = 3, min_time: float = 5e-3,
+                  warmup: int = 1) -> float:
+    """Median-of-reps wall time of a jit'd callable (seconds).
+
+    ``warmup`` untimed calls absorb compilation and first-touch effects;
+    each of the ``reps`` timed repetitions then loops the call until at
+    least ``min_time`` seconds elapse (amortizing dispatch overhead for
+    microsecond-scale kernels) and records the mean per-call time.  The
+    median across repetitions is robust to one-off scheduling noise.
+    """
+    for _ in range(max(warmup, 1)):
+        out = fn(*args)
+    jax.block_until_ready(out)
     times = []
     for _ in range(reps):
         n = 0
@@ -88,6 +123,52 @@ def _time_fn(fn, args, *, reps: int = 3, min_time: float = 5e-3) -> float:
             el = time.perf_counter() - t0
         times.append(el / n)
     return float(np.median(times))
+
+
+#: backwards-compatible private alias (pre-calibration name)
+_time_fn = time_callable
+
+
+def prim_cost_key(name: str, scn: Scenario) -> str:
+    """Cache/profile entry key for one (primitive, scenario) pair."""
+    return f"prim::{name}::{scn.key()}"
+
+
+def transform_cost_key(src: str, dst: str,
+                       shape_chw: Tuple[int, int, int]) -> str:
+    """Cache/profile entry key for one direct layout transform."""
+    return f"dt::{src}->{dst}::{'x'.join(map(str, shape_chw))}"
+
+
+def measure_primitive(prim: Primitive, scn: Scenario, *, reps: int = 3,
+                      min_time: float = 5e-3) -> float:
+    """On-device wall time of one (primitive, scenario) pair (seconds).
+
+    Inputs/weights are synthesized at the scenario's real sizes, packed
+    once via ``prim.prepare`` (deployment-time work, excluded from the
+    measurement, as the paper ships pre-packed weights), and the jit'd
+    routine is timed under :func:`time_callable`'s warmup/median-of-reps
+    discipline.
+    """
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+    w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+    b = rng.normal(size=(scn.m,)).astype(np.float32)
+    packed = prim.prepare(scn, w, b)
+    xin = jnp.asarray(LAYOUT_BY_NAME[prim.l_in].to_memory(x))
+    fn = jax.jit(prim.make(scn))
+    return time_callable(fn, (xin, packed), reps=reps, min_time=min_time)
+
+
+def measure_transform(src: str, dst: str,
+                      shape_chw: Tuple[int, int, int], *, reps: int = 3,
+                      min_time: float = 5e-3) -> float:
+    """On-device wall time of one direct layout transform (seconds)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=shape_chw).astype(np.float32)
+    xin = jnp.asarray(LAYOUT_BY_NAME[src].to_memory(x))
+    fn = jax.jit(lambda a: convert_layout(a, src, dst))
+    return time_callable(fn, (xin,), reps=reps, min_time=min_time)
 
 
 class ProfiledCostModel(CostModel):
@@ -134,18 +215,11 @@ class ProfiledCostModel(CostModel):
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
         if any(t in prim.tags for t in self.exclude_tags):
             return float("inf")
-        key = f"prim::{prim.name}::{scn.key()}"
+        key = prim_cost_key(prim.name, scn)
         if key in self._cache:
             return self._cache[key]
-        rng = np.random.default_rng(0)
-        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
-        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
-        b = rng.normal(size=(scn.m,)).astype(np.float32)
-        packed = prim.prepare(scn, w, b)
-        xin = jnp.asarray(LAYOUT_BY_NAME[prim.l_in].to_memory(x))
-        fn = jax.jit(prim.make(scn))
-        t = _time_fn(fn, (xin, packed), reps=self.reps,
-                     min_time=self.min_time)
+        t = measure_primitive(prim, scn, reps=self.reps,
+                              min_time=self.min_time)
         if self.verbose:
             print(f"  profiled {prim.name} on {scn.key()}: {t*1e3:.3f} ms")
         self._cache[key] = t
@@ -159,29 +233,16 @@ class ProfiledCostModel(CostModel):
         from .layouts import transform_feasible
         if not transform_feasible(src, dst, shape_chw):
             return float("inf")
-        key = f"dt::{src}->{dst}::{'x'.join(map(str, shape_chw))}"
+        key = transform_cost_key(src, dst, shape_chw)
         if key in self._cache:
             return self._cache[key]
-        rng = np.random.default_rng(0)
-        x = rng.normal(size=shape_chw).astype(np.float32)
-        xin = jnp.asarray(LAYOUT_BY_NAME[src].to_memory(x))
-        fn = jax.jit(lambda a: convert_layout(a, src, dst))
-        t = _time_fn(fn, (xin,), reps=self.reps, min_time=self.min_time)
+        t = measure_transform(src, dst, shape_chw, reps=self.reps,
+                              min_time=self.min_time)
         self._cache[key] = t
         self._dirty += 1
         if self._dirty >= 20:
             self._save()
         return t
-
-    def dt_graph(self) -> DTGraph:
-        g = default_dt_graph()
-        out = DTGraph()
-        for (s, t) in g.direct_edges:
-            out.add_transform(
-                s, t,
-                lambda shape, dtype, s=s, t=t:
-                    self.transform_cost(s, t, shape, dtype))
-        return out
 
 
 # ----------------------------------------------------------------------
@@ -279,13 +340,3 @@ class AnalyticCostModel(CostModel):
             return float("inf")
         nbytes = 4 * int(np.prod(shape_chw))
         return 2 * nbytes / (0.25 * self.spec.mem_bw)
-
-    def dt_graph(self) -> DTGraph:
-        g = default_dt_graph()
-        out = DTGraph()
-        for (s, t) in g.direct_edges:
-            out.add_transform(
-                s, t,
-                lambda shape, dtype, s=s, t=t:
-                    self.transform_cost(s, t, shape, dtype))
-        return out

@@ -31,6 +31,9 @@ fully-infinite optimum as infeasibility and raises :class:`Infeasible`.
 The implementation is pure numpy — it runs in micro/milliseconds for
 DNN-sized graphs (the paper reports < 1s per network; we match that, see
 benchmarks/bench_solver.py).
+
+docs/solver.md walks through the reductions, the branch-and-bound
+pruning argument, and warm starting with a small worked example.
 """
 from __future__ import annotations
 

@@ -15,6 +15,11 @@ The embedding:
 the explicit shortest chain of conversion layers — the cost of which the
 optimum already accounts for (the paper's key point: pricing conversions
 *after* selection is what makes greedy/local strategies sub-optimal).
+
+docs/solver.md works a small instance through this embedding end to
+end; any :class:`~repro.core.costs.CostModel` can price it, including
+the measured tables of :class:`repro.calibrate.CalibratedCostModel`
+(docs/calibration.md).
 """
 from __future__ import annotations
 

@@ -4,6 +4,10 @@ Each kernel lives in its own subpackage with:
   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
   ops.py    — jit'd general wrapper (padding, batching)
   ref.py    — pure-jnp oracle used by the allclose tests
+  bench.py  — ``benchmark_entry(scn)``: the calibration sweep hook
+              (repro.calibrate.sweep) — returns a zero-arg builder
+              producing a ``(fn, args)`` timing closure at the
+              scenario's tensor sizes, or None when unsupported
 
 ``register_pallas_primitives`` plugs the convolution kernels into the
 paper's primitive registry as the ``pallas`` family; they are tagged

@@ -1,5 +1,6 @@
+from .bench import benchmark_entry
 from .kernel import im2col_gemm_pallas
 from .ops import conv_im2col
 from .ref import conv_im2col_ref
 
-__all__ = ["conv_im2col", "im2col_gemm_pallas", "conv_im2col_ref"]
+__all__ = ["benchmark_entry", "conv_im2col", "im2col_gemm_pallas", "conv_im2col_ref"]

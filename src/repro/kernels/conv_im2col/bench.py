@@ -1,0 +1,27 @@
+"""Calibration benchmark entry for the im2col Pallas-GEMM convolution."""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.scenario import Scenario
+
+
+def benchmark_entry(scn: Scenario):
+    """Zero-arg builder timing ``conv_im2col`` at this scenario, or None."""
+    if scn.h + 2 * scn.pad < scn.k or scn.w + 2 * scn.pad < scn.k:
+        return None
+
+    def build():
+        import jax.numpy as jnp
+
+        from .ops import conv_im2col
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=scn.in_shape_chw), jnp.float32)
+        w = jnp.asarray(rng.normal(size=scn.weight_shape) * 0.1,
+                        jnp.float32)
+        b = jnp.asarray(rng.normal(size=(scn.m,)), jnp.float32)
+        fn = lambda x, w, b: conv_im2col(x, w, b, stride=scn.stride,
+                                         pad=scn.pad)
+        return fn, (x, w, b)
+
+    return build

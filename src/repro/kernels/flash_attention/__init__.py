@@ -1,5 +1,6 @@
+from .bench import benchmark_entry
 from .kernel import flash_attention_pallas
 from .ops import flash_attention
 from .ref import attention_ref
 
-__all__ = ["flash_attention", "flash_attention_pallas", "attention_ref"]
+__all__ = ["benchmark_entry", "flash_attention", "flash_attention_pallas", "attention_ref"]

@@ -1,0 +1,35 @@
+"""Calibration benchmark entry for the Pallas flash-attention kernel.
+
+A convolution scenario induces an attention problem over its output
+pixels: sequence length ``OH*OW`` (each output position attends over the
+feature map, the vision-tower-into-LM case the serving loop exercises),
+4 heads, head dim 64.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.scenario import Scenario
+
+_HEADS = 4
+_HEAD_DIM = 64
+_MAX_SEQ = 1024
+
+
+def benchmark_entry(scn: Scenario):
+    """Zero-arg builder timing the scenario-induced attention."""
+    seq = min(scn.out_h * scn.out_w, _MAX_SEQ)
+    if seq < 1:
+        return None
+
+    def build():
+        import jax.numpy as jnp
+
+        from .ops import flash_attention
+        rng = np.random.default_rng(0)
+        shape = (1, _HEADS, seq, _HEAD_DIM)
+        q, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+                   for _ in range(3))
+        return flash_attention, (q, k, v)
+
+    return build

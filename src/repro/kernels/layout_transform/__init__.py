@@ -1,6 +1,7 @@
+from .bench import benchmark_entry
 from .kernel import chw_to_hwc_pallas, hwc_to_chw_pallas
 from .ops import chw_to_hwc, hwc_to_chw
 from .ref import chw_to_hwc_ref, hwc_to_chw_ref
 
-__all__ = ["chw_to_hwc", "hwc_to_chw", "chw_to_hwc_pallas",
+__all__ = ["benchmark_entry", "chw_to_hwc", "hwc_to_chw", "chw_to_hwc_pallas",
            "hwc_to_chw_pallas", "chw_to_hwc_ref", "hwc_to_chw_ref"]

@@ -1,5 +1,6 @@
+from .bench import benchmark_entry
 from .kernel import matmul_pallas
 from .ops import matmul
 from .ref import matmul_ref
 
-__all__ = ["matmul", "matmul_pallas", "matmul_ref"]
+__all__ = ["benchmark_entry", "matmul", "matmul_pallas", "matmul_ref"]

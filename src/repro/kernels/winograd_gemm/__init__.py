@@ -1,6 +1,7 @@
+from .bench import benchmark_entry
 from .kernel import winograd_bgemm_pallas
 from .ops import conv_winograd, prepare_kernel
 from .ref import bgemm_ref, conv_ref
 
-__all__ = ["winograd_bgemm_pallas", "conv_winograd", "prepare_kernel",
+__all__ = ["benchmark_entry", "winograd_bgemm_pallas", "conv_winograd", "prepare_kernel",
            "bgemm_ref", "conv_ref"]

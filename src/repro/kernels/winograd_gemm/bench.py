@@ -1,0 +1,33 @@
+"""Calibration benchmark entry for the Winograd Pallas-bGEMM convolution."""
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.scenario import Scenario
+
+
+def benchmark_entry(scn: Scenario):
+    """Zero-arg builder timing ``conv_winograd`` (F(2,3)), or None.
+
+    Winograd restrictions: K = 3, stride 1 (same predicate as the
+    registered ``pallas_wino_*`` primitives).
+    """
+    if scn.k != 3 or scn.stride != 1:
+        return None
+    if scn.h + 2 * scn.pad < scn.k or scn.w + 2 * scn.pad < scn.k:
+        return None
+
+    def build():
+        import jax.numpy as jnp
+
+        from .ops import conv_winograd, prepare_kernel
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=scn.in_shape_chw), jnp.float32)
+        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+        u = prepare_kernel(w, 2)  # packing is deployment-time, untimed
+        b = jnp.asarray(rng.normal(size=(scn.m,)), jnp.float32)
+        fn = lambda x, u, b: conv_winograd(x, u, b, m_=2, k=scn.k,
+                                           stride=1, pad=scn.pad)
+        return fn, (x, u, b)
+
+    return build

@@ -10,23 +10,35 @@ from typing import Dict
 
 import jax
 
-__all__ = ["make_production_mesh", "make_cpu_mesh", "mesh_shape_dict"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_cpu_mesh",
+           "mesh_shape_dict"]
+
+
+def make_mesh_compat(shape, axis_names):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist in newer
+    jax releases; on older ones every axis is implicitly Auto, which is
+    the only mode this repo uses — so fall back to the plain call.
+    """
+    try:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axis_names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256-chip single pod; 2x16x16 = 512-chip two-pod mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_cpu_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (fake) devices the test process has."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 def mesh_shape_dict(mesh) -> Dict[str, int]:

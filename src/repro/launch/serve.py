@@ -8,6 +8,12 @@ is encoded into prompt tokens through the plan-cache serving subsystem
 (bucketed PBQP selection + compiled-executable reuse); plan-cache
 hit/miss/latency counters are printed at the end.  ``--plan-cache-dir``
 persists the PBQP plans across runs.
+
+``--profile <path>`` prices the PBQP selection from a measured
+HardwareProfile (built by ``python -m repro.launch.calibrate``) instead
+of the analytic roofline; uncovered buckets fall back analytically, and
+a recalibrated profile automatically invalidates previously persisted
+plans through the cost-model version key (docs/calibration.md).
 """
 from __future__ import annotations
 
@@ -27,8 +33,14 @@ def main():
                     help="every Nth request carries an image (0: none)")
     ap.add_argument("--plan-cache-dir", default=None,
                     help="persist PBQP plans here (vision path)")
+    ap.add_argument("--profile", default=None,
+                    help="measured HardwareProfile JSON driving PBQP "
+                         "selection (see repro.launch.calibrate)")
     ap.add_argument("--image-tokens", type=int, default=4)
     args = ap.parse_args()
+    if args.profile and args.vision_every <= 0:
+        ap.error("--profile prices the vision plan path; it needs "
+                 "--vision-every > 0 to have any effect")
 
     import jax
     import jax.numpy as jnp
@@ -45,10 +57,17 @@ def main():
     if args.vision_every > 0:
         from ..core.costs import AnalyticCostModel
         from ..serving import BucketPolicy, PlanServer, conv_tower
+        policy = BucketPolicy(min_hw=8, max_hw=128)
+        cost_model = AnalyticCostModel()
+        if args.profile:
+            from ..calibrate import CalibratedCostModel, HardwareProfile
+            cost_model = CalibratedCostModel(
+                HardwareProfile.load(args.profile), fallback=cost_model,
+                policy=policy)
         plan_server = PlanServer(
             lambda s: conv_tower(s, depth=2, width=8),
-            AnalyticCostModel(),
-            policy=BucketPolicy(min_hw=8, max_hw=128),
+            cost_model,
+            policy=policy,
             cache_dir=args.plan_cache_dir, lru_capacity=4)
 
     loop = ServeLoop(cfg, params, max_batch=args.max_batch,
@@ -86,6 +105,11 @@ def main():
               f" | solve {s['solve_s']*1e3:.0f} ms"
               f" compile {s['compile_s']*1e3:.0f} ms"
               f" execute {s['execute_s']*1e3:.0f} ms")
+        if args.profile:
+            cov = cost_model.coverage()
+            print(f"calibrated costs: {cov['table_hits']} table hits, "
+                  f"{cov['fallback_hits']} analytic fallbacks "
+                  f"({cov['table_rate']:.0%} measured)")
         plan_server.close()
 
 

@@ -12,7 +12,9 @@ solve and kernel compilation — across a *stream* of request shapes:
 
 See the "Serving architecture" section of the README for the design.
 """
-from .bucketing import BucketPolicy, bucket_key, bucket_shape
+from .bucketing import (
+    BucketPolicy, bucket_key, bucket_scenario, bucket_shape, round_dim,
+)
 from .metrics import ServingCounters
 from .plan_cache import (
     LRU, PlanDiskCache, plan_key, selection_from_payload,
@@ -22,7 +24,8 @@ from .server import PlanServer
 from .towers import conv_tower
 
 __all__ = [
-    "BucketPolicy", "bucket_key", "bucket_shape",
+    "BucketPolicy", "bucket_key", "bucket_shape", "bucket_scenario",
+    "round_dim",
     "ServingCounters",
     "LRU", "PlanDiskCache", "plan_key",
     "selection_from_payload", "selection_to_payload",

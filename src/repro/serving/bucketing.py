@@ -19,7 +19,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Tuple
 
-__all__ = ["BucketPolicy", "bucket_shape", "bucket_key"]
+from ..core.scenario import Scenario
+
+__all__ = ["BucketPolicy", "bucket_shape", "bucket_key", "round_dim",
+           "bucket_scenario"]
 
 
 def _next_pow2(n: int) -> int:
@@ -82,3 +85,31 @@ def bucket_key(bucket_chw: Tuple[int, int, int]) -> str:
     """Human-readable stable key for a bucket (used in cache file names)."""
     c, h, w = bucket_chw
     return f"c{c}h{h}w{w}"
+
+
+def round_dim(v: int, mode: str, step: int, lo: int, hi: int) -> int:
+    """Round one dimension up under a bucketing mode (public helper).
+
+    Same semantics as the per-axis rounding inside :func:`bucket_shape`:
+    never below the request value, clamped to ``hi`` only when the
+    request itself fits under it.
+    """
+    return _round_up(v, mode, step, lo, hi)
+
+
+def bucket_scenario(scn: Scenario, policy: BucketPolicy) -> Scenario:
+    """Canonicalize a convolution scenario into its calibration bucket.
+
+    The spatial/channel input dimensions round up exactly like request
+    shapes (:func:`bucket_shape`); the output-channel count M rounds
+    under the channel mode.  Stride, kernel radix, padding and dtype are
+    preserved — they change which primitives even apply, so they are
+    bucket identity, not something to round.  Used by
+    :class:`repro.calibrate.CalibratedCostModel` to map arbitrary
+    per-layer scenarios onto the finite grid a
+    :class:`~repro.calibrate.HardwareProfile` was measured on.
+    """
+    c, h, w = bucket_shape(scn.in_shape_chw, policy)
+    m = round_dim(scn.m, policy.channel, policy.channel_step,
+                  policy.min_c, policy.max_c)
+    return scn.with_(c=c, h=h, w=w, m=m)

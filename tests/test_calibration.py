@@ -1,0 +1,216 @@
+"""Calibration subsystem tests (acceptance criteria of the subsystem):
+
+* HardwareProfile round-trips to disk byte-stably;
+* CalibratedCostModel serves measured buckets and falls back to the
+  analytic model for uncovered ones;
+* a recalibrated profile changes ``version()`` and therefore invalidates
+  previously persisted serving plans;
+* sweeps are resumable (covered keys are never re-measured).
+"""
+import numpy as np
+import pytest
+
+from repro.calibrate import (
+    CalibratedCostModel, HardwareProfile, device_fingerprint, plan_sweep,
+    registry_hash, run_sweep, scenario_grid, scenarios_from_net,
+)
+from repro.core.costs import (
+    AnalyticCostModel, prim_cost_key, time_callable, transform_cost_key,
+)
+from repro.core.primitives import primitives_for
+from repro.core.scenario import Scenario
+from repro.serving import BucketPolicy, PlanServer, bucket_scenario, \
+    conv_tower
+
+POLICY = BucketPolicy(min_hw=8, max_hw=64)
+SCN = Scenario(c=8, h=16, w=16, stride=1, k=3, m=16)
+
+
+def _profile(**entries):
+    p = HardwareProfile.new(reps=1, min_time=1e-4)
+    for k, v in entries.items():
+        p.put(k, v)
+    return p
+
+
+class TestProfile:
+    def test_round_trip(self, tmp_path):
+        p = _profile(**{prim_cost_key("sum2d", SCN): 1.25e-3,
+                        transform_cost_key("CHW", "HWC", (8, 16, 16)):
+                        3e-5})
+        path = tmp_path / "hw.json"
+        p.save(path)
+        q = HardwareProfile.load(path)
+        assert q.entries == p.entries
+        assert (q.device, q.registry) == (p.device, p.registry)
+        assert q.content_hash() == p.content_hash()
+        assert q.device == device_fingerprint()
+        assert q.registry == registry_hash()
+
+    def test_schema_mismatch_rejected(self, tmp_path):
+        p = _profile()
+        payload = p.to_payload()
+        payload["schema"] = 99
+        with pytest.raises(ValueError):
+            HardwareProfile.from_payload(payload)
+
+    def test_content_hash_tracks_entries(self):
+        a, b = _profile(), _profile()
+        assert a.content_hash() == b.content_hash()
+        a.put("prim::x::y", 1.0)
+        assert a.content_hash() != b.content_hash()
+        b.put("prim::x::y", 2.0)
+        assert a.content_hash() != b.content_hash()
+        b.put("prim::x::y", 1.0)
+        assert a.content_hash() == b.content_hash()
+
+
+class TestBucketScenario:
+    def test_rounds_up_pow2(self):
+        scn = Scenario(c=5, h=13, w=14, stride=2, k=3, m=12)
+        b = bucket_scenario(scn, POLICY)
+        assert (b.c, b.h, b.w, b.m) == (8, 16, 16, 16)
+        assert (b.stride, b.k, b.pad, b.dtype) == (2, 3, 1, "float32")
+
+    def test_fixpoint(self):
+        b = bucket_scenario(SCN, POLICY)
+        assert bucket_scenario(b, POLICY) == b
+
+
+class TestCalibratedModel:
+    def test_serves_table_for_covered_bucket(self):
+        prof = _profile(**{prim_cost_key("sum2d", SCN): 42e-3})
+        cm = CalibratedCostModel(prof, policy=POLICY)
+        sum2d = next(p for p in primitives_for(SCN) if p.name == "sum2d")
+        # a non-canonical scenario bucketing into the measured one
+        req = Scenario(c=5, h=13, w=14, stride=1, k=3, m=12)
+        assert cm.primitive_cost(sum2d, req) == 42e-3
+        assert cm.table_hits == 1 and cm.fallback_hits == 0
+
+    def test_falls_back_for_uncovered_bucket(self):
+        prof = _profile()
+        fallback = AnalyticCostModel()
+        cm = CalibratedCostModel(prof, fallback=fallback, policy=POLICY)
+        sum2d = next(p for p in primitives_for(SCN) if p.name == "sum2d")
+        assert cm.primitive_cost(sum2d, SCN) == \
+            fallback.primitive_cost(sum2d, SCN)
+        assert cm.fallback_hits == 1
+        assert cm.coverage()["table_rate"] == 0.0
+
+    def test_transform_cost_table_and_fallback(self):
+        shape = (8, 16, 16)
+        prof = _profile(**{transform_cost_key("CHW", "HWC", shape): 7e-5})
+        fallback = AnalyticCostModel()
+        cm = CalibratedCostModel(prof, fallback=fallback, policy=POLICY)
+        assert cm.transform_cost("CHW", "HWC", shape, np.float32) == 7e-5
+        assert cm.transform_cost("CHW", "HCW", shape, np.float32) == \
+            fallback.transform_cost("CHW", "HCW", shape, np.float32)
+        # blocked layout infeasible for C % 8 != 0, table or not
+        assert cm.transform_cost("HWC", "HWC8", (5, 16, 16),
+                                 np.float32) == float("inf")
+
+    def test_version_tracks_recalibration(self):
+        a = CalibratedCostModel(_profile(), policy=POLICY)
+        prof2 = _profile(**{prim_cost_key("sum2d", SCN): 1e-3})
+        b = CalibratedCostModel(prof2, policy=POLICY)
+        assert a.version() != b.version()
+        # and differs from the pure-analytic model's version
+        assert a.version() != AnalyticCostModel().version()
+
+    def test_tpu_only_guarded_even_when_table_poisoned(self):
+        """A CPU profile must never legitimize a Pallas kernel, even if
+        someone managed to store an (interpret-mode) timing for one."""
+        from repro.core.primitives import registry
+        pallas = next(p for p in registry() if "tpu-only" in p.tags)
+        prof = _profile(**{prim_cost_key(pallas.name, SCN): 1e-6})
+        cm = CalibratedCostModel(prof, policy=POLICY)
+        assert cm.primitive_cost(pallas, SCN) == float("inf")
+
+    def test_device_mismatch_rejected_unless_transfer(self):
+        prof = _profile()
+        prof.device = "tpu:TPU_v5e:n8"
+        with pytest.raises(ValueError):
+            CalibratedCostModel(prof)
+        cm = CalibratedCostModel(prof, check_device=False)
+        assert cm.profile.device == "tpu:TPU_v5e:n8"
+
+
+class TestSweep:
+    def test_plan_excludes_tpu_only_by_default(self):
+        items = plan_sweep([SCN], policy=POLICY)
+        assert not any("pallas" in it.label for it in items)
+        assert len({it.key for it in items}) == len(items)
+        kinds = {it.kind for it in items}
+        assert kinds == {"prim", "dt"}
+
+    def test_plan_kernels_adds_benchmark_entries(self):
+        items = plan_sweep([SCN], families=["direct"], exclude_tags=(),
+                           dt=False, kernels=True, policy=POLICY)
+        names = {it.key.split("::")[1] for it in items
+                 if it.kind == "kernel"}
+        assert {"conv_direct", "conv_im2col", "winograd_gemm", "matmul",
+                "flash_attention", "layout_transform"} <= names
+
+    def test_run_sweep_resumes_and_saves(self, tmp_path):
+        items = plan_sweep([SCN], families=["direct"], dt=False,
+                           policy=POLICY)
+        prof = HardwareProfile.new()
+        path = tmp_path / "hw.json"
+        calls = []
+
+        def stub(item):
+            calls.append(item.key)
+            return 1e-3
+
+        r1 = run_sweep(prof, items, save_path=path, save_every=2,
+                       max_entries=3, measure=stub)
+        assert r1 == {"measured": 3, "skipped": 0,
+                      "remaining": len(items) - 3}
+        assert path.exists() and len(HardwareProfile.load(path)) == 3
+        r2 = run_sweep(prof, items, save_path=path, measure=stub)
+        assert r2["skipped"] == 3 and r2["remaining"] == 0
+        # no key measured twice across the two runs
+        assert len(calls) == len(set(calls)) == len(items)
+
+    def test_scenario_sources(self):
+        grid = scenario_grid("tiny", policy=POLICY)
+        assert grid and all(bucket_scenario(s, POLICY) == s for s in grid)
+        net_scns = scenarios_from_net(conv_tower((8, 16, 16), depth=2,
+                                                 width=8), policy=POLICY)
+        assert len(net_scns) == len({s.key() for s in net_scns}) == 2
+
+
+class TestPlanCacheInvalidation:
+    """Recalibration must invalidate persisted PBQP plans end to end."""
+
+    def _serve(self, prof, cache_dir):
+        srv = PlanServer(lambda s: conv_tower(s, depth=1, width=8),
+                         CalibratedCostModel(prof, policy=POLICY),
+                         policy=POLICY, cache_dir=cache_dir,
+                         lru_capacity=2)
+        srv.infer(np.zeros((3, 10, 10), np.float32))
+        stats = srv.stats()
+        srv.close()
+        return stats
+
+    def test_same_profile_hits_new_profile_resolves(self, tmp_path):
+        prof = _profile(**{prim_cost_key("sum2d", SCN): 1e-3})
+        cold = self._serve(prof, tmp_path)
+        assert cold["solves"] == 1
+        warm = self._serve(prof, tmp_path)
+        assert warm["solves"] == 0 and warm["plan_disk_hits"] == 1
+        recal = _profile(**{prim_cost_key("sum2d", SCN): 2e-3})
+        fresh = self._serve(recal, tmp_path)
+        assert fresh["solves"] == 1 and fresh["plan_disk_hits"] == 0
+
+
+def test_time_callable_counts_and_medians():
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return np.asarray(x)
+
+    t = time_callable(fn, (1.0,), reps=3, min_time=1e-5, warmup=2)
+    assert t > 0.0
+    assert len(calls) >= 5  # 2 warmup + >= 1 per timed repetition

@@ -35,8 +35,8 @@ class TestShardedModel:
             cfg = get_config('tinyllama-1.1b').scaled_down(
                 n_layers=2, d_model=64, d_ff=128, vocab=512,
                 n_heads=4, n_kv_heads=2, head_dim=16)
-            mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((4, 2), ('data', 'model'))
             rules = MEGATRON_RULES.restrict(mesh.axis_names)
             plan = ShardingPlan(mesh=mesh, rules=rules)
             params = init_params(cfg, jax.random.key(0), jnp.float32)
@@ -69,8 +69,8 @@ class TestShardedModel:
                 n_layers=2, d_model=64, d_ff=128, vocab=512,
                 n_heads=4, n_kv_heads=2, head_dim=16, n_experts=4,
                 top_k=2)
-            mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((2, 4), ('data', 'model'))
             plan = ShardingPlan(mesh=mesh,
                                 rules=MEGATRON_RULES.restrict(
                                     mesh.axis_names))
@@ -96,8 +96,8 @@ class TestPipelineParallel:
             import jax, jax.numpy as jnp, numpy as np
             from repro.runtime import pipeline_apply
             S, n_micro, mb, d = 4, 8, 2, 16
-            mesh = jax.make_mesh((S,), ('stage',),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((S,), ('stage',))
             rng = np.random.default_rng(0)
             w = jnp.asarray(rng.normal(size=(S, d, d)) * 0.3, jnp.float32)
             x = jnp.asarray(rng.normal(size=(n_micro, mb, d)), jnp.float32)
@@ -123,8 +123,8 @@ class TestCompression:
             from jax.experimental.shard_map import shard_map
             from jax.sharding import PartitionSpec as P
             from repro.optim import compressed_psum_tree
-            mesh = jax.make_mesh((8,), ('pod',),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((8,), ('pod',))
             rng = np.random.default_rng(0)
             g = jnp.asarray(rng.normal(size=(8, 64, 32)), jnp.float32)
             def f(gl):
@@ -163,11 +163,10 @@ class TestElastic:
             from repro.models.sharding import MEGATRON_RULES
 
             def make_mesh(n):
-                import jax
+                from repro.launch.mesh import make_mesh_compat
                 d = max(n // 2, 1)
-                return jax.make_mesh((d, 2 if n >= 2 else 1),
-                    ('data', 'model'),
-                    axis_types=(jax.sharding.AxisType.Auto,)*2)
+                return make_mesh_compat((d, 2 if n >= 2 else 1),
+                                        ('data', 'model'))
 
             ec = ElasticController(make_mesh, lambda shape: MEGATRON_RULES)
             mesh1, plan1, ch1 = ec.current()

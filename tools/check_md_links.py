@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Markdown link checker for docs/ and README (no external deps).
+
+Checks every relative ``[text](target)`` link in the given markdown
+files/directories:
+
+* the target file must exist (relative to the containing file);
+* a ``#fragment`` must match a heading anchor in the target markdown
+  file (GitHub-style slug: lowercase, punctuation stripped, spaces to
+  dashes).
+
+External (``http(s)://``, ``mailto:``) links are not fetched.  Exits
+non-zero listing every broken link — CI's docs job and
+tests/test_docs.py both run this.
+
+  python tools/check_md_links.py docs README.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List
+
+#: inline links, skipping images; tolerates one level of nested parens
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor."""
+    s = re.sub(r"[`*_~]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path) -> set:
+    out = set()
+    in_code = False
+    for line in md.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def check_file(md: pathlib.Path) -> List[str]:
+    errors = []
+    text = md.read_text()
+    # strip fenced code blocks so example links aren't checked
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md if not path_part else \
+            (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link -> {target} "
+                          f"(no such file {dest})")
+            continue
+        if frag and dest.suffix == ".md":
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor -> {target} "
+                              f"(no heading #{frag} in {dest.name})")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    files: List[pathlib.Path] = []
+    for arg in argv or ["docs", "README.md"]:
+        p = pathlib.Path(arg)
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 2
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
