@@ -35,6 +35,8 @@ import pathlib
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, Optional
 
+from ..core.ioutil import atomic_write_text
+
 __all__ = ["PROFILE_SCHEMA", "HardwareProfile", "device_fingerprint",
            "registry_hash"]
 
@@ -143,12 +145,11 @@ class HardwareProfile:
                             for k, v in payload["entries"].items()})
 
     def save(self, path) -> None:
-        """Atomic write (tmp + rename), like every cache in this repo."""
+        """Atomic write with writer-unique tmp names, like every cache
+        in this repo (``core.ioutil.atomic_write_text``)."""
         p = pathlib.Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(self.to_payload(), indent=1))
-        tmp.replace(p)
+        atomic_write_text(p, json.dumps(self.to_payload(), indent=1))
 
     @classmethod
     def load(cls, path) -> "HardwareProfile":

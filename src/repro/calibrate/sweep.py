@@ -65,8 +65,16 @@ GRIDS: Dict[str, Tuple[Sequence[int], Sequence[int], Sequence[int],
 
 
 def scenario_grid(name: str = "default", *,
-                  policy: Optional[BucketPolicy] = None) -> List[Scenario]:
-    """The named bucket grid (deduplicated, canonicalized)."""
+                  policy: Optional[BucketPolicy] = None,
+                  batches: Sequence[int] = (1,)) -> List[Scenario]:
+    """The named bucket grid (deduplicated, canonicalized).
+
+    ``batches`` adds a minibatch axis: every spatial/channel bucket is
+    emitted once per batch bucket, so one sweep can price both the
+    latency (N=1) and throughput (N>1) serving paths — batched entries
+    time the vmapped whole-batch invocation (see
+    :func:`repro.core.costs.measure_primitive`).
+    """
     try:
         channels, sizes, ks, strides, m_mults = GRIDS[name]
     except KeyError:
@@ -78,25 +86,28 @@ def scenario_grid(name: str = "default", *,
             for k in ks:
                 for s in strides:
                     for mm in m_mults:
-                        scn = bucket_scenario(
-                            Scenario(c=c, h=hw, w=hw, stride=s, k=k,
-                                     m=c * mm), policy)
-                        if scn.key() not in seen:
-                            seen.add(scn.key())
-                            out.append(scn)
+                        for n in batches:
+                            scn = bucket_scenario(
+                                Scenario(c=c, h=hw, w=hw, stride=s, k=k,
+                                         m=c * mm, n=n), policy)
+                            if scn.key() not in seen:
+                                seen.add(scn.key())
+                                out.append(scn)
     return out
 
 
-def scenarios_from_net(net, *, policy: Optional[BucketPolicy] = None
-                       ) -> List[Scenario]:
-    """The bucketed scenarios of one network's conv layers."""
+def scenarios_from_net(net, *, policy: Optional[BucketPolicy] = None,
+                       batches: Sequence[int] = (1,)) -> List[Scenario]:
+    """The bucketed scenarios of one network's conv layers (one per
+    batch bucket in ``batches``)."""
     policy = policy or BucketPolicy()
     out, seen = [], set()
     for node in net.conv_nodes():
-        scn = bucket_scenario(node.scn, policy)
-        if scn.key() not in seen:
-            seen.add(scn.key())
-            out.append(scn)
+        for n in batches:
+            scn = bucket_scenario(node.scn.with_(n=n), policy)
+            if scn.key() not in seen:
+                seen.add(scn.key())
+                out.append(scn)
     return out
 
 
@@ -128,6 +139,13 @@ def plan_sweep(scenarios: Sequence[Scenario], *,
     CPU they run in Pallas interpret mode, whose timings price nothing
     real.  ``kernels`` adds the standalone kernel microbenchmarks (the
     CLI enables them on TPU, where the numbers are meaningful).
+
+    Batched scenarios (``scn.n > 1``) plan one *prim* measurement per
+    (primitive, scenario, batch-bucket) — the key carries the batch via
+    ``Scenario.key()``.  Layout-transform (*dt*) measurements stay
+    per-image: transform cost is linear in the batch, so the selection
+    layer scales the single-image number instead of re-measuring it at
+    every N.
     """
     policy = policy or BucketPolicy()
     items: List[SweepItem] = []

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .ioutil import atomic_write_text
 from .layouts import LAYOUT_BY_NAME, DTGraph, default_dt_graph
 from .primitives import Primitive, convert_layout
 from .scenario import Scenario
@@ -149,14 +150,26 @@ def measure_primitive(prim: Primitive, scn: Scenario, *, reps: int = 3,
     measurement, as the paper ships pre-packed weights), and the jit'd
     routine is timed under :func:`time_callable`'s warmup/median-of-reps
     discipline.
+
+    For ``scn.n > 1`` the primitive is vmapped over a leading batch axis
+    and the *whole batched invocation* is timed — the same execution
+    shape the batched serving path compiles (`core.plan.compile_plan`
+    with ``batch > 1``), so calibrated batched costs price exactly what
+    serving runs.
     """
     rng = np.random.default_rng(0)
-    x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
     w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
     b = rng.normal(size=(scn.m,)).astype(np.float32)
     packed = prim.prepare(scn, w, b)
-    xin = jnp.asarray(LAYOUT_BY_NAME[prim.l_in].to_memory(x))
-    fn = jax.jit(prim.make(scn))
+    layout = LAYOUT_BY_NAME[prim.l_in]
+    if scn.n == 1:
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        xin = jnp.asarray(layout.to_memory(x))
+        fn = jax.jit(prim.make(scn))
+    else:
+        xs = rng.normal(size=scn.in_shape_nchw).astype(np.float32)
+        xin = jnp.asarray(np.stack([layout.to_memory(x) for x in xs]))
+        fn = jax.jit(jax.vmap(prim.make(scn), in_axes=(0, None)))
     return time_callable(fn, (xin, packed), reps=reps, min_time=min_time)
 
 
@@ -192,9 +205,7 @@ class ProfiledCostModel(CostModel):
     # -------------------------------------------------------------
     def _save(self):
         self.cache_path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = self.cache_path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(self._cache))
-        tmp.replace(self.cache_path)
+        atomic_write_text(self.cache_path, json.dumps(self._cache))
         self._dirty = 0
 
     def flush(self):
@@ -253,6 +264,12 @@ class HardwareSpec:
     mem_bw: float              # B/s
     #: fraction of peak a family's GEMM-ish inner loop typically reaches
     family_eff: Dict[str, float] = field(default_factory=dict)
+    #: per-*invocation* setup seconds (buffer allocation, GEMM/FFT
+    #: planning, tile-transform dispatch) — paid once per call, so it
+    #: amortizes over the minibatch.  This is the term that makes the
+    #: optimal primitive flip with N: GEMM-based methods pay a large
+    #: setup that a batch spreads out, direct loops barely any.
+    family_setup: Dict[str, float] = field(default_factory=dict)
 
 
 CPU_SPEC = HardwareSpec(
@@ -261,6 +278,8 @@ CPU_SPEC = HardwareSpec(
     mem_bw=2.0e10,
     family_eff={"direct": 0.30, "im2": 0.55, "kn2": 0.50,
                 "winograd": 0.45, "fft": 0.35, "pallas": 0.0},
+    family_setup={"direct": 1e-6, "im2": 2e-5, "kn2": 1.5e-5,
+                  "winograd": 3e-5, "fft": 4e-5, "pallas": 0.0},
 )
 
 TPU_V5E_SPEC = HardwareSpec(
@@ -269,13 +288,22 @@ TPU_V5E_SPEC = HardwareSpec(
     mem_bw=819e9,
     family_eff={"direct": 0.45, "im2": 0.65, "kn2": 0.55,
                 "winograd": 0.55, "fft": 0.25, "pallas": 0.70},
+    family_setup={"direct": 2e-6, "im2": 5e-6, "kn2": 5e-6,
+                  "winograd": 8e-6, "fft": 1e-5, "pallas": 3e-6},
 )
 
 
 class AnalyticCostModel(CostModel):
-    """Roofline estimate: t = max(flops / (eff * peak), bytes / bw),
+    """Roofline estimate of one (possibly batched) invocation:
+
+        t = max(N*flops / (eff * peak), (N*act_bytes + w_bytes) / bw)
+            + setup
+
     with per-family algorithmic flop counts (Winograd/FFT discounts,
-    im2col Toeplitz traffic, ...)."""
+    im2col Toeplitz traffic, ...).  Activation traffic scales with the
+    minibatch N (= ``scn.n``); weight traffic and the per-invocation
+    ``setup`` do not — the two asymmetries that make primitive selection
+    batch-dependent."""
 
     def __init__(self, spec: HardwareSpec = CPU_SPEC,
                  include_tpu_only: bool = False):
@@ -285,15 +313,18 @@ class AnalyticCostModel(CostModel):
     def _version_fields(self) -> str:
         s = self.spec
         eff = ",".join(f"{k}={v}" for k, v in sorted(s.family_eff.items()))
+        setup = ",".join(f"{k}={v}"
+                         for k, v in sorted(s.family_setup.items()))
         return (f"spec={s.name}|flops={s.peak_flops}|bw={s.mem_bw}|{eff}"
-                f"|tpu={self.include_tpu_only}")
+                f"|setup={setup}|tpu={self.include_tpu_only}")
 
     def _alg_flops_bytes(self, prim: Primitive, scn: Scenario):
+        """(total flops, per-image activation bytes, weight bytes)."""
         el = 4  # f32
-        base_bytes = el * (np.prod(scn.in_shape_chw) +
-                           np.prod(scn.out_shape_chw) +
-                           np.prod(scn.weight_shape))
-        f = float(scn.flops)
+        act_bytes = el * (np.prod(scn.in_shape_chw) +
+                          np.prod(scn.out_shape_chw))
+        w_bytes = el * np.prod(scn.weight_shape)
+        f = float(scn.flops)  # whole batch (scn.macs includes n)
         fam = prim.family
         if fam == "winograd":
             # m^2 outputs per alpha^2 multiplies (2-D); 1-D variants save
@@ -302,28 +333,31 @@ class AnalyticCostModel(CostModel):
             a = m_ + scn.k - 1
             if "2d" in prim.name:
                 f = f * (a * a) / (m_ * m_ * scn.k * scn.k)
-                f += 2.0 * el * np.prod(scn.in_shape_chw)  # transforms
+                f += 2.0 * el * np.prod(scn.in_shape_nchw)  # transforms
             else:
                 f = f * a / (m_ * scn.k)
-            base_bytes *= 2.5  # tile workspace traffic
+            act_bytes *= 2.5  # tile workspace traffic
+            w_bytes *= 2.5
         elif fam == "fft":
             c, h, w = scn.in_shape_chw
-            n = (h + scn.k) * (w + scn.k)
-            f = 10.0 * n * np.log2(max(n, 2)) * (scn.c + scn.m) \
-                + 8.0 * n * scn.c * scn.m
-            base_bytes *= 3.0
+            npix = (h + scn.k) * (w + scn.k)
+            f = scn.n * (10.0 * npix * np.log2(max(npix, 2))
+                         * (scn.c + scn.m) + 8.0 * npix * scn.c * scn.m)
+            act_bytes *= 3.0
+            w_bytes *= 3.0
         elif fam == "im2":
-            base_bytes += el * scn.k * scn.k * np.prod(scn.in_shape_chw)
+            act_bytes += el * scn.k * scn.k * np.prod(scn.in_shape_chw)
             if "split" in prim.name:
-                base_bytes *= 0.6
+                act_bytes *= 0.6
+                w_bytes *= 0.6
         elif fam == "kn2":
-            base_bytes += el * scn.k * scn.k * np.prod(scn.out_shape_chw)
+            act_bytes += el * scn.k * scn.k * np.prod(scn.out_shape_chw)
         elif fam == "direct":
             if "sum2d" in prim.name:
                 f *= 4.0   # per-channel dispatch overhead
             if "shift" in prim.name:
-                base_bytes += el * scn.k * scn.k * np.prod(scn.out_shape_chw)
-        return f, float(base_bytes)
+                act_bytes += el * scn.k * scn.k * np.prod(scn.out_shape_chw)
+        return f, float(act_bytes), float(w_bytes)
 
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
         if "tpu-only" in prim.tags and not self.include_tpu_only:
@@ -331,10 +365,14 @@ class AnalyticCostModel(CostModel):
         eff = self.spec.family_eff.get(prim.family, 0.3)
         if eff <= 0:
             return float("inf")
-        f, b = self._alg_flops_bytes(prim, scn)
-        return max(f / (eff * self.spec.peak_flops), b / self.spec.mem_bw)
+        f, act_b, w_b = self._alg_flops_bytes(prim, scn)
+        setup = self.spec.family_setup.get(prim.family, 0.0)
+        return max(f / (eff * self.spec.peak_flops),
+                   (scn.n * act_b + w_b) / self.spec.mem_bw) + setup
 
     def transform_cost(self, src, dst, shape_chw, dtype) -> float:
+        """Cost of transforming ONE image; the PBQP edge builder scales
+        by the net's minibatch (see ``core.selection._build``)."""
         from .layouts import transform_feasible
         if not transform_feasible(src, dst, shape_chw):
             return float("inf")

@@ -99,6 +99,32 @@ class Net:
         return [self.nodes[n] for n in self._order
                 if self.nodes[n].kind == "conv"]
 
+    def with_batch(self, n: int) -> "Net":
+        """This net with every conv scenario's minibatch set to ``n``.
+
+        Copy-on-write: returns ``self`` when nothing changes, otherwise
+        a new ``Net`` with fresh ``Node`` objects — never a mutation, so
+        a memoizing net builder can hand out one shared ``Net`` per
+        shape and cached :class:`~repro.core.selection.SelectionResult`s
+        keep the batch they were solved with.  Node ``out_shape``s stay
+        logical per-image CHW — the batch axis lives in the scenarios
+        (costing/selection) and in the compiled executable
+        (``core.plan.compile_plan(..., batch=n)``), never in the graph
+        topology, so node ids and warm starts line up across batch
+        sizes.  ``fingerprint()`` picks the change up through
+        ``Scenario.key()``, keeping batched plans cleanly keyed.
+        """
+        if all(node.scn.n == n for node in self.conv_nodes()):
+            return self
+        new = Net(self.name)
+        for nid in self._order:
+            nd = self.nodes[nid]
+            scn = nd.scn.with_(n=n) if nd.kind == "conv" else nd.scn
+            new.nodes[nid] = Node(nd.id, nd.kind, list(nd.inputs),
+                                  scn, nd.op, nd.out_shape)
+            new._order.append(nid)
+        return new
+
     def outputs(self) -> List[str]:
         consumed = {s for s, _ in self.edges()}
         return [n for n in self._order if n not in consumed]

@@ -96,9 +96,18 @@ class PBQP:
         self._costs[u] = c.copy()
 
     def add_edge(self, u: Hashable, v: Hashable, matrix: np.ndarray) -> None:
+        for node in (u, v):
+            if node not in self._costs:
+                raise ValueError(
+                    f"edge {u!r}->{v!r}: unknown node {node!r}")
         if u == v:
             # A self loop is just a node-cost adjustment along the diagonal.
             M = np.asarray(matrix, dtype=np.float64)
+            k = len(self._costs[u])
+            if M.shape != (k, k):
+                raise ValueError(
+                    f"edge {u!r}->{v!r}: matrix shape {M.shape} "
+                    f"incompatible with domains ({k}, {k})")
             self._costs[u] = self._costs[u] + np.diag(M)
             return
         M = np.asarray(matrix, dtype=np.float64)
@@ -460,10 +469,19 @@ def _branch_and_bound(g: _Graph, trail, stats, budget,
             best_sub = (sub_trail, sub_stats)
 
     if best_choice < 0:
-        # all choices infinite -> infeasible; record something so the
-        # top-level evaluate() reports inf and raises Infeasible.
+        # Every choice of u is infinite (or every branch infeasible):
+        # this whole component has no finite assignment.  Record a
+        # *total* fallback assignment covering u AND every remaining
+        # node — an empty sub-trail would leave those nodes out of the
+        # assignment and turn the top-level ``pb.evaluate`` into a
+        # KeyError; with the trail complete, evaluate() reports inf and
+        # solve() raises Infeasible (its base check fires first anyway,
+        # since base becomes inf below).
+        remaining = [n for n in g.costs if n != u]
         best_choice = 0
-        best_sub = ([], {})
+        best_sub = ([lambda asg, ns=tuple(remaining):
+                     asg.update({n: 0 for n in ns})], {})
+        best_cost = np.inf
 
     sub_trail, sub_stats = best_sub
     for key, val in sub_stats.items():

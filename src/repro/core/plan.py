@@ -34,25 +34,37 @@ def compile_count() -> int:
 @dataclass
 class CompiledNet:
     sel: SelectionResult
-    fn: Callable                      # (x_chw, params) -> outputs dict
+    fn: Callable                      # (x, params) -> outputs dict
     params: Dict[str, Any]            # packed per-node parameters
     build_s: float = 0.0              # wall time of weight packing + wiring
+    #: minibatch the executable was compiled for: 1 -> (C, H, W) in/out,
+    #: > 1 -> (N, C, H, W) in and a leading N axis on every output
+    batch: int = 1
 
-    def __call__(self, x_chw):
-        return self.fn(jnp.asarray(x_chw), self.params)
+    def __call__(self, x):
+        return self.fn(jnp.asarray(x), self.params)
 
 
 def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
-                 jit: bool = True, fuse_across_layers: bool = False
-                 ) -> CompiledNet:
+                 jit: bool = True, fuse_across_layers: bool = False,
+                 batch: int = 1) -> CompiledNet:
     """``fuse_across_layers=False`` (default) inserts optimization
     barriers between primitive calls: the paper's code generator emits
     *calls into a library of routines*, so no cross-layer fusion exists
     and per-layer profiled costs compose additively.  Letting XLA fuse
     across layers (True) breaks that additivity — useful as an extra
-    baseline, but it is a different system than the paper's."""
+    baseline, but it is a different system than the paper's.
+
+    ``batch > 1`` builds a *batched* executable: the single-image
+    program is vmapped over a leading batch axis, so one invocation runs
+    the whole tower for N images — per-image dispatch/packing overhead
+    is paid once, which is exactly the amortization the batch-aware
+    cost model prices (``Scenario.n``).  Input becomes (N, C, H, W) and
+    every output gains a leading N axis."""
     global _COMPILE_COUNT
     _COMPILE_COUNT += 1
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
     t0 = time.perf_counter()
     net = sel.net
     packed: Dict[str, Any] = {}
@@ -67,7 +79,12 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         elif node.kind == "op" and nid in raw_params:
             packed[nid] = jax.tree.map(jnp.asarray, raw_params[nid])
 
-    barrier = (lambda v: v) if fuse_across_layers else \
+    # Batched executables compile without the per-layer barriers: (a)
+    # optimization_barrier has no vmap batching rule, and (b) the
+    # barriers exist to keep per-layer *profiled* costs additive — a
+    # measurement-methodology concern, while the batched path is a
+    # throughput path where cross-layer fusion is desirable.
+    barrier = (lambda v: v) if fuse_across_layers or batch > 1 else \
         (lambda v: jax.lax.optimization_barrier(v))
 
     def run(x, params):
@@ -98,8 +115,11 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
             outs[nid] = convert_layout(v, lo, "CHW")
         return outs
 
+    if batch > 1:
+        run = jax.vmap(run, in_axes=(0, None))
     fn = jax.jit(run) if jit else run
-    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0)
+    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0,
+                       batch=batch)
 
 
 def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,

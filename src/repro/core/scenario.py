@@ -3,10 +3,16 @@
 A *scenario* captures everything a convolution primitive's runtime
 depends on (Section 3 of the paper): input channels C, spatial size
 H x W, stride delta, kernel radix K, output channels M.  We add the
-padding (the paper's benchmark networks all use explicit pads) and the
-dtype.  Minibatch is fixed at 1 per the paper's latency-sensitive
-deployment context; the batch generalisation lives at the distributed
-level (see repro/core/sharding_select.py).
+padding (the paper's benchmark networks all use explicit pads), the
+dtype, and — beyond the paper — the minibatch ``n``.  The paper fixes
+minibatch at 1 for its latency-sensitive deployment context, but the
+optimal primitive *flips* with batch size (GEMM-based methods amortize
+per-invocation packing/planning over N; direct methods do not), so a
+batched server must price and select per (scenario, N).  ``n`` defaults
+to 1 and a scenario's :meth:`key` is unchanged for ``n == 1``, so
+single-image cost caches, calibration profiles and persisted plans stay
+valid.  All costs are for the *whole batched invocation*, not per
+image.
 """
 from __future__ import annotations
 
@@ -28,10 +34,13 @@ class Scenario:
     m: int          # output feature maps
     pad: int = -1   # -1 => "same"-style default k // 2
     dtype: str = "float32"
+    n: int = 1      # minibatch (1 = the paper's setting)
 
     def __post_init__(self):
         if self.pad < 0:
             object.__setattr__(self, "pad", self.k // 2)
+        if self.n < 1:
+            raise ValueError(f"minibatch must be >= 1, got {self.n}")
 
     @property
     def out_h(self) -> int:
@@ -54,9 +63,18 @@ class Scenario:
         return (self.m, self.c, self.k, self.k)
 
     @property
+    def in_shape_nchw(self) -> Tuple[int, int, int, int]:
+        return (self.n, self.c, self.h, self.w)
+
+    @property
+    def out_shape_nchw(self) -> Tuple[int, int, int, int]:
+        return (self.n, self.m, self.out_h, self.out_w)
+
+    @property
     def macs(self) -> int:
-        """Multiply-accumulates of the direct algorithm."""
-        return self.m * self.c * self.k * self.k * self.out_h * self.out_w
+        """Multiply-accumulates of the direct algorithm (whole batch)."""
+        return (self.n * self.m * self.c * self.k * self.k
+                * self.out_h * self.out_w)
 
     @property
     def flops(self) -> int:
@@ -66,8 +84,12 @@ class Scenario:
         return replace(self, **kw)
 
     def key(self) -> str:
-        return (f"c{self.c}h{self.h}w{self.w}s{self.stride}"
+        # n is appended only for n > 1: single-image keys predate the
+        # batch axis, and cost caches / calibration profiles keyed on
+        # them must stay valid.
+        base = (f"c{self.c}h{self.h}w{self.w}s{self.stride}"
                 f"k{self.k}m{self.m}p{self.pad}{self.dtype}")
+        return base if self.n == 1 else f"{base}n{self.n}"
 
 
 def ref_conv(x: np.ndarray, w: np.ndarray, b: np.ndarray,

@@ -117,12 +117,17 @@ def _build(net: Net, cost: CostModel, *,
             domains[nid] = [Choice(None, l, l) for l in lays]
             pb.add_node(nid, [0.0] * len(lays))
 
+    # Transform costs are priced per image by the DT graph; a batched
+    # net moves nb times the activation bytes along every edge, so the
+    # edge matrices scale with the net's minibatch (node costs already
+    # price the whole batched invocation via Scenario.n).
+    nb = max((n.scn.n for n in net.conv_nodes()), default=1)
     for (src, dst) in net.edges():
         shape = net.nodes[src].out_shape
         M = _edge_matrix(dt, shape,
                          [c.l_out for c in domains[src]],
                          [c.l_in for c in domains[dst]])
-        pb.add_edge(src, dst, M)
+        pb.add_edge(src, dst, M * nb if nb > 1 else M)
 
     return pb, domains, dt
 
@@ -231,6 +236,12 @@ def select_local_optimal(net: Net, cost: CostModel,
                  if p.l_in == canonical and p.l_out == canonical]
         costs = [(cost.primitive_cost(p, node.scn), p) for p in cands]
         costs = [(c, p) for c, p in costs if np.isfinite(c)]
+        if not costs:
+            raise ValueError(
+                f"select_local_optimal: no {canonical}->{canonical} "
+                f"primitive has finite cost for node {node.id!r} "
+                f"({node.scn}); the canonical-layout strategy cannot "
+                f"cover this scenario under this cost model")
         pick[node.id] = min(costs, key=lambda t: t[0])[1]
     return select_fixed(net, cost, pick, "local_optimal")
 

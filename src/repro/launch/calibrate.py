@@ -32,14 +32,15 @@ def _plan(args):
     from ..serving import BucketPolicy
 
     policy = BucketPolicy()
+    batches = tuple(args.batches)
     if args.net:
         from ..convnets import NETWORKS
         scns = []
         for name in args.net:
             scns.extend(scenarios_from_net(NETWORKS[name](args.scale),
-                                           policy=policy))
+                                           policy=policy, batches=batches))
     else:
-        scns = scenario_grid(args.grid, policy=policy)
+        scns = scenario_grid(args.grid, policy=policy, batches=batches)
 
     import jax
     on_tpu = jax.devices()[0].platform == "tpu"
@@ -67,6 +68,10 @@ def main(argv=None) -> int:
                          "(alexnet, vgg-a..e, googlenet) instead of a grid")
     ap.add_argument("--scale", type=float, default=0.25,
                     help="network scale factor for --net")
+    ap.add_argument("--batches", nargs="+", type=int, default=[1],
+                    help="minibatch buckets to sweep (e.g. 1 4 16); "
+                         "batched entries time the whole vmapped "
+                         "invocation, pricing the batched serving path")
     ap.add_argument("--families", nargs="*", default=None,
                     help="restrict to these primitive families")
     ap.add_argument("--kernels", default="auto",

@@ -102,6 +102,8 @@ def main():
               f" | solves={s['solves']} (warm={s['warm_solves']})"
               f" compiles={s['compiles']}"
               f" | plan hits={s['plan_hits']} exec hits={s['exec_hits']}"
+              f" | batched calls={s['batch_calls']}"
+              f" (+{s['coalesced']} coalesced)"
               f" | solve {s['solve_s']*1e3:.0f} ms"
               f" compile {s['compile_s']*1e3:.0f} ms"
               f" execute {s['execute_s']*1e3:.0f} ms")

@@ -15,6 +15,12 @@ cached executable — and the resulting feature vector is quantized into
 bridge between the paper's primitive-selection machinery and the LM
 serving path: vision preprocessing rides the plan cache, so a hot bucket
 costs one executable call, not a PBQP solve + XLA compile.
+
+Admission is *micro-batched*: every image admitted in the same tick is
+enqueued on the server's admission queue and one ``flush()`` coalesces
+all pending same-bucket images into a single batched tower invocation
+(``PlanServer.infer_batch``) — N images admitted together cost one
+executable call, not N.
 """
 from __future__ import annotations
 
@@ -92,7 +98,7 @@ class ServeLoop:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _encode_pixels(self, req: Request):
+    def _encode_pixels(self, req: Request, outs: Dict[str, np.ndarray]):
         """Vision-token bridge: conv-tower features -> prompt tokens.
 
         The tower's top activations are quantized by rank: the indices of
@@ -100,7 +106,6 @@ class ServeLoop:
         tokens.  Deterministic per image, so a repeated image yields a
         repeated prefix — and the whole thing is one plan-cache lookup
         once the image's bucket is hot."""
-        outs = self.plan_server.infer(req.pixels)
         v = np.concatenate([np.asarray(o, np.float32).ravel()
                             for o in outs.values()])
         k = min(self.image_tokens, v.size)
@@ -115,26 +120,44 @@ class ServeLoop:
         req.pixels = None
 
     def _admit(self):
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                req._t0 = time.perf_counter()
-                if req.pixels is not None and self.plan_server is not None:
-                    self._encode_pixels(req)
-                t = len(req.prompt)
-                logits, cache1 = prefill(
-                    self.cfg, self.params,
-                    {"tokens": jnp.asarray(req.prompt[None])},
-                    self.plan, self.rt, max_seq=self.max_seq)
-                # write the prefilled cache into this slot
-                def put(full, new):
-                    return full.at[:, slot:slot + 1].set(
-                        new.astype(full.dtype))
-                self.cache = jax.tree.map(put, self.cache, cache1)
-                nxt = int(jnp.argmax(logits[0, -1]))
-                req.tokens.append(nxt)
-                self.slot_req[slot] = req
-                self.slot_pos[slot] = t
+        free = [s for s in range(self.max_batch)
+                if self.slot_req[s] is None]
+        admitted = []
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            req._t0 = time.perf_counter()
+            admitted.append((slot, req))
+        if not admitted:
+            return
+        # Micro-batch the tick's vision work: enqueue every admitted
+        # image, then one flush -> all same-bucket images share ONE
+        # batched tower invocation instead of one call each.
+        vision: Dict[int, Any] = {}
+        if self.plan_server is not None:
+            for slot, req in admitted:
+                if req.pixels is not None:
+                    vision[slot] = self.plan_server.enqueue(req.pixels)
+            if vision:
+                self.plan_server.flush()
+        for slot, req in admitted:
+            if slot in vision:
+                self._encode_pixels(req, vision[slot].result())
+            t = len(req.prompt)
+            logits, cache1 = prefill(
+                self.cfg, self.params,
+                {"tokens": jnp.asarray(req.prompt[None])},
+                self.plan, self.rt, max_seq=self.max_seq)
+            # write the prefilled cache into this slot
+            def put(full, new, slot=slot):
+                return full.at[:, slot:slot + 1].set(
+                    new.astype(full.dtype))
+            self.cache = jax.tree.map(put, self.cache, cache1)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.tokens.append(nxt)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = t
 
     def _tick(self):
         tokens = np.zeros(self.max_batch, np.int32)

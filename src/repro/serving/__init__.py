@@ -3,11 +3,14 @@
 Amortizes the two per-scenario costs the paper pays offline — the PBQP
 solve and kernel compilation — across a *stream* of request shapes:
 
-* :mod:`.bucketing`  — canonicalize shapes into a bounded bucket set;
+* :mod:`.bucketing`  — canonicalize shapes (and batch sizes) into a
+  bounded bucket set;
 * :mod:`.plan_cache` — persistent selections + compiled-executable LRU;
 * :mod:`.server`     — the per-request :class:`PlanServer` dispatcher
   (bucket -> cache lookup -> (miss) warm-started solve + compile ->
-  execute), with hit/miss/latency counters in :mod:`.metrics`;
+  execute), the batched :meth:`PlanServer.infer_batch` path and the
+  micro-batching admission queue, with hit/miss/latency counters in
+  :mod:`.metrics`;
 * :mod:`.towers`     — shape-parameterized demo nets for tests/examples.
 
 See the "Serving architecture" section of the README for the design.
@@ -21,7 +24,7 @@ from .plan_cache import (
     selection_to_payload,
 )
 from .server import PlanServer
-from .towers import conv_tower
+from .towers import conv_stack, conv_tower
 
 __all__ = [
     "BucketPolicy", "bucket_key", "bucket_shape", "bucket_scenario",
@@ -29,5 +32,5 @@ __all__ = [
     "ServingCounters",
     "LRU", "PlanDiskCache", "plan_key",
     "selection_from_payload", "selection_to_payload",
-    "PlanServer", "conv_tower",
+    "PlanServer", "conv_tower", "conv_stack",
 ]

@@ -46,23 +46,49 @@ def _round_up(v: int, mode: str, step: int, lo: int, hi: int) -> int:
 class BucketPolicy:
     """How request shapes collapse into buckets.
 
-    ``spatial`` / ``channel`` modes: ``"pow2"`` (round up to a power of
-    two — log-many buckets over any traffic), ``"linear"`` (round up to a
-    multiple of ``*_step``), ``"exact"`` (no rounding; one bucket per
-    distinct shape — plan count unbounded, useful for benchmarks).
+    ``spatial`` / ``channel`` / ``batch`` modes: ``"pow2"`` (round up to
+    a power of two — log-many buckets over any traffic), ``"linear"``
+    (round up to a multiple of ``*_step``), ``"exact"`` (no rounding;
+    one bucket per distinct shape — plan count unbounded, useful for
+    benchmarks).
+
+    The ``batch`` axis buckets minibatch sizes the same way spatial
+    dims bucket: a group of N coalesced same-bucket requests runs on
+    the executable compiled for the N-bucket (zero rows pad the batch),
+    so the number of distinct batched executables stays logarithmic in
+    the largest batch.  Like every other axis, rounding never goes
+    *down*: a batch above ``max_n`` keeps its own size rather than
+    being clamped (boundedness is a traffic assumption — the server's
+    ``infer_batch`` chunks groups at ``max_n``, so it never requests
+    such a bucket; correctness is not negotiable).
     """
 
     spatial: str = "pow2"
     channel: str = "pow2"
+    batch: str = "pow2"
     spatial_step: int = 32
     channel_step: int = 16
+    batch_step: int = 4
     min_hw: int = 8
     max_hw: int = 512
     min_c: int = 1
     max_c: int = 1024
+    min_n: int = 1
+    max_n: int = 64
 
     def bucket(self, shape_chw: Tuple[int, int, int]) -> Tuple[int, int, int]:
         return bucket_shape(shape_chw, self)
+
+    def bucket_n(self, n: int) -> int:
+        """Canonical batch bucket for a group of ``n`` requests
+        (round-up-only, like :func:`bucket_shape`: above ``max_n`` the
+        request's own size wins — clamping *down* would price or
+        compile a smaller batch than is actually running).
+        """
+        if n < 1:
+            raise ValueError(f"bad batch size {n}")
+        return _round_up(n, self.batch, self.batch_step,
+                         self.min_n, self.max_n)
 
 
 def bucket_shape(shape_chw: Tuple[int, int, int],
@@ -81,10 +107,16 @@ def bucket_shape(shape_chw: Tuple[int, int, int],
     )
 
 
-def bucket_key(bucket_chw: Tuple[int, int, int]) -> str:
-    """Human-readable stable key for a bucket (used in cache file names)."""
+def bucket_key(bucket_chw: Tuple[int, int, int], n: int = 1) -> str:
+    """Human-readable stable key for a bucket (used in cache file names).
+
+    The batch bucket is appended only for ``n > 1`` so single-image keys
+    (and the plans persisted under them before the batch axis existed)
+    are unchanged.
+    """
     c, h, w = bucket_chw
-    return f"c{c}h{h}w{w}"
+    base = f"c{c}h{h}w{w}"
+    return base if n == 1 else f"{base}n{n}"
 
 
 def round_dim(v: int, mode: str, step: int, lo: int, hi: int) -> int:
@@ -102,9 +134,10 @@ def bucket_scenario(scn: Scenario, policy: BucketPolicy) -> Scenario:
 
     The spatial/channel input dimensions round up exactly like request
     shapes (:func:`bucket_shape`); the output-channel count M rounds
-    under the channel mode.  Stride, kernel radix, padding and dtype are
-    preserved — they change which primitives even apply, so they are
-    bucket identity, not something to round.  Used by
+    under the channel mode; the minibatch rounds under the batch mode
+    (:meth:`BucketPolicy.bucket_n`).  Stride, kernel radix, padding and
+    dtype are preserved — they change which primitives even apply, so
+    they are bucket identity, not something to round.  Used by
     :class:`repro.calibrate.CalibratedCostModel` to map arbitrary
     per-layer scenarios onto the finite grid a
     :class:`~repro.calibrate.HardwareProfile` was measured on.
@@ -112,4 +145,4 @@ def bucket_scenario(scn: Scenario, policy: BucketPolicy) -> Scenario:
     c, h, w = bucket_shape(scn.in_shape_chw, policy)
     m = round_dim(scn.m, policy.channel, policy.channel_step,
                   policy.min_c, policy.max_c)
-    return scn.with_(c=c, h=h, w=w, m=m)
+    return scn.with_(c=c, h=h, w=w, m=m, n=policy.bucket_n(scn.n))

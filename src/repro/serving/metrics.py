@@ -26,6 +26,10 @@ class ServingCounters:
     exec_hits: int = 0
     exec_misses: int = 0
     exec_evictions: int = 0
+    #: batched execution: executable invocations serving > 0 requests
+    #: each, and how many requests shared an invocation with another
+    batch_calls: int = 0
+    coalesced: int = 0
     #: solver / compiler work actually performed
     solves: int = 0
     warm_solves: int = 0          # of which seeded by a neighbouring bucket

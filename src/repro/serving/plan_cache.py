@@ -27,6 +27,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.graph import Net
+from ..core.ioutil import atomic_write_text
 from ..core.primitives import registry
 from ..core.selection import Choice, SelectionResult
 
@@ -112,10 +113,11 @@ class PlanDiskCache:
         return payload
 
     def put(self, key: str, payload: Dict[str, Any]) -> None:
-        p = self._path(key)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(payload))
-        tmp.replace(p)
+        """Atomic write, safe under concurrent writers of the same key
+        (writer-unique tmp names — see ``core.ioutil.atomic_write_text``;
+        both writers produce equivalent payloads for the same key, so
+        last-replace-wins is correct)."""
+        atomic_write_text(self._path(key), json.dumps(payload))
 
     def __len__(self) -> int:
         return len(list(self.root.glob("plan_*.json")))

@@ -3,15 +3,34 @@
 Request path (the bridge between ``core/selection.py`` and
 ``runtime/serve_loop.py``)::
 
-    request shape --bucket--> bucket shape
+    request shape --bucket--> (bucket shape, batch bucket)
         --> compiled-executable LRU hit?     -> execute
         --> persistent plan cache hit?       -> compile, execute
         --> PBQP solve (warm-started from the nearest solved bucket),
             persist plan, compile, execute
 
+Every tier is keyed on the *pair* (bucket shape, batch bucket): the
+optimal primitive assignment flips with minibatch (``Scenario.n``), so
+an N=8 plan is a different plan — and a different executable — than the
+N=1 plan for the same spatial bucket.
+
+Three execution entry points:
+
+* :meth:`PlanServer.infer` — one image, the latency path.  Outputs are
+  cropped back to the *request's* extent (the request was zero-padded
+  into its bucket; bucket-shaped outputs would leak padding).
+* :meth:`PlanServer.infer_batch` — a list of images, the throughput
+  path: requests group by bucket and each group runs as ONE batched
+  executable invocation (vmapped tower, zero rows padding the batch to
+  its pow2 bucket).
+* :meth:`PlanServer.enqueue` / :meth:`PlanServer.flush` — the
+  micro-batching admission queue: producers enqueue single images and
+  get a Future; ``flush()`` coalesces everything pending through
+  :meth:`infer_batch`.  The LM serve loop flushes once per admission
+  tick, so all images admitted in a tick share one tower invocation.
+
 Misses can be taken off the caller's thread with :meth:`PlanServer.
-prefetch` (async solve+compile); the synchronous :meth:`infer` is what
-the LM serving loop calls per request.  Cache bookkeeping (and the
+prefetch` (async solve+compile).  Cache bookkeeping (and the
 millisecond-scale PBQP solve) runs under one lock, but the expensive
 XLA compile + warm-up happens outside it behind a per-bucket future:
 hot-bucket requests never stall behind a cold bucket compiling, and
@@ -22,9 +41,10 @@ tests/test_serving.py pins down via the counters).
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from threading import RLock
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,6 +63,8 @@ from .plan_cache import (
 __all__ = ["PlanServer"]
 
 Shape = Tuple[int, int, int]
+#: internal cache key: spatial bucket + batch bucket
+PlanKey = Tuple[int, int, int, int]
 
 
 class PlanServer:
@@ -53,6 +75,7 @@ class PlanServer:
     net_builder:
         ``(C, H, W) -> Net`` — must yield identical node ids across
         shapes (see :mod:`repro.serving.towers`) so warm starts line up.
+        The server applies the batch bucket via ``Net.with_batch``.
     cost_model:
         Prices primitives and layout transforms; its :meth:`~repro.core.
         costs.CostModel.version` participates in the persistent cache key.
@@ -60,7 +83,7 @@ class PlanServer:
         Directory for the persistent plan cache; ``None`` disables the
         disk tier (plans still cached in memory for the process lifetime).
     lru_capacity:
-        Max live compiled executables.
+        Max live compiled executables (batched ones count like any other).
     """
 
     def __init__(self, net_builder: Callable[[Shape], Net],
@@ -77,30 +100,37 @@ class PlanServer:
         self.params_seed = params_seed
         self.jit = jit
         self.counters = ServingCounters()
-        self._plans: Dict[Shape, SelectionResult] = {}
+        self._plans: Dict[PlanKey, SelectionResult] = {}
         self._compiled = LRU(lru_capacity)
-        self._building: Dict[Shape, Future] = {}
+        self._building: Dict[PlanKey, Future] = {}
         self._disk = PlanDiskCache(cache_dir) if cache_dir else None
         self._lock = RLock()
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="planserver")
+        #: request-shape -> output-node expected shapes (crop targets)
+        self._out_shapes = LRU(512)
+        #: micro-batching admission queue: (image, future) pairs
+        self._queue: List[Tuple[np.ndarray, Future]] = []
+        self._closed = False
 
     # -----------------------------------------------------------------
     # plan tier
     # -----------------------------------------------------------------
-    def plan_for(self, shape_chw: Shape) -> SelectionResult:
-        """Bucket the shape and return its (cached or fresh) selection."""
+    def plan_for(self, shape_chw: Shape, n: int = 1) -> SelectionResult:
+        """Bucket the shape (and batch) and return its selection."""
         bshape = bucket_shape(shape_chw, self.policy)
+        nb = self.policy.bucket_n(n)
         with self._lock:
-            return self._plan_locked(bshape)
+            return self._plan_locked(bshape, nb)
 
-    def _plan_locked(self, bshape: Shape) -> SelectionResult:
-        sel = self._plans.get(bshape)
+    def _plan_locked(self, bshape: Shape, nb: int) -> SelectionResult:
+        pkey: PlanKey = (*bshape, nb)
+        sel = self._plans.get(pkey)
         if sel is not None:
             self.counters.add(plan_mem_hits=1)
             return sel
-        net = self.net_builder(bshape)
-        key = plan_key(net.fingerprint(), bucket_key(bshape),
+        net = self.net_builder(bshape).with_batch(nb)
+        key = plan_key(net.fingerprint(), bucket_key(bshape, nb),
                        self.cost_version)
         if self._disk is not None:
             payload = self._disk.get(key)
@@ -111,58 +141,69 @@ class PlanServer:
                     sel = None  # unknown primitive / schema: re-solve
             if sel is not None:
                 self.counters.add(plan_disk_hits=1)
-                self._plans[bshape] = sel
+                self._plans[pkey] = sel
                 return sel
         self.counters.add(plan_misses=1)
-        warm = self._nearest_plan(bshape)
+        warm = self._nearest_plan(pkey)
         t0 = time.perf_counter()
         sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm)
         self.counters.add(solves=1, solve_s=time.perf_counter() - t0,
                           warm_solves=int(sel.solver_stats.get("WARM", 0)))
-        self._plans[bshape] = sel
+        self._plans[pkey] = sel
         if self._disk is not None:
             self._disk.put(key, selection_to_payload(sel))
         return sel
 
-    def _nearest_plan(self, bshape: Shape) -> Optional[SelectionResult]:
-        """Closest already-solved bucket in log-shape space (warm start)."""
+    def _nearest_plan(self, pkey: PlanKey) -> Optional[SelectionResult]:
+        """Closest already-solved bucket in log-shape space (warm start).
+
+        The batch bucket is one more axis of that space: the N=1
+        optimum of the same spatial bucket is usually an excellent
+        incumbent for the N=8 solve.
+        """
         if not self._plans:
             return None
-        def dist(other: Shape) -> float:
-            return sum(abs(np.log2(a / b)) for a, b in zip(bshape, other))
+
+        def dist(other: PlanKey) -> float:
+            return sum(abs(np.log2(a / b)) for a, b in zip(pkey, other))
+
         return self._plans[min(self._plans, key=dist)]
 
     # -----------------------------------------------------------------
     # executable tier
     # -----------------------------------------------------------------
-    def compiled_for(self, shape_chw: Shape) -> CompiledNet:
+    def compiled_for(self, shape_chw: Shape, n: int = 1) -> CompiledNet:
         bshape = bucket_shape(shape_chw, self.policy)
+        nb = self.policy.bucket_n(n)
+        pkey: PlanKey = (*bshape, nb)
         with self._lock:
-            cnet = self._compiled.get(bshape)
+            cnet = self._compiled.get(pkey)
             if cnet is not None:
                 self.counters.add(exec_hits=1)
                 return cnet
-            racing = self._building.get(bshape)
+            racing = self._building.get(pkey)
             if racing is None:
                 fut = Future()
-                self._building[bshape] = fut
+                self._building[pkey] = fut
                 self.counters.add(exec_misses=1)
         if racing is not None:
             # another thread is building this bucket: wait, don't duplicate
             return racing.result()
         try:
             with self._lock:
-                sel = self._plan_locked(bshape)
+                sel = self._plan_locked(bshape, nb)
             params = sel.net.init_params(self.params_seed)
             t0 = time.perf_counter()
             # XLA compile + warm-up outside the lock: hot buckets must
             # not stall behind a cold bucket compiling
-            cnet = compile_plan(sel, params, jit=self.jit)
-            _block(cnet(np.zeros(bshape, np.float32)))
+            cnet = compile_plan(sel, params, jit=self.jit, batch=nb)
+            warm_in = np.zeros(bshape if nb == 1 else (nb, *bshape),
+                               np.float32)
+            _block(cnet(warm_in))
             with self._lock:
                 ev0 = self._compiled.evictions
-                self._compiled.put(bshape, cnet)
-                self._building.pop(bshape, None)
+                self._compiled.put(pkey, cnet)
+                self._building.pop(pkey, None)
                 self.counters.add(
                     compiles=1, compile_s=time.perf_counter() - t0,
                     exec_evictions=self._compiled.evictions - ev0)
@@ -170,22 +211,61 @@ class PlanServer:
             return cnet
         except BaseException as exc:
             with self._lock:
-                self._building.pop(bshape, None)
+                self._building.pop(pkey, None)
             fut.set_exception(exc)
             raise
 
-    def prefetch(self, shape_chw: Shape) -> Future:
+    def prefetch(self, shape_chw: Shape, n: int = 1) -> Future:
         """Async solve+compile for a bucket (returns a Future[CompiledNet]).
 
         Misses are resolved on the server's worker pool so the caller's
         latency-sensitive loop never blocks on a cold bucket."""
-        return self._pool.submit(self.compiled_for, shape_chw)
+        return self._pool.submit(self.compiled_for, shape_chw, n)
 
     # -----------------------------------------------------------------
-    # request path
+    # output cropping
+    # -----------------------------------------------------------------
+    def _expected_out_shapes(self, req_shape: Shape) -> Dict[str, tuple]:
+        """Output-node shapes of the net built at the *request* shape.
+
+        The request is zero-padded into its bucket, so bucket-run
+        outputs that keep spatial extent must be cropped back to what a
+        run at the request shape would produce.  Building the net is
+        pure graph math (no tracing/compiling); a small LRU memoizes it
+        per request shape.
+        """
+        with self._lock:
+            got = self._out_shapes.get(req_shape)
+        if got is not None:
+            return got
+        net = self.net_builder(req_shape)
+        shapes = {nid: tuple(net.nodes[nid].out_shape)
+                  for nid in net.outputs()}
+        with self._lock:
+            self._out_shapes.put(req_shape, shapes)
+        return shapes
+
+    @staticmethod
+    def _crop(v: np.ndarray, expected: tuple) -> np.ndarray:
+        """Crop a bucket-run output down to the request's extent.
+
+        Only applies when the ranks line up and every expected dim fits
+        inside the actual one — global ops (GAP, FC) already produce
+        request-independent shapes and pass through untouched.
+        """
+        if v.ndim != len(expected):
+            return v
+        if all(a == e for a, e in zip(v.shape, expected)):
+            return v
+        if any(e > a for a, e in zip(v.shape, expected)):
+            return v
+        return v[tuple(slice(0, e) for e in expected)]
+
+    # -----------------------------------------------------------------
+    # request paths
     # -----------------------------------------------------------------
     def infer(self, x_chw: np.ndarray) -> Dict[str, np.ndarray]:
-        """Execute one request: bucket, pad, run, return output arrays."""
+        """Execute one request: bucket, pad, run, crop, return outputs."""
         x = np.asarray(x_chw, np.float32)
         if x.ndim != 3:
             raise ValueError(f"expected (C, H, W) input, got {x.shape}")
@@ -193,12 +273,129 @@ class PlanServer:
         bshape = bucket_shape(x.shape, self.policy)
         pads = [(0, b - s) for b, s in zip(bshape, x.shape)]
         xb = np.pad(x, pads)
+        if cnet.batch > 1:
+            # a policy whose batch bucket for n=1 is > 1 (linear batch
+            # mode, min_n > 1) hands the single request a batched
+            # executable: embed the image as row 0, zero rows pad
+            xb = np.concatenate(
+                [xb[None], np.zeros((cnet.batch - 1, *bshape),
+                                    np.float32)])
+        expected = self._expected_out_shapes(x.shape)
         t0 = time.perf_counter()
         out = cnet(xb)
-        out = {nid: np.asarray(v) for nid, v in out.items()}
+        out = {nid: self._crop(np.asarray(v)[0] if cnet.batch > 1
+                               else np.asarray(v), expected.get(nid, ()))
+               for nid, v in out.items()}
         self.counters.add(requests=1,
                           execute_s=time.perf_counter() - t0)
         return out
+
+    def infer_batch(self, xs: Sequence[np.ndarray]
+                    ) -> List[Dict[str, np.ndarray]]:
+        """Execute a batch of requests, one executable call per bucket.
+
+        Requests group by spatial bucket; each group (chunked at
+        ``policy.max_n``) is stacked into a zero-padded (N', C', H', W')
+        tensor — N' the group's pow2 batch bucket — and runs through the
+        batched executable in ONE invocation.  Per-request outputs are
+        sliced off the batch axis and cropped exactly like
+        :meth:`infer`, so ``infer_batch(xs)[i] == infer(xs[i])`` up to
+        float reassociation.  Returns one output dict per request, in
+        input order.
+        """
+        imgs = [np.asarray(x, np.float32) for x in xs]
+        for x in imgs:
+            if x.ndim != 3:
+                raise ValueError(f"expected (C, H, W) inputs, got {x.shape}")
+        if not imgs:
+            return []
+        groups: "OrderedDict[Shape, List[int]]" = OrderedDict()
+        for i, x in enumerate(imgs):
+            groups.setdefault(bucket_shape(x.shape, self.policy),
+                              []).append(i)
+        chunks: List[Tuple[Shape, int, List[int]]] = []
+        for bshape, idxs in groups.items():
+            for start in range(0, len(idxs), self.policy.max_n):
+                chunk = idxs[start:start + self.policy.max_n]
+                chunks.append((bshape, self.policy.bucket_n(len(chunk)),
+                               chunk))
+        # overlap cold solves+compiles of *distinct* (bucket, batch)
+        # executables on the worker pool: a flush spanning G cold
+        # groups then waits for the slowest compile, not the sum
+        specs = {(bshape, nb) for bshape, nb, _ in chunks}
+        prefetched = {spec: self.prefetch(*spec) for spec in specs} \
+            if len(specs) > 1 else {}
+        results: List[Optional[Dict[str, np.ndarray]]] = [None] * len(imgs)
+        seen_specs = set()
+        for bshape, nb, chunk in chunks:
+            if prefetched:
+                cnet = prefetched[(bshape, nb)].result()
+                if (bshape, nb) in seen_specs:
+                    # the sequential path would have taken an LRU hit
+                    # here; keep the counters path-independent
+                    self.counters.add(exec_hits=1)
+                seen_specs.add((bshape, nb))
+            else:
+                cnet = self.compiled_for(bshape, n=nb)
+            xb = np.zeros((nb, *bshape), np.float32)
+            for row, i in enumerate(chunk):
+                x = imgs[i]
+                xb[row, :x.shape[0], :x.shape[1], :x.shape[2]] = x
+            t0 = time.perf_counter()
+            out = cnet(xb if nb > 1 else xb[0])
+            out = {nid: np.asarray(v) for nid, v in out.items()}
+            # coalesced counts per *invocation*: requests that
+            # shared this executable call with at least one other
+            self.counters.add(batch_calls=1,
+                              coalesced=len(chunk) - 1,
+                              execute_s=time.perf_counter() - t0)
+            for row, i in enumerate(chunk):
+                expected = self._expected_out_shapes(imgs[i].shape)
+                results[i] = {
+                    nid: self._crop(v[row] if nb > 1 else v,
+                                    expected.get(nid, ()))
+                    for nid, v in out.items()}
+        self.counters.add(requests=len(imgs))
+        return results  # type: ignore[return-value]
+
+    # -----------------------------------------------------------------
+    # micro-batching admission queue
+    # -----------------------------------------------------------------
+    def enqueue(self, x_chw: np.ndarray) -> Future:
+        """Queue one image for the next :meth:`flush`; returns a Future
+        resolving to its output dict (same payload as :meth:`infer`)."""
+        x = np.asarray(x_chw, np.float32)
+        if x.ndim != 3:
+            raise ValueError(f"expected (C, H, W) input, got {x.shape}")
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                # after close() no flush will ever run: a silently
+                # queued future would hang its waiter forever
+                raise RuntimeError("PlanServer is closed")
+            self._queue.append((x, fut))
+        return fut
+
+    def flush(self) -> int:
+        """Coalesce everything enqueued into batched executable calls.
+
+        All pending same-bucket images share one tower invocation
+        (:meth:`infer_batch`); each Future resolves with its request's
+        cropped outputs.  Returns the number of requests served.
+        """
+        with self._lock:
+            pending, self._queue = self._queue, []
+        if not pending:
+            return 0
+        try:
+            outs = self.infer_batch([x for x, _ in pending])
+        except BaseException as exc:
+            for _, fut in pending:
+                fut.set_exception(exc)
+            raise
+        for (_, fut), out in zip(pending, outs):
+            fut.set_result(out)
+        return len(pending)
 
     # -----------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -210,6 +407,15 @@ class PlanServer:
         return d
 
     def close(self) -> None:
+        # Drain the admission queue: enqueued-but-unflushed futures
+        # would otherwise never resolve and their waiters would hang.
+        # The closed flag makes a racing enqueue() raise instead of
+        # landing a future in a queue nobody will ever flush.
+        with self._lock:
+            self._closed = True
+            pending, self._queue = self._queue, []
+        for _, fut in pending:
+            fut.cancel()
         self._pool.shutdown(wait=True)
 
 

@@ -17,7 +17,7 @@ from typing import Tuple
 
 from ..core.graph import Net, fc, global_avgpool, maxpool, relu
 
-__all__ = ["conv_tower"]
+__all__ = ["conv_tower", "conv_stack"]
 
 
 def conv_tower(shape_chw: Tuple[int, int, int], *, depth: int = 3,
@@ -43,4 +43,27 @@ def conv_tower(shape_chw: Tuple[int, int, int], *, depth: int = 3,
             x = net.op(f"pool{i}", [x], maxpool(2, 2))
     x = net.op("gap", [x], global_avgpool())
     net.op("feat", [x], fc(features))
+    return net
+
+
+def conv_stack(shape_chw: Tuple[int, int, int], *, depth: int = 2,
+               width: int = 8, k: int = 3) -> Net:
+    """A conv/relu stack that *keeps spatial extent* (stride 1, "same"
+    pad, no pooling/GAP/FC).
+
+    Its outputs are (M, H, W) feature maps, which makes it the right
+    fixture for everything that reasons about spatial cropping: a
+    request zero-padded into its bucket produces, after cropping, the
+    same values as a run at the request's own shape (weights depend only
+    on (C, K, M), so bucket-net and request-net share them when C
+    matches).  Also the throughput fixture for the batched-serving
+    benchmark, where global ops would hide the conv work.
+    """
+    c, h, w = shape_chw
+    net = Net(f"stack{depth}w{width}")
+    x = net.input("data", (c, h, w))
+    for i in range(depth):
+        m = width << i
+        x = net.conv(f"conv{i}", x, k=k, m=m, pad=k // 2)
+        x = net.op(f"relu{i}", [x], relu())
     return net

@@ -91,6 +91,54 @@ class TestBasics:
         assert sol.cost == pytest.approx(1.0)
         assert sol.assignment["a"] == 1
 
+    def test_edge_unknown_node_rejected(self):
+        pb = PBQP()
+        pb.add_node("a", [0.0, 0.0])
+        with pytest.raises(ValueError, match="unknown node"):
+            pb.add_edge("a", "ghost", np.zeros((2, 2)))
+        with pytest.raises(ValueError, match="unknown node"):
+            pb.add_edge("ghost", "a", np.zeros((2, 2)))
+        # the self-loop path used to KeyError instead of this ValueError
+        with pytest.raises(ValueError, match="unknown node"):
+            pb.add_edge("ghost", "ghost", np.zeros((2, 2)))
+
+    def test_self_loop_shape_validated(self):
+        pb = PBQP()
+        pb.add_node("a", [0.0, 0.0])
+        with pytest.raises(ValueError, match="incompatible"):
+            pb.add_edge("a", "a", np.zeros((3, 3)))
+        with pytest.raises(ValueError, match="incompatible"):
+            pb.add_edge("a", "a", np.zeros((2, 3)))
+
+    def test_fully_infeasible_degree3_raises(self):
+        """Regression: a fully-infeasible instance whose nodes all have
+        degree >= 3 enters branch-and-bound with every branch infinite;
+        the fallback must leave a *total* assignment behind and raise
+        Infeasible (never KeyError out of pb.evaluate)."""
+        def build():
+            pb = PBQP()
+            for i in range(4):
+                pb.add_node(i, [1.0, 2.0])
+            for i in range(4):
+                for j in range(i + 1, 4):
+                    pb.add_edge(i, j, np.full((2, 2), np.inf))
+            return pb
+
+        with pytest.raises(Infeasible):
+            solve(build(), exact=True)
+        # warm-started path: the (infinite-cost) warm assignment must
+        # disable the bound and still end in Infeasible
+        with pytest.raises(Infeasible):
+            pbqp.solve_warm(build(), {i: 0 for i in range(4)}, exact=True)
+        # branch node with an all-infinite cost vector, feasible-looking
+        # edges: same contract
+        pb = build()
+        pb.add_node("u", [np.inf, np.inf])
+        for i in range(4):
+            pb.add_edge("u", i, np.zeros((2, 2)))
+        with pytest.raises(Infeasible):
+            solve(pb, exact=True)
+
     def test_dag_diamond(self):
         """Inception-style diamond (Figure 3): split + join."""
         pb = PBQP()

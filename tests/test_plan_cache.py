@@ -77,6 +77,38 @@ class TestDiskCacheAccounting:
         (tmp_path / "plan_abc.json").write_text("{not json")
         assert cache.get("abc") is None
         assert cache.misses == 1
+        # and a subsequent put repairs the entry
+        cache.put("abc", {"x": 2})
+        assert cache.get("abc") == {"x": 2}
+
+    def test_concurrent_puts_same_key(self, tmp_path):
+        """Satellite fix: writers used to share one plan_<key>.tmp name,
+        so concurrent puts of the same key could race a partial file
+        into place or crash on each other's renamed tmp.  With
+        per-writer tmp names every interleaving leaves a valid JSON
+        payload from one of the writers and no tmp litter."""
+        import threading
+
+        cache = PlanDiskCache(tmp_path)
+        errors = []
+
+        def writer(i):
+            try:
+                for _ in range(50):
+                    cache.put("shared", {"writer": i, "x": list(range(64))})
+            except BaseException as e:  # noqa: BLE001 - record any crash
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        payload = cache.get("shared")
+        assert payload is not None and payload["x"] == list(range(64))
+        assert not list(tmp_path.glob("*.tmp"))  # no leftover tmp files
 
 
 class TestKeyInvalidation:

@@ -66,6 +66,18 @@ class TestSelection:
                 for n in small_alexnet.conv_nodes()}
         assert fams == {"direct"}
 
+    def test_local_optimal_reports_uncoverable_scenario(self, small_alexnet):
+        """No finite canonical-layout primitive -> a descriptive error,
+        not a bare ``min() arg is an empty sequence``."""
+        from repro.core.costs import AnalyticCostModel, HardwareSpec
+        dead = AnalyticCostModel(HardwareSpec(
+            name="dead", peak_flops=1.0, mem_bw=1.0,
+            family_eff={f: 0.0 for f in
+                        ["direct", "im2", "kn2", "winograd", "fft",
+                         "pallas"]}))
+        with pytest.raises(ValueError, match="no CHW->CHW primitive"):
+            select_local_optimal(small_alexnet, dead)
+
 
 class TestExecution:
     @pytest.mark.parametrize("strategy", ["pbqp", "sum2d", "local",
