@@ -49,7 +49,11 @@ def calibrate(reps: int, min_time: float, verbose: bool):
     scns = []
     for build in _towers().values():
         scns.extend(scenarios_from_net(build()))
-    items = plan_sweep(scns)
+    # fused-pair measurements would multiply this benchmark's on-device
+    # sweep several-fold; it measures the calibration machinery itself,
+    # so stick to the prim/dt items (bench_plan_cache's fusion section
+    # covers fused-edge pricing)
+    items = plan_sweep(scns, fused=False)
     profile = HardwareProfile.new(reps=reps, min_time=min_time)
 
     def progress(i, n, item, t):

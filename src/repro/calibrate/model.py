@@ -27,7 +27,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 from ..core.costs import (
-    AnalyticCostModel, CostModel, prim_cost_key, transform_cost_key,
+    AnalyticCostModel, CostModel, fused_cost_key, prim_cost_key,
+    transform_cost_key,
 )
 from ..core.layouts import transform_feasible
 from ..core.primitives import Primitive
@@ -114,6 +115,43 @@ class CalibratedCostModel(CostModel):
             return v
         self.fallback_hits += 1
         return self.fallback.transform_cost(src, dst, shape_chw, dtype)
+
+    # -----------------------------------------------------------------
+    def _fused_cost(self, kind: str, prim: Primitive, scn: Scenario,
+                    layout: str) -> float:
+        """Measured fused-edge delta from the profile's fused-pair
+        entries (``fuse{in,out}::…``, timed by the sweep with
+        :func:`~repro.core.costs.measure_fused_primitive`): whole fused
+        invocation minus the native invocation, clamped at zero.  Falls
+        back to the fallback model's estimate when either entry is
+        uncovered — selection never fails on partial coverage.
+        """
+        if any(t in prim.tags for t in self.exclude_tags):
+            return float("inf")
+        native = prim.l_in if kind == "in" else prim.l_out
+        shape = scn.in_shape_chw if kind == "in" else scn.out_shape_chw
+        if layout == native:
+            return 0.0
+        if not transform_feasible(layout, native, shape):
+            return float("inf")
+        b = bucket_scenario(scn.with_(n=1), self.policy)
+        fused = self.profile.get(fused_cost_key(kind, prim.name, layout, b))
+        nat = self.profile.get(prim_cost_key(prim.name, b))
+        if fused is not None and nat is not None:
+            self.table_hits += 1
+            return max(0.0, fused - nat)
+        self.fallback_hits += 1
+        if kind == "in":
+            return self.fallback.fused_in_cost(prim, scn, layout)
+        return self.fallback.fused_out_cost(prim, scn, layout)
+
+    def fused_in_cost(self, prim: Primitive, scn: Scenario,
+                      l_src: str) -> float:
+        return self._fused_cost("in", prim, scn, l_src)
+
+    def fused_out_cost(self, prim: Primitive, scn: Scenario,
+                       l_dst: str) -> float:
+        return self._fused_cost("out", prim, scn, l_dst)
 
     # -----------------------------------------------------------------
     def coverage(self) -> dict:

@@ -28,7 +28,8 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from ..core.costs import (
-    measure_primitive, measure_transform, prim_cost_key, transform_cost_key,
+    fused_cost_key, measure_fused_primitive, measure_primitive,
+    measure_transform, prim_cost_key, transform_cost_key,
 )
 from ..core.layouts import default_dt_graph, transform_feasible
 from ..core.primitives import primitives_for
@@ -128,10 +129,18 @@ def _kernel_benchmarks():
             ("layout_transform", layout_transform.benchmark_entry)]
 
 
+#: layouts fused-pair measurements cover by default: the layouts
+#: primitives natively produce/consume — the ones fused edges can
+#: actually carry in a selected plan (sweeping all 7 would mostly time
+#: pairs no optimum ever uses)
+FUSE_SWEEP_LAYOUTS = ("CHW", "HWC", "HCW", "HWC8")
+
+
 def plan_sweep(scenarios: Sequence[Scenario], *,
                families: Optional[Sequence[str]] = None,
                exclude_tags: Sequence[str] = ("tpu-only",),
-               dt: bool = True, kernels: bool = False,
+               dt: bool = True, kernels: bool = False, fused: bool = True,
+               fuse_layouts: Sequence[str] = FUSE_SWEEP_LAYOUTS,
                policy: Optional[BucketPolicy] = None) -> List[SweepItem]:
     """Enumerate the measurements a profile over ``scenarios`` needs.
 
@@ -139,6 +148,14 @@ def plan_sweep(scenarios: Sequence[Scenario], *,
     CPU they run in Pallas interpret mode, whose timings price nothing
     real.  ``kernels`` adds the standalone kernel microbenchmarks (the
     CLI enables them on TPU, where the numbers are meaningful).
+
+    ``fused`` plans one measurement per (primitive, fusable layout)
+    pair — the whole fused invocation via
+    :func:`~repro.core.costs.measure_fused_primitive`, keyed
+    ``fuse{in,out}::…`` — so :class:`~repro.calibrate.model.
+    CalibratedCostModel` can serve *measured* fused-edge deltas instead
+    of the analytic discount.  Only single-image scenarios plan fused
+    pairs (deltas are per image; the selection layer scales by batch).
 
     Batched scenarios (``scn.n > 1``) plan one *prim* measurement per
     (primitive, scenario, batch-bucket) — the key carries the batch via
@@ -169,6 +186,24 @@ def plan_sweep(scenarios: Sequence[Scenario], *,
                 lambda reps, min_time, p=p, scn=scn:
                     measure_primitive(p, scn, reps=reps,
                                       min_time=min_time)))
+            if fused and scn.n == 1:
+                for kind, caps, native, shape in (
+                        ("in", p.fusable_in, p.l_in, scn.in_shape_chw),
+                        ("out", p.fusable_out, p.l_out, scn.out_shape_chw)):
+                    for lay in caps:
+                        if lay == native or lay not in fuse_layouts:
+                            continue
+                        if not transform_feasible(lay, native, shape):
+                            continue
+                        kw = {"l_in": lay} if kind == "in" \
+                            else {"l_out": lay}
+                        add(SweepItem(
+                            "fuse", fused_cost_key(kind, p.name, lay, scn),
+                            f"fuse-{kind}:{p.name} {lay} @ {scn.key()}",
+                            lambda reps, min_time, p=p, scn=scn, kw=kw:
+                                measure_fused_primitive(
+                                    p, scn, reps=reps, min_time=min_time,
+                                    **kw)))
         if kernels:
             for kname, entry in _kernel_benchmarks():
                 builder = entry(scn)

@@ -46,12 +46,22 @@ from .primitives import Primitive, convert_layout
 from .scenario import Scenario
 
 __all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
-           "COST_MODEL_SCHEMA", "time_callable", "measure_primitive",
-           "measure_transform", "prim_cost_key", "transform_cost_key"]
+           "COST_MODEL_SCHEMA", "FUSED_TRANSFORM_DISCOUNT", "time_callable",
+           "measure_primitive", "measure_fused_primitive",
+           "measure_transform", "prim_cost_key", "transform_cost_key",
+           "fused_cost_key"]
 
 #: bump when the *meaning* of costs changes (units, conventions, embedding)
 #: — persisted plan caches keyed on older schemas are invalidated.
-COST_MODEL_SCHEMA = 1
+#: 2: edges are priced min(materialized DT, fused prologue, fused
+#:    epilogue) — plans solved under materialized-only pricing are stale.
+COST_MODEL_SCHEMA = 2
+
+#: analytic estimate of how much of a materialized DT round trip a fused
+#: prologue/epilogue still pays: the kernel's remapped read (or store)
+#: covers the tensor once at strided bandwidth, while a materialized
+#: transform pays a strided read + a write + its own dispatch.
+FUSED_TRANSFORM_DISCOUNT = 0.25
 
 
 class CostModel:
@@ -63,6 +73,33 @@ class CostModel:
     def transform_cost(self, src: str, dst: str,
                        shape_chw: Tuple[int, int, int], dtype) -> float:
         raise NotImplementedError
+
+    # -------------------------------------------------------------
+    # fused-edge pricing (per image; the PBQP edge builder scales by
+    # the net's minibatch exactly as it does materialized DT costs)
+    # -------------------------------------------------------------
+    def fused_in_cost(self, prim: Primitive, scn: Scenario,
+                      l_src: str) -> float:
+        """Extra cost of ``prim`` reading ``l_src``-layout input in its
+        prologue instead of its native ``l_in`` (no materialized DT).
+
+        Default heuristic: a fused prologue is one remapped pass over
+        the tensor, a fixed fraction of the materialized round trip.
+        Capability (``l_src in prim.fusable_in``) is the *selection*
+        layer's concern; this prices the transform assuming it fuses.
+        """
+        if l_src == prim.l_in:
+            return 0.0
+        return FUSED_TRANSFORM_DISCOUNT * self.transform_cost(
+            l_src, prim.l_in, scn.in_shape_chw, scn.dtype)
+
+    def fused_out_cost(self, prim: Primitive, scn: Scenario,
+                       l_dst: str) -> float:
+        """Extra cost of ``prim`` emitting ``l_dst`` in its epilogue."""
+        if l_dst == prim.l_out:
+            return 0.0
+        return FUSED_TRANSFORM_DISCOUNT * self.transform_cost(
+            prim.l_out, l_dst, scn.out_shape_chw, scn.dtype)
 
     def dt_graph(self) -> DTGraph:
         """The library's DT graph priced by this model's transform_cost."""
@@ -141,6 +178,19 @@ def transform_cost_key(src: str, dst: str,
     return f"dt::{src}->{dst}::{'x'.join(map(str, shape_chw))}"
 
 
+def fused_cost_key(kind: str, name: str, layout: str, scn: Scenario) -> str:
+    """Cache/profile entry key for one fused (primitive, layout) pair.
+
+    ``kind`` is ``"in"`` (prologue reads ``layout``) or ``"out"``
+    (epilogue emits ``layout``); the stored value is the *whole fused
+    invocation* time — the fused-edge delta is recovered against the
+    primitive's native ``prim_cost_key`` entry at lookup time.
+    """
+    if kind not in ("in", "out"):
+        raise ValueError(f"kind must be 'in' or 'out', got {kind!r}")
+    return f"fuse{kind}::{name}::{layout}::{scn.key()}"
+
+
 def measure_primitive(prim: Primitive, scn: Scenario, *, reps: int = 3,
                       min_time: float = 5e-3) -> float:
     """On-device wall time of one (primitive, scenario) pair (seconds).
@@ -170,6 +220,35 @@ def measure_primitive(prim: Primitive, scn: Scenario, *, reps: int = 3,
         xs = rng.normal(size=scn.in_shape_nchw).astype(np.float32)
         xin = jnp.asarray(np.stack([layout.to_memory(x) for x in xs]))
         fn = jax.jit(jax.vmap(prim.make(scn), in_axes=(0, None)))
+    return time_callable(fn, (xin, packed), reps=reps, min_time=min_time)
+
+
+def measure_fused_primitive(prim: Primitive, scn: Scenario, *,
+                            l_in: Optional[str] = None,
+                            l_out: Optional[str] = None,
+                            reps: int = 3, min_time: float = 5e-3) -> float:
+    """On-device wall time of one *fused* invocation (seconds).
+
+    Same discipline as :func:`measure_primitive`, but the input is
+    synthesized in the fused ``l_in`` layout and the timed callable is
+    ``prim.make_fused(scn, l_in, l_out)`` — the exact program the fused
+    execution path compiles, so measured fused-edge deltas price what
+    serving runs.
+    """
+    rng = np.random.default_rng(0)
+    w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+    b = rng.normal(size=(scn.m,)).astype(np.float32)
+    packed = prim.prepare(scn, w, b)
+    layout = LAYOUT_BY_NAME[l_in or prim.l_in]
+    make = lambda: prim.make_fused(scn, l_in=l_in, l_out=l_out)
+    if scn.n == 1:
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        xin = jnp.asarray(layout.to_memory(x))
+        fn = jax.jit(make())
+    else:
+        xs = rng.normal(size=scn.in_shape_nchw).astype(np.float32)
+        xin = jnp.asarray(np.stack([layout.to_memory(x) for x in xs]))
+        fn = jax.jit(jax.vmap(make(), in_axes=(0, None)))
     return time_callable(fn, (xin, packed), reps=reps, min_time=min_time)
 
 
@@ -254,6 +333,46 @@ class ProfiledCostModel(CostModel):
         if self._dirty >= 20:
             self._save()
         return t
+
+    # -------------------------------------------------------------
+    def _fused_cost(self, kind: str, prim: Primitive, scn: Scenario,
+                    layout: str) -> float:
+        """Measured fused-edge delta: fused invocation − native, >= 0.
+
+        Measured per image (n=1) like the DT transforms — the selection
+        layer scales edge matrices by the net's minibatch.
+        """
+        if any(t in prim.tags for t in self.exclude_tags):
+            return float("inf")
+        from .layouts import transform_feasible
+        native = prim.l_in if kind == "in" else prim.l_out
+        shape = scn.in_shape_chw if kind == "in" else scn.out_shape_chw
+        if layout == native:
+            return 0.0
+        if not transform_feasible(layout, native, shape):
+            return float("inf")
+        scn1 = scn.with_(n=1)
+        key = fused_cost_key(kind, prim.name, layout, scn1)
+        if key not in self._cache:
+            kw = {"l_in": layout} if kind == "in" else {"l_out": layout}
+            t = measure_fused_primitive(prim, scn1, reps=self.reps,
+                                        min_time=self.min_time, **kw)
+            if self.verbose:
+                print(f"  profiled fuse-{kind} {prim.name} <- {layout} on "
+                      f"{scn1.key()}: {t*1e3:.3f} ms")
+            self._cache[key] = t
+            self._dirty += 1
+            if self._dirty >= 20:
+                self._save()
+        return max(0.0, self._cache[key] - self.primitive_cost(prim, scn1))
+
+    def fused_in_cost(self, prim: Primitive, scn: Scenario,
+                      l_src: str) -> float:
+        return self._fused_cost("in", prim, scn, l_src)
+
+    def fused_out_cost(self, prim: Primitive, scn: Scenario,
+                       l_dst: str) -> float:
+        return self._fused_cost("out", prim, scn, l_dst)
 
 
 # ----------------------------------------------------------------------
@@ -357,6 +476,22 @@ class AnalyticCostModel(CostModel):
                 f *= 4.0   # per-channel dispatch overhead
             if "shift" in prim.name:
                 act_bytes += el * scn.k * scn.k * np.prod(scn.out_shape_chw)
+        elif fam == "pallas":
+            # the Pallas kernels inherit their algorithmic cousins'
+            # traffic/flop shapes: the im2col GEMM materializes a
+            # K^2-inflated Toeplitz matrix through HBM, Winograd trades
+            # a flop discount for transform workspace traffic, and the
+            # direct/pointwise kernels stream the VMEM-resident strip
+            # with no extra HBM traffic.
+            if "im2col" in prim.name:
+                act_bytes += el * scn.k * scn.k * np.prod(scn.in_shape_chw)
+            elif "wino" in prim.name:
+                m_ = int(prim.name.split("_f")[1][0])
+                a = m_ + scn.k - 1
+                f = f * (a * a) / (m_ * m_ * scn.k * scn.k)
+                f += 2.0 * el * np.prod(scn.in_shape_nchw)
+                act_bytes *= 2.5
+                w_bytes *= 2.5
         return f, float(act_bytes), float(w_bytes)
 
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:

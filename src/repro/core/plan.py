@@ -40,6 +40,10 @@ class CompiledNet:
     #: minibatch the executable was compiled for: 1 -> (C, H, W) in/out,
     #: > 1 -> (N, C, H, W) in and a leading N axis on every output
     batch: int = 1
+    #: edges executed as fused prologues/epilogues instead of
+    #: materialized convert_layout dispatches (observability for tests
+    #: and the fusion benchmark)
+    fused_edges: int = 0
 
     def __call__(self, x):
         return self.fn(jnp.asarray(x), self.params)
@@ -60,13 +64,43 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     the whole tower for N images — per-image dispatch/packing overhead
     is paid once, which is exactly the amortization the batch-aware
     cost model prices (``Scenario.n``).  Input becomes (N, C, H, W) and
-    every output gains a leading N axis."""
+    every output gains a leading N axis.
+
+    **Transform fusion pass.**  Edges the selection realized as fused
+    (``sel.fusions``, see :func:`~repro.core.selection.select_pbqp` with
+    ``fuse=True``) get no ``convert_layout`` dispatch at all: the
+    consumer's maker is built via ``Primitive.make_fused`` to read the
+    producer's layout in its prologue (kind ``"in"``), or the producer's
+    to emit the consumer's layout in its epilogue (kind ``"out"``).  The
+    fused call executes as ONE region — under the default per-layer
+    barriers the transform can never be split back out into an HBM
+    round trip.  The pass is orthogonal to ``fuse_across_layers`` and
+    ``batch``: fused makers are emitted regardless of barrier placement
+    and are vmap-safe, so all flag combinations compose."""
     global _COMPILE_COUNT
     _COMPILE_COUNT += 1
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     t0 = time.perf_counter()
     net = sel.net
+
+    # fusion pass: effective wire layouts per conv node.  Kind "in"
+    # means the consumer reads the producer's declared l_out; kind
+    # "out" means the (single-consumer) producer emits the consumer's
+    # l_in.  Selection guarantees an edge is fused or converted, never
+    # both, so the two maps cannot conflict.
+    fusions = sel.fusions
+    eff_in: Dict[str, str] = {}
+    eff_out: Dict[str, str] = {}
+    for (src, dst), kind in fusions.items():
+        if kind == "in":
+            eff_in[dst] = sel.choices[src].l_out
+        elif kind == "out":
+            eff_out[src] = sel.choices[dst].l_in
+        else:
+            raise ValueError(f"unknown fusion kind {kind!r} on edge "
+                             f"({src}, {dst})")
+
     packed: Dict[str, Any] = {}
     makers: Dict[str, Callable] = {}
     for nid in net.order:
@@ -75,7 +109,9 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         if node.kind == "conv":
             p = raw_params[nid]
             packed[nid] = ch.primitive.prepare(node.scn, p["w"], p["b"])
-            makers[nid] = ch.primitive.make(node.scn)
+            makers[nid] = ch.primitive.make_fused(
+                node.scn, l_in=eff_in.get(nid, ch.l_in),
+                l_out=eff_out.get(nid, ch.l_out))
         elif node.kind == "op" and nid in raw_params:
             packed[nid] = jax.tree.map(jnp.asarray, raw_params[nid])
 
@@ -119,7 +155,7 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         run = jax.vmap(run, in_axes=(0, None))
     fn = jax.jit(run) if jit else run
     return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0,
-                       batch=batch)
+                       batch=batch, fused_edges=len(fusions))
 
 
 def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,

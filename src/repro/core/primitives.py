@@ -42,7 +42,13 @@ from .layouts import LAYOUT_BY_NAME, Layout
 from .scenario import Scenario
 from .winograd_transforms import winograd_matrices
 
-__all__ = ["Primitive", "build_registry", "convert_layout", "registry"]
+__all__ = ["Primitive", "build_registry", "convert_layout", "registry",
+           "FUSABLE_LAYOUTS"]
+
+#: layouts the generic jnp prologue/epilogue wrapper can absorb — every
+#: permutation layout plus the blocked HWC8 (whose feasibility is gated
+#: per shape by ``layouts.transform_feasible`` at pricing time).
+FUSABLE_LAYOUTS = ("CHW", "HWC", "HCW", "CWH", "WCH", "WHC", "HWC8")
 
 
 # ----------------------------------------------------------------------
@@ -96,6 +102,53 @@ class Primitive:
     #: scenario -> f(x_mem, packed) -> y_mem   (pure, jit-able)
     make: Callable[[Scenario], Callable]
     tags: Tuple[str, ...] = ()
+    #: layouts the routine can consume *directly* in its prologue (fused
+    #: read: no materialized DT round trip on the incoming edge)
+    fusable_in: Tuple[str, ...] = ()
+    #: layouts the routine can emit directly in its epilogue
+    fusable_out: Tuple[str, ...] = ()
+    #: optional custom fused builder ``(scn, l_in, l_out) -> f(x, packed)``
+    #: — Pallas primitives install kernel variants whose BlockSpec index
+    #: maps remap the grid (true in-kernel prologue/epilogue fusion);
+    #: jnp primitives fall back to the generic wrapper below.
+    fused: Optional[Callable] = None
+
+    def make_fused(self, scn: Scenario, l_in: Optional[str] = None,
+                   l_out: Optional[str] = None) -> Callable:
+        """Entry point consuming ``l_in``-layout input and emitting
+        ``l_out``-layout output (defaults: the native layouts).
+
+        The generic path rewrites the conversion *inside* the primitive's
+        call region: executed without an optimization barrier between the
+        transform and the compute (see ``core.plan``), XLA folds the
+        layout remap into the kernel's first read / last write instead of
+        materializing an intermediate tensor through HBM.  Primitives
+        with a custom ``fused`` builder get real in-kernel fusion.
+        """
+        li = l_in or self.l_in
+        lo = l_out or self.l_out
+        if li == self.l_in and lo == self.l_out:
+            return self.make(scn)
+        if li != self.l_in and li not in self.fusable_in:
+            raise ValueError(f"{self.name}: cannot fuse input layout {li} "
+                             f"(fusable_in={self.fusable_in})")
+        if lo != self.l_out and lo not in self.fusable_out:
+            raise ValueError(f"{self.name}: cannot fuse output layout {lo} "
+                             f"(fusable_out={self.fusable_out})")
+        if self.fused is not None:
+            return self.fused(scn, li, lo)
+        inner = self.make(scn)
+        nat_in, nat_out = self.l_in, self.l_out
+
+        def f(x, packed):
+            if li != nat_in:
+                x = convert_layout(x, li, nat_in)
+            y = inner(x, packed)
+            if lo != nat_out:
+                y = convert_layout(y, nat_out, lo)
+            return y
+
+        return f
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"<{self.family}:{self.name} {self.l_in}->{self.l_out}>"
@@ -195,11 +248,19 @@ def _sum1d(scn: Scenario):
     return f
 
 
-def _shift_add(scn: Scenario, layout: str, use_scan: bool):
-    """Shift-and-add loop nest over the K x K kernel positions."""
+def _shift_add(scn: Scenario, layout: str, use_scan: bool,
+               l_in: Optional[str] = None, l_out: Optional[str] = None):
+    """Shift-and-add loop nest over the K x K kernel positions.
+
+    ``l_in``/``l_out`` override the wire layouts (transform fusion);
+    the CHW working layout means a CHW wire fuses for free.
+    """
+    l_in = l_in or layout
+    l_out = l_out or layout
+
     def f(x, packed):
         w, b = packed["w"], packed["b"]  # (M, C, K, K)
-        xc = _to_chw(x, layout)
+        xc = _to_chw(x, l_in)
         xp = _pad_chw(xc, scn.pad)
         oh, ow, s = scn.out_h, scn.out_w, scn.stride
 
@@ -223,7 +284,7 @@ def _shift_add(scn: Scenario, layout: str, use_scan: bool):
                     win = xp[:, i:i + (oh - 1) * s + 1:s,
                              j:j + (ow - 1) * s + 1:s]
                     acc = acc + jnp.einsum("mc,chw->mhw", w[:, :, i, j], win)
-        return _from_chw(acc + b[:, None, None], layout)
+        return _from_chw(acc + b[:, None, None], l_out)
 
     return f
 
@@ -319,10 +380,15 @@ def _im2_prepare(trans_b: bool, split_c: int = 0):
     return prep
 
 
-def _im2row_hwc(scn: Scenario, l_out: str, method: str, trans_b: bool):
-    """HWC-native im2row: patch rows (OH*OW, K*K*C) @ (K*K*C, M)."""
-    def f(x, packed):  # x: HWC
-        xc = jnp.transpose(x, (2, 0, 1))
+def _im2row_hwc(scn: Scenario, l_out: str, method: str, trans_b: bool,
+                l_in: str = "HWC"):
+    """HWC-native im2row: patch rows (OH*OW, K*K*C) @ (K*K*C, M).
+
+    ``l_in`` overrides the wire layout (transform fusion): a CHW wire
+    skips the internal transpose and feeds the patch gather directly.
+    """
+    def f(x, packed):
+        xc = _to_chw(x, l_in)
         pt = _patches_chw(xc, scn, method)  # (C, K, K, OH, OW)
         p = jnp.transpose(pt, (3, 4, 1, 2, 0)).reshape(
             scn.out_h * scn.out_w, -1)  # (OHOW, KKC)
@@ -386,21 +452,31 @@ def _pw_prepare(layout: str, trans_b: bool):
 # ======================================================================
 # kn2 family (stride-1 only)
 # ======================================================================
-def _kn2(scn: Scenario, col: bool, mode: str):
+def _kn2(scn: Scenario, col: bool, mode: str,
+         l_in: Optional[str] = None, l_out: Optional[str] = None):
     """kn2row / kn2col: one (M x C) GEMM per kernel position, shifted
-    accumulation into the output.  Low memory, no Toeplitz matrix."""
+    accumulation into the output.  Low memory, no Toeplitz matrix.
+
+    ``l_in``/``l_out`` override the wire layouts (transform fusion): the
+    prologue reads ``l_in`` directly — a CHW wire into kn2col skips the
+    internal transpose entirely — and the epilogue emits ``l_out`` by
+    retargeting the accumulation einsum where possible.
+    """
+    l_in = l_in or ("HWC" if col else "CHW")
+    l_out = l_out or ("HWC" if col else "CHW")
+
     def f(x, packed):
         w, b = packed["w"], packed["b"]  # (K, K, M, C)
-        if col:  # HWC input
-            xc = jnp.transpose(x, (2, 0, 1))
-        else:
-            xc = x
+        xc = _to_chw(x, l_in)
         xp = _pad_chw(xc, scn.pad)
         oh, ow = scn.out_h, scn.out_w
+        # the accumulation einsum can emit either HWC or CHW directly —
+        # the epilogue-fusion lever; other layouts convert from CHW
+        hwc_acc = l_out == "HWC"
 
         def one(i, j):
             win = xp[:, i:i + oh, j:j + ow]
-            if col:
+            if hwc_acc:
                 return jnp.einsum("chw,mc->hwm", win, w[i, j])
             return jnp.einsum("mc,chw->mhw", w[i, j], win)
 
@@ -410,11 +486,11 @@ def _kn2(scn: Scenario, col: bool, mode: str):
             def body(acc, t):
                 i, j = t // scn.k, t % scn.k
                 win = lax.dynamic_slice(xp, (0, i, j), (scn.c, oh, ow))
-                if col:
+                if hwc_acc:
                     return acc + jnp.einsum("chw,mc->hwm", win, wflat[t]), None
                 return acc + jnp.einsum("mc,chw->mhw", wflat[t], win), None
 
-            shape = (oh, ow, scn.m) if col else (scn.m, oh, ow)
+            shape = (oh, ow, scn.m) if hwc_acc else (scn.m, oh, ow)
             acc, _ = lax.scan(body, jnp.zeros(shape, x.dtype),
                               jnp.arange(scn.k * scn.k))
         elif mode == "stack":
@@ -426,9 +502,9 @@ def _kn2(scn: Scenario, col: bool, mode: str):
             for t in range(1, scn.k * scn.k):
                 acc = acc + one(t // scn.k, t % scn.k)
 
-        if col:
+        if hwc_acc:
             return acc + b
-        return acc + b[:, None, None]
+        return _from_chw(acc + b[:, None, None], l_out)
 
     return f
 
@@ -619,11 +695,21 @@ def _sup(k_in=None, stride1=False, blocked=False, kmin_hw=True):
 def build_registry() -> Tuple[Primitive, ...]:
     prims: List[Primitive] = []
 
-    def add(name, family, l_in, l_out, supports, prepare, make, tags=()):
+    def add(name, family, l_in, l_out, supports, prepare, make, tags=(),
+            fusable_in=FUSABLE_LAYOUTS, fusable_out=FUSABLE_LAYOUTS,
+            fused=None):
         prims.append(Primitive(name, family, l_in, l_out, supports,
-                               prepare, make, tuple(tags)))
+                               prepare, make, tuple(tags),
+                               tuple(fusable_in), tuple(fusable_out),
+                               fused))
 
     # ---------------- direct ----------------
+    # direct_lax is natively layout-parameterized: a fused edge simply
+    # rebuilds the conv with dimension_numbers matching the wire layout
+    # — the operator consumes/emits it directly, no transpose op at all
+    def _lax_fused(rhs):
+        return lambda scn, li, lo: _direct_lax(scn, li, lo, rhs)
+
     for l_in, l_out in [("CHW", "CHW"), ("HWC", "HWC"), ("CHW", "HWC"),
                         ("HWC", "CHW"), ("HCW", "HCW")]:
         for rhs in (["OIHW", "HWIO"] if l_in in ("CHW", "HWC") else ["OIHW"]):
@@ -631,47 +717,67 @@ def build_registry() -> Tuple[Primitive, ...]:
                 "direct", l_in, l_out, _sup(),
                 _direct_lax_prepare(rhs),
                 functools.partial(_direct_lax, l_in=l_in, l_out=l_out,
-                                  rhs_spec=rhs))
+                                  rhs_spec=rhs),
+                fusable_in=tuple(_DN_LHS), fusable_out=tuple(_DN_LHS),
+                fused=_lax_fused(rhs))
+    def _shift_fused(layout, use_scan):
+        return lambda scn, li, lo: _shift_add(scn, layout, use_scan,
+                                              l_in=li, l_out=lo)
+
     add("sum2d", "direct", "CHW", "CHW", _sup(), _std_prepare, _sum2d,
         tags=("baseline",))
     add("sum1d", "direct", "CHW", "CHW", _sup(), _std_prepare, _sum1d)
     for layout in ["CHW", "HWC", "HCW"]:
         add(f"direct_shiftadd_{layout.lower()}", "direct", layout, layout,
             _sup(), _std_prepare,
-            functools.partial(_shift_add, layout=layout, use_scan=False))
+            functools.partial(_shift_add, layout=layout, use_scan=False),
+            fused=_shift_fused(layout, False))
     for layout in ["CHW", "HWC"]:
         add(f"direct_shiftscan_{layout.lower()}", "direct", layout, layout,
             _sup(), _std_prepare,
-            functools.partial(_shift_add, layout=layout, use_scan=True))
+            functools.partial(_shift_add, layout=layout, use_scan=True),
+            fused=_shift_fused(layout, True))
     add("direct_blocked_hwc8", "direct", "HWC8", "HWC8",
         _sup(blocked=True), _blocked_prepare, _blocked_hwc8)
 
     # ---------------- im2 ----------------
+    def _im2_fused(method, trans_b, split_c=0):
+        return lambda scn, li, lo: _im2(scn, li, lo, method, trans_b,
+                                        split_c)
+
+    def _im2row_fused(method, trans_b):
+        return lambda scn, li, lo: _im2row_hwc(scn, lo, method, trans_b,
+                                               l_in=li)
+
     for method in ["xla", "manual"]:
         for trans_b in [False, True]:
             t = "t" if trans_b else "n"
             add(f"im2col_{method}_{t}_chw", "im2", "CHW", "CHW", _sup(),
                 _im2_prepare(trans_b),
                 functools.partial(_im2, l_in="CHW", l_out="CHW",
-                                  method=method, trans_b=trans_b))
+                                  method=method, trans_b=trans_b),
+                fused=_im2_fused(method, trans_b))
             add(f"im2row_{method}_{t}_hwc", "im2", "HWC", "HWC", _sup(),
                 _im2row_prepare(trans_b),
                 functools.partial(_im2row_hwc, l_out="HWC", method=method,
-                                  trans_b=trans_b))
+                                  trans_b=trans_b),
+                fused=_im2row_fused(method, trans_b))
     add("im2col_xla_n_chw_hwc", "im2", "CHW", "HWC", _sup(),
         _im2_prepare(False),
         functools.partial(_im2, l_in="CHW", l_out="HWC", method="xla",
-                          trans_b=False))
+                          trans_b=False),
+        fused=_im2_fused("xla", False))
     add("im2row_xla_n_hwc_chw", "im2", "HWC", "CHW", _sup(),
         _im2row_prepare(False),
         functools.partial(_im2row_hwc, l_out="CHW", method="xla",
-                          trans_b=False))
+                          trans_b=False),
+        fused=_im2row_fused("xla", False))
     for split in [4, 8]:
         add(f"im2col_split{split}_chw", "im2", "CHW", "CHW", _sup(),
             _im2_prepare(False, split_c=split),
             functools.partial(_im2, l_in="CHW", l_out="CHW", method="xla",
                               trans_b=False, split_c=split),
-            tags=("lowmem",))
+            tags=("lowmem",), fused=_im2_fused("xla", False, split))
     # pointwise K=1 GEMM specialisations
     for layout in ["CHW", "HWC"]:
         for trans_b in [False, True]:
@@ -684,15 +790,25 @@ def build_registry() -> Tuple[Primitive, ...]:
         functools.partial(_pw, layout="HCW", trans_b=False))
 
     # ---------------- kn2 ----------------
+    def _kn2_fused(col, mode):
+        return lambda scn, li, lo: _kn2(scn, col, mode, l_in=li, l_out=lo)
+
     for col, layout in [(False, "CHW"), (True, "HWC")]:
         nm = "kn2col" if col else "kn2row"
         for mode in ["unroll", "scan", "stack"]:
             add(f"{nm}_{mode}_{layout.lower()}", "kn2", layout, layout,
                 _sup(stride1=True), _kn2_prepare,
                 functools.partial(_kn2, col=col, mode=mode),
-                tags=("lowmem",) if mode != "stack" else ())
+                tags=("lowmem",) if mode != "stack" else (),
+                fused=_kn2_fused(col, mode))
 
     # ---------------- winograd ----------------
+    def _wino2d_fused(m_):
+        return lambda scn, li, lo: _wino2d(scn, m_, li, lo)
+
+    def _wino1d_fused(m_):
+        return lambda scn, li, lo: _wino1d(scn, m_, li, lo)
+
     for m_ in [2, 4, 6]:
         for layout in ["CHW", "HWC"]:
             for k in ([3, 5] if m_ != 6 else [3]):
@@ -700,7 +816,8 @@ def build_registry() -> Tuple[Primitive, ...]:
                     layout, layout, _sup(k_in=(k,), stride1=True),
                     _wino2d_prepare(m_),
                     functools.partial(_wino2d, m_=m_, l_in=layout,
-                                      l_out=layout))
+                                      l_out=layout),
+                    fused=_wino2d_fused(m_))
     for m_ in [2, 4]:
         for layout in ["CHW", "HWC"]:
             for k in [3, 5]:
@@ -709,24 +826,32 @@ def build_registry() -> Tuple[Primitive, ...]:
                     _wino1d_prepare(m_),
                     functools.partial(_wino1d, m_=m_, l_in=layout,
                                       l_out=layout),
-                    tags=("lowmem",))
+                    tags=("lowmem",), fused=_wino1d_fused(m_))
 
     # ---------------- fft ----------------
+    def _fft2d_fused(pow2, subsample=False):
+        return lambda scn, li, lo: _fft2d(scn, li, lo, pow2, subsample)
+
+    def _fft1d_fused(pow2):
+        return lambda scn, li, lo: _fft1d_sum(scn, li, lo, pow2)
+
     for layout in ["CHW", "HWC"]:
         for pow2 in [False, True]:
             p = "p2" if pow2 else "ex"
             add(f"fft2d_{p}_{layout.lower()}", "fft", layout, layout,
                 _sup(stride1=True), _fft2d_prepare(pow2),
                 functools.partial(_fft2d, l_in=layout, l_out=layout,
-                                  pow2=pow2))
+                                  pow2=pow2),
+                fused=_fft2d_fused(pow2))
             add(f"fft1d_sum_{p}_{layout.lower()}", "fft", layout, layout,
                 _sup(stride1=True), _fft1d_prepare(pow2),
                 functools.partial(_fft1d_sum, l_in=layout, l_out=layout,
                                   pow2=pow2),
-                tags=("lowmem",))
+                tags=("lowmem",), fused=_fft1d_fused(pow2))
     add("fft2d_strided_chw", "fft", "CHW", "CHW", _sup(), _fft2d_prepare(False),
         functools.partial(_fft2d, l_in="CHW", l_out="CHW", pow2=False,
-                          subsample=True))
+                          subsample=True),
+        fused=_fft2d_fused(False, True))
 
     # ---------------- pallas (TPU kernels; analytic costs) ----------------
     try:

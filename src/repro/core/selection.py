@@ -31,7 +31,7 @@ import numpy as np
 from . import pbqp
 from .costs import CostModel
 from .graph import Net, Node
-from .layouts import DTGraph
+from .layouts import DTGraph, transform_feasible
 from .primitives import Primitive, primitives_for
 from .scenario import Scenario
 
@@ -58,6 +58,11 @@ class SelectionResult:
     optimal: bool
     strategy: str
     solver_stats: Dict[str, int] = field(default_factory=dict)
+    #: per-edge fused realizations: (src, dst) -> "in" | "out".  "in":
+    #: the consumer's prologue reads the producer's layout directly;
+    #: "out": the producer's epilogue emits the consumer's layout.  An
+    #: edge is either here or in ``conversions``, never both.
+    fusions: Dict[Tuple[str, str], str] = field(default_factory=dict)
 
 
 def _conv_domain(node: Node, cost: CostModel,
@@ -83,14 +88,56 @@ def _edge_matrix(dt: DTGraph, shape, out_layouts: Sequence[str],
     return M
 
 
+def _fused_options(cost: CostModel, src_node: Node, dst_node: Node,
+                   cu: Choice, cv: Choice, single_consumer: bool,
+                   shape) -> List[Tuple[float, str]]:
+    """Fused realizations available for one (choice, choice) edge pair.
+
+    Returns ``[(per-image cost, kind)]`` with kind ``"in"`` (consumer
+    prologue reads ``cu.l_out``) or ``"out"`` (producer epilogue emits
+    ``cv.l_in``).  Capability comes from the primitive registry's
+    ``fusable_in``/``fusable_out`` declarations; blocked-layout
+    feasibility from :func:`~repro.core.layouts.transform_feasible`.
+    Epilogue fusion is only offered when the producer has a single
+    consumer — a fused-out producer changes the value *every* consumer
+    sees, so fan-out edges must materialize (or fuse on the consumer
+    side).
+    """
+    opts: List[Tuple[float, str]] = []
+    if cu.l_out == cv.l_in:
+        return opts
+    pv = cv.primitive
+    if pv is not None and cu.l_out in pv.fusable_in and \
+            transform_feasible(cu.l_out, pv.l_in, shape):
+        opts.append((cost.fused_in_cost(pv, dst_node.scn, cu.l_out), "in"))
+    pu = cu.primitive
+    if pu is not None and single_consumer and cv.l_in in pu.fusable_out \
+            and transform_feasible(pu.l_out, cv.l_in, shape):
+        opts.append((cost.fused_out_cost(pu, src_node.scn, cv.l_in), "out"))
+    return opts
+
+
+def _out_degree(net: Net) -> Dict[str, int]:
+    deg: Dict[str, int] = {}
+    for (src, _) in net.edges():
+        deg[src] = deg.get(src, 0) + 1
+    return deg
+
+
 def _build(net: Net, cost: CostModel, *,
            fixed: Optional[Dict[str, Primitive]] = None,
-           families: Optional[Sequence[str]] = None):
+           families: Optional[Sequence[str]] = None,
+           fuse: bool = False):
     """Build the PBQP instance; returns (problem, domains).
 
     ``fixed`` pins given conv nodes to a single primitive (domain size 1)
     — used by the baseline strategies, which still get optimal *layout*
     legalization through the op nodes.
+
+    ``fuse`` prices every edge entry as ``min(materialized DT chain,
+    fused prologue, fused epilogue)`` — the solver then sees transforms
+    at their fused price and can pick primitive pairs a materialized-only
+    model would reject (the tentpole of the fusion subsystem).
     """
     dt = cost.dt_graph()
     pb = pbqp.PBQP()
@@ -122,29 +169,67 @@ def _build(net: Net, cost: CostModel, *,
     # edge matrices scale with the net's minibatch (node costs already
     # price the whole batched invocation via Scenario.n).
     nb = max((n.scn.n for n in net.conv_nodes()), default=1)
+    deg = _out_degree(net)
     for (src, dst) in net.edges():
         shape = net.nodes[src].out_shape
         M = _edge_matrix(dt, shape,
                          [c.l_out for c in domains[src]],
                          [c.l_in for c in domains[dst]])
+        if fuse:
+            sn, dn = net.nodes[src], net.nodes[dst]
+            single = deg.get(src, 0) == 1
+            for i, cu in enumerate(domains[src]):
+                for j, cv in enumerate(domains[dst]):
+                    for c, _ in _fused_options(cost, sn, dn, cu, cv,
+                                               single, shape):
+                        if c < M[i, j]:
+                            M[i, j] = c
         pb.add_edge(src, dst, M * nb if nb > 1 else M)
 
     return pb, domains, dt
 
 
-def _legalize(net: Net, dt: DTGraph,
-              choices: Dict[str, Choice]) -> Dict[Tuple[str, str], List[str]]:
-    conversions = {}
+def _legalize(net: Net, dt: DTGraph, choices: Dict[str, Choice], *,
+              cost: Optional[CostModel] = None, fuse: bool = False
+              ) -> Tuple[Dict[Tuple[str, str], List[str]],
+                         Dict[Tuple[str, str], str]]:
+    """Realize every mismatched edge as either a materialized conversion
+    chain or a fused prologue/epilogue.
+
+    The realization replays exactly the pricing :func:`_build` fed the
+    solver — ``min(materialized, fused options)``, materialized
+    preferred on ties — so the executed plan's transform cost is the one
+    the optimum accounted for.  With ``fuse=False`` (the paper's
+    system), every mismatched edge materializes.
+    """
+    conversions: Dict[Tuple[str, str], List[str]] = {}
+    fusions: Dict[Tuple[str, str], str] = {}
+    deg = _out_degree(net)
     for (src, dst) in net.edges():
         lo = choices[src].l_out
         li = choices[dst].l_in
-        if lo != li:
-            chain = dt.shortest_chain(lo, li, net.nodes[src].out_shape)
+        if lo == li:
+            continue
+        shape = net.nodes[src].out_shape
+        kind = "dt"
+        if fuse and cost is not None:
+            costs, idx = dt.cost_matrix(shape)
+            options = [(costs[idx[lo], idx[li]], "dt")]
+            options += _fused_options(cost, net.nodes[src], net.nodes[dst],
+                                      choices[src], choices[dst],
+                                      deg.get(src, 0) == 1, shape)
+            best = min(options, key=lambda t: t[0])  # stable: dt on ties
+            if np.isfinite(best[0]):
+                kind = best[1]
+        if kind == "dt":
+            chain = dt.shortest_chain(lo, li, shape)
             if chain is None:
                 raise RuntimeError(
                     f"illegal edge {src}->{dst}: no DT path {lo}->{li}")
             conversions[(src, dst)] = chain
-    return conversions
+        else:
+            fusions[(src, dst)] = kind
+    return conversions, fusions
 
 
 def warm_assignment(prev: "SelectionResult",
@@ -181,37 +266,44 @@ def warm_assignment(prev: "SelectionResult",
 
 def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
                 families: Optional[Sequence[str]] = None,
-                warm_start: Optional["SelectionResult"] = None
-                ) -> SelectionResult:
+                warm_start: Optional["SelectionResult"] = None,
+                fuse: bool = False) -> SelectionResult:
     """The paper's approach: globally optimal primitive selection.
 
     ``warm_start`` seeds the branch-and-bound incumbent with a previous
     :class:`SelectionResult` for a structurally-identical net (e.g. the
     neighbouring scenario bucket in the serving plan cache) — same optimum,
     typically far fewer branch-and-bound nodes.
+
+    ``fuse=True`` enables transform fusion: edges are priced
+    ``min(materialized DT, fused prologue, fused epilogue)`` and the
+    result carries per-edge fused realizations that
+    :func:`~repro.core.plan.compile_plan` turns into fused calls.  Off
+    by default — the materialized system is the paper's.
     """
-    pb, domains, dt = _build(net, cost, families=families)
+    pb, domains, dt = _build(net, cost, families=families, fuse=fuse)
     if warm_start is not None:
         warm = warm_assignment(warm_start, domains)
         sol = pbqp.solve_warm(pb, warm, exact=exact)
     else:
         sol = pbqp.solve(pb, exact=exact)
     choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
-    conversions = _legalize(net, dt, choices)
+    conversions, fusions = _legalize(net, dt, choices, cost=cost, fuse=fuse)
     return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,
-                           "pbqp", sol.stats)
+                           "pbqp", sol.stats, fusions)
 
 
 def select_fixed(net: Net, cost: CostModel,
-                 pick: Dict[str, Primitive], strategy: str) -> SelectionResult:
+                 pick: Dict[str, Primitive], strategy: str, *,
+                 fuse: bool = False) -> SelectionResult:
     """Pin conv nodes to given primitives; op-node layouts still get the
     optimal legalization (restricted PBQP over layouts only)."""
-    pb, domains, dt = _build(net, cost, fixed=pick)
+    pb, domains, dt = _build(net, cost, fixed=pick, fuse=fuse)
     sol = pbqp.solve(pb, exact=True)
     choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
-    conversions = _legalize(net, dt, choices)
+    conversions, fusions = _legalize(net, dt, choices, cost=cost, fuse=fuse)
     return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,
-                           strategy, sol.stats)
+                           strategy, sol.stats, fusions)
 
 
 def _sum2d_prim() -> Primitive:

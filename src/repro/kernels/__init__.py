@@ -44,10 +44,21 @@ def register_pallas_primitives(add, _sup) -> None:
                 x, packed["w"], packed["b"], stride=scn.stride, pad=scn.pad)
         return f
 
+    def direct_fused(scn, l_in, l_out):
+        # in-kernel prologue/epilogue: the CHW strip is transposed while
+        # VMEM-resident and CHW output is stored through a remapped out
+        # BlockSpec (see kernels/conv_direct/kernel.py)
+        def f(x, packed):
+            return conv_direct.conv_direct(
+                x, packed["w"], packed["b"], stride=scn.stride,
+                pad=scn.pad, in_layout=l_in, out_layout=l_out)
+        return f
+
     base = _sup()
     add("pallas_direct_hwc", "pallas", "HWC", "HWC",
         lambda s: base(s) and vmem_ok(s), direct_prepare, direct_make,
-        tags=("tpu-only",))
+        tags=("tpu-only",), fusable_in=("CHW",), fusable_out=("CHW",),
+        fused=direct_fused)
 
     # ---- im2col GEMM ----
     def im2_prepare(scn, w, b):
@@ -59,8 +70,18 @@ def register_pallas_primitives(add, _sup) -> None:
                 x, packed["w"], packed["b"], stride=scn.stride, pad=scn.pad)
         return f
 
+    def im2_fused(scn, l_in, l_out):
+        # HWC input feeds the Toeplitz gather directly; HWC output runs
+        # the GEMM with the transposed-output epilogue BlockSpec
+        def f(x, packed):
+            return conv_im2col.conv_im2col(
+                x, packed["w"], packed["b"], stride=scn.stride,
+                pad=scn.pad, in_layout=l_in, out_layout=l_out)
+        return f
+
     add("pallas_im2col_chw", "pallas", "CHW", "CHW", base,
-        im2_prepare, im2_make, tags=("tpu-only",))
+        im2_prepare, im2_make, tags=("tpu-only",),
+        fusable_in=("HWC",), fusable_out=("HWC",), fused=im2_fused)
 
     # ---- winograd F(2,3)/F(4,3) ----
     for m_ in (2, 4):
@@ -75,9 +96,20 @@ def register_pallas_primitives(add, _sup) -> None:
                     stride=scn.stride, pad=scn.pad)
             return f
 
+        def wino_fused(scn, l_in, l_out, m_=m_):
+            # the inverse output transform emits HWC itself (reordered
+            # einsum) — epilogue fusion with zero extra passes
+            def f(x, packed):
+                return winograd_gemm.conv_winograd(
+                    x, packed["u"], packed["b"], m_=m_, k=scn.k,
+                    stride=scn.stride, pad=scn.pad, in_layout=l_in,
+                    out_layout=l_out)
+            return f
+
         add(f"pallas_wino_f{m_}x3_chw", "pallas", "CHW", "CHW",
             _sup(k_in=(3,), stride1=True), wino_prepare, wino_make,
-            tags=("tpu-only",))
+            tags=("tpu-only",), fusable_in=("HWC",), fusable_out=("HWC",),
+            fused=wino_fused)
 
     # ---- pointwise (K=1) MXU GEMM ----
     def pw_prepare(scn, w, b):
@@ -93,5 +125,34 @@ def register_pallas_primitives(add, _sup) -> None:
             return y + packed["b"][:, None, None]
         return f
 
+    def pw_fused(scn, l_in, l_out):
+        # the GEMM kernel's layout-parameterized entry points absorb
+        # both ends: an HWC input is consumed as the (OHOW, C) LHS and
+        # an HWC output is emitted via the transposed-output epilogue —
+        # no standalone transpose in any combination
+        def f(x, packed):
+            s = scn.stride
+            w = packed["w"]  # (M, C)
+            if l_in == "HWC":
+                xs = x[::s, ::s, :] if s > 1 else x
+                p = xs.reshape(-1, scn.c)  # (OHOW, C)
+                if l_out == "HWC":
+                    y = mm_ops.matmul(p, w.T)          # (OHOW, M)
+                    y = y.reshape(scn.out_h, scn.out_w, scn.m)
+                    return y + packed["b"]
+                y = mm_ops.matmul(p, w.T, out_layout="nm")  # (M, OHOW)
+                y = y.reshape(scn.m, scn.out_h, scn.out_w)
+                return y + packed["b"][:, None, None]
+            xs = x[:, ::s, ::s] if s > 1 else x
+            p = xs.reshape(scn.c, -1)  # (C, OHOW)
+            if l_out == "HWC":
+                y = mm_ops.matmul(w, p, out_layout="nm")   # (OHOW, M)
+                y = y.reshape(scn.out_h, scn.out_w, scn.m)
+                return y + packed["b"]
+            y = mm_ops.matmul(w, p).reshape(scn.m, scn.out_h, scn.out_w)
+            return y + packed["b"][:, None, None]
+        return f
+
     add("pallas_pw_gemm_chw", "pallas", "CHW", "CHW", _sup(k_in=(1,)),
-        pw_prepare, pw_make, tags=("tpu-only",))
+        pw_prepare, pw_make, tags=("tpu-only",),
+        fusable_in=("HWC",), fusable_out=("HWC",), fused=pw_fused)

@@ -21,11 +21,16 @@ from ..common import use_interpret
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
-                 oh: int, ow: int, c: int):
+                 oh: int, ow: int, c: int, chw_in: bool, chw_out: bool):
     acc_ref[...] = jnp.zeros_like(acc_ref)
     span_h = (oh - 1) * stride + 1
     span_w = (ow - 1) * stride + 1
     xa = x_ref[...]  # whole strip lives in VMEM
+    if chw_in:
+        # fused prologue: the producer handed us CHW; remap to the
+        # kernel's HWC working order while the strip is VMEM-resident
+        # (no HBM transpose round trip)
+        xa = jnp.transpose(xa, (1, 2, 0))
     for i in range(k):
         for j in range(k):
             win = jax.lax.slice(
@@ -34,17 +39,33 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
             acc_ref[...] += jnp.dot(
                 win.reshape(oh * ow, c), w_ref[i, j],
                 preferred_element_type=jnp.float32)
-    o_ref[...] = (acc_ref[...] + b_ref[...].astype(jnp.float32)).astype(
-        o_ref.dtype)
+    out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+    if chw_out:
+        # fused epilogue: emit the consumer's CHW layout through the
+        # remapped (bm, OH*OW) out BlockSpec
+        out = out.T
+    o_ref[...] = out.astype(o_ref.dtype)
 
 
 def conv_direct_pallas(x, w, b, *, stride: int = 1, bm: int = 128,
+                       in_layout: str = "HWC", out_layout: str = "HWC",
                        interpret=None):
-    """x: (Hp, Wp, C) pre-padded NHWC (N=1); w: (K, K, C, M), M % bm == 0.
+    """Pre-padded single-image direct conv; w: (K, K, C, M), M % bm == 0.
 
-    Returns (OH*OW, M) — the ops wrapper reshapes to (OH, OW, M).
+    Layout-parameterized entry point: ``in_layout`` is the layout the
+    input strip arrives in — ``"HWC"`` (native, shape (Hp, Wp, C)) or
+    ``"CHW"`` (shape (C, Hp, Wp), transposed in the kernel prologue).
+    ``out_layout`` picks the emitted layout: ``"HWC"`` returns
+    (OH*OW, M), ``"CHW"`` returns (M, OH*OW) stored via a remapped out
+    BlockSpec in the epilogue.  The ops wrapper reshapes to spatial.
     """
-    hp, wp, c = x.shape
+    assert in_layout in ("HWC", "CHW") and out_layout in ("HWC", "CHW")
+    chw_in = in_layout == "CHW"
+    chw_out = out_layout == "CHW"
+    if chw_in:
+        c, hp, wp = x.shape
+    else:
+        hp, wp, c = x.shape
     k, _, _, m = w.shape
     assert m % bm == 0
     oh = (hp - k) // stride + 1
@@ -53,17 +74,22 @@ def conv_direct_pallas(x, w, b, *, stride: int = 1, bm: int = 128,
         interpret = use_interpret()
 
     kern = functools.partial(_conv_kernel, k=k, stride=stride, oh=oh,
-                             ow=ow, c=c)
+                             ow=ow, c=c, chw_in=chw_in, chw_out=chw_out)
+    in_spec = pl.BlockSpec((c, hp, wp), lambda mi: (0, 0, 0)) if chw_in \
+        else pl.BlockSpec((hp, wp, c), lambda mi: (0, 0, 0))
+    out_spec = pl.BlockSpec((bm, oh * ow), lambda mi: (mi, 0)) if chw_out \
+        else pl.BlockSpec((oh * ow, bm), lambda mi: (0, mi))
+    out_shape = (m, oh * ow) if chw_out else (oh * ow, m)
     return pl.pallas_call(
         kern,
         grid=(m // bm,),
         in_specs=[
-            pl.BlockSpec((hp, wp, c), lambda mi: (0, 0, 0)),
+            in_spec,
             pl.BlockSpec((k, k, c, bm), lambda mi: (0, 0, 0, mi)),
             pl.BlockSpec((1, bm), lambda mi: (0, mi)),
         ],
-        out_specs=pl.BlockSpec((oh * ow, bm), lambda mi: (0, mi)),
-        out_shape=jax.ShapeDtypeStruct((oh * ow, m), x.dtype),
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((oh * ow, bm), jnp.float32)],
         interpret=interpret,
     )(x, w, b.reshape(1, m))

@@ -12,10 +12,22 @@ from .kernel import im2col_gemm_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "pad", "bm", "bn",
-                                             "bk"))
+                                             "bk", "in_layout",
+                                             "out_layout"))
 def conv_im2col(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128,
-                bn: int = 128, bk: int = 128):
-    """x: (C, H, W); w: (M, C, K, K); b: (M,) -> (M, OH, OW)."""
+                bn: int = 128, bk: int = 128, in_layout: str = "CHW",
+                out_layout: str = "CHW"):
+    """im2col conv, layout-parameterized (transform fusion entry point).
+
+    ``in_layout="HWC"`` accepts (H, W, C) input — the transpose feeds
+    straight into the Toeplitz gather, which XLA fuses (no materialized
+    CHW copy).  ``out_layout="HWC"`` returns (OH, OW, M) by running the
+    GEMM with the kernel's transposed-output epilogue (``out_layout=
+    "nm"`` BlockSpec remap) instead of transposing the product.
+    w: (M, C, K, K); b: (M,).
+    """
+    if in_layout == "HWC":
+        x = jnp.transpose(x, (2, 0, 1))
     c, h, wd = x.shape
     m, _, k, _ = w.shape
     oh = (h + 2 * pad - k) // stride + 1
@@ -34,8 +46,12 @@ def conv_im2col(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128,
     wp, _ = pad_to(wp, 1, bk_)
     pp, _ = pad_to(pmat, 0, bk_)
     pp, _ = pad_to(pp, 1, bn_)
-    bp, _ = pad_to(b, 0, bn_)  # unused pad target; bias applies to M rows
 
+    if out_layout == "HWC":
+        out = im2col_gemm_pallas(wp, pp, None, bm=bm_, bn=bn_, bk=bk_,
+                                 out_layout="nm")
+        out = out[:nn, :mm] + b[None, :]
+        return out.reshape(oh, ow, m)
     out = im2col_gemm_pallas(wp, pp, None, bm=bm_, bn=bn_, bk=bk_)
     out = out[:mm, :nn] + b[:, None]
     return out.reshape(m, oh, ow)

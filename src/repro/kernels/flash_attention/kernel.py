@@ -30,7 +30,11 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window: int, softcap: float,
-                  bq: int, bk: int, lk_valid: int):
+                  bq: int, bk: int, lk_valid: int, seq_major: bool = False):
+    # seq_major: tensors are (L, H, D) and blocks arrive (b, 1, d) — the
+    # head axis is squeezed here in the prologue/epilogue instead of a
+    # materialized (L, H, D) -> (H, L, D) transpose outside the kernel.
+    sq = (lambda ref: ref[:, 0]) if seq_major else (lambda ref: ref[0])
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -43,8 +47,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _compute():
         q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        q = q_ref[0].astype(jnp.float32) * scale
-        k = k_ref[0].astype(jnp.float32)
+        q = sq(q_ref).astype(jnp.float32) * scale
+        k = sq(k_ref).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
@@ -61,7 +65,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         alpha = jnp.exp(m_prev - m_cur)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-            p, v_ref[0].astype(jnp.float32))
+            p, sq(v_ref).astype(jnp.float32))
         m_ref[...] = m_cur
 
     # Skip fully-masked KV blocks (causal: block entirely in the future;
@@ -78,23 +82,39 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     @pl.when(ki == pl.num_programs(2) - 1)
     def _finish():
         l = l_ref[...]
-        o_ref[0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+        out = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(
             o_ref.dtype)
+        if seq_major:
+            o_ref[:, 0] = out
+        else:
+            o_ref[0] = out
 
 
 def flash_attention_pallas(q, k, v, *, scale: float, causal: bool = False,
                            window: int = 0, softcap: float = 0.0,
                            bq: int = 128, bk: int = 128, lk_valid=None,
-                           interpret=None):
+                           seq_major: bool = False, interpret=None):
     """q: (Hq, Lq, D); k, v: (Hkv, Lk, D).  Lq % bq == Lk % bk == 0.
 
     ``lk_valid``: true KV length before padding (positions beyond it are
     masked out).  GQA is expressed in the BlockSpec index map (kv head =
     q head // group) so KV tiles are fetched once per group, not
     replicated.
+
+    ``seq_major=True`` is the layout-parameterized fused entry point:
+    q is (Lq, Hq, D) and k/v are (Lk, Hkv, D) — the layout token/
+    projection stacks produce naturally.  The BlockSpec index maps fetch
+    (b, 1, d) tiles from the sequence-major arrays and the kernel
+    squeezes the head axis in its prologue, so no head-major transpose
+    is ever materialized; the output is emitted (Lq, Hq, D) the same
+    way in the epilogue.
     """
-    hq, lq, d = q.shape
-    hkv, lk, _ = k.shape
+    if seq_major:
+        lq, hq, d = q.shape
+        lk, hkv, _ = k.shape
+    else:
+        hq, lq, d = q.shape
+        hkv, lk, _ = k.shape
     assert hq % hkv == 0 and lq % bq == 0 and lk % bk == 0
     group = hq // hkv
     if interpret is None:
@@ -105,17 +125,30 @@ def flash_attention_pallas(q, k, v, *, scale: float, causal: bool = False,
     grid = (hq, lq // bq, lk // bk)
     kern = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        softcap=softcap, bq=bq, bk=bk, lk_valid=lk_valid)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
+        softcap=softcap, bq=bq, bk=bk, lk_valid=lk_valid,
+        seq_major=seq_major)
+    if seq_major:
+        in_specs = [
+            pl.BlockSpec((bq, 1, d), lambda h, i, j: (i, h, 0)),
+            pl.BlockSpec((bk, 1, d), lambda h, i, j: (j, h // group, 0)),
+            pl.BlockSpec((bk, 1, d), lambda h, i, j: (j, h // group, 0)),
+        ]
+        out_spec = pl.BlockSpec((bq, 1, d), lambda h, i, j: (i, h, 0))
+        out_shape = (lq, hq, d)
+    else:
+        in_specs = [
             pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((hq, lq, d), q.dtype),
+        ]
+        out_spec = pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0))
+        out_shape = (hq, lq, d)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),

@@ -11,29 +11,41 @@ from .kernel import flash_attention_pallas
 
 @functools.partial(jax.jit,
                    static_argnames=("causal", "window", "softcap",
-                                    "bq", "bk", "scale"))
+                                    "bq", "bk", "scale", "layout"))
 def flash_attention(q, k, v, *, scale=None, causal: bool = False,
                     window: int = 0, softcap: float = 0.0,
-                    bq: int = 128, bk: int = 128):
+                    bq: int = 128, bk: int = 128, layout: str = "HLD"):
     """Multi-head attention via the Pallas flash kernel.
 
-    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+    ``layout="HLD"`` (native): q is (B, Hq, Lq, D), k/v are
+    (B, Hkv, Lk, D) -> (B, Hq, Lq, D).  ``layout="LHD"`` is the fused
+    sequence-major entry point: q is (B, Lq, Hq, D) and the output
+    comes back (B, Lq, Hq, D) — the head/sequence remap happens in the
+    kernel's BlockSpec index maps, not as a materialized transpose.
     Handles GQA (Hq % Hkv == 0) and arbitrary Lq/Lk via padding; padded
     KV positions are masked inside the kernel via ``lk_valid``.
     """
-    b, hq, lq, d = q.shape
+    assert layout in ("HLD", "LHD")
+    seq_major = layout == "LHD"
+    seq_axis = 1 if seq_major else 2
+    if seq_major:
+        b, lq, hq, d = q.shape
+        lk = k.shape[1]
+    else:
+        b, hq, lq, d = q.shape
+        lk = k.shape[2]
     scale = float(scale if scale is not None else d ** -0.5)
-    lk = k.shape[2]
     bq_ = min(bq, max(8, lq))
     bk_ = min(bk, max(8, lk))
-    qp, _ = pad_to(q, 2, bq_)
-    kp, _ = pad_to(k, 2, bk_)
-    vp, _ = pad_to(v, 2, bk_)
+    qp, _ = pad_to(q, seq_axis, bq_)
+    kp, _ = pad_to(k, seq_axis, bk_)
+    vp, _ = pad_to(v, seq_axis, bk_)
 
     def one(qb, kb, vb):
         return flash_attention_pallas(
             qb, kb, vb, scale=scale, causal=causal, window=window,
-            softcap=softcap, bq=bq_, bk=bk_, lk_valid=lk)
+            softcap=softcap, bq=bq_, bk=bk_, lk_valid=lk,
+            seq_major=seq_major)
 
     out = jax.vmap(one)(qp, kp, vp)
-    return out[:, :, :lq, :]
+    return out[:, :lq] if seq_major else out[:, :, :lq, :]

@@ -18,12 +18,16 @@ from jax.experimental.pallas import tpu as pltpu
 from ..common import use_interpret
 
 
-def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, fuse_relu: bool):
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, fuse_relu: bool,
+               trans_lhs: bool, trans_out: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+    x = x_ref[...]
+    if trans_lhs:  # fused prologue: LHS tile arrives K-major, remap here
+        x = x.T
+    acc_ref[...] += jnp.dot(x, y_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
@@ -31,15 +35,21 @@ def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, fuse_relu: bool):
         acc = acc_ref[...]
         if fuse_relu:
             acc = jnp.maximum(acc, 0.0)
+        if trans_out:  # fused epilogue: emit the (N, M) output layout
+            acc = acc.T
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
-def _mm_bias_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *, fuse_relu: bool):
+def _mm_bias_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *, fuse_relu: bool,
+                    trans_lhs: bool, trans_out: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+    x = x_ref[...]
+    if trans_lhs:
+        x = x.T
+    acc_ref[...] += jnp.dot(x, y_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
@@ -47,15 +57,35 @@ def _mm_bias_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *, fuse_relu: bool):
         acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
         if fuse_relu:
             acc = jnp.maximum(acc, 0.0)
+        if trans_out:
+            acc = acc.T
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def matmul_pallas(x, y, bias=None, *, bm: int = 128, bn: int = 128,
                   bk: int = 128, fuse_relu: bool = False,
+                  lhs_layout: str = "mk", out_layout: str = "mn",
                   out_dtype=None, interpret=None):
     """``x @ y (+ bias)`` with all dims REQUIRED to be block multiples
-    (use ops.matmul for the padded general entry point)."""
-    m, k = x.shape
+    (use ops.matmul for the padded general entry point).
+
+    Layout-parameterized entry point (transform fusion):
+
+    * ``lhs_layout="km"`` — ``x`` is stored transposed, shape (K, M).
+      The BlockSpec index map fetches (bk, bm) tiles and the kernel
+      transposes them in its prologue, VMEM-resident: no materialized
+      transpose pass over the LHS.
+    * ``out_layout="nm"`` — the output is emitted transposed, shape
+      (N, M): the epilogue stores accumulator tiles through a remapped
+      (bn, bm) out BlockSpec.
+    """
+    assert lhs_layout in ("mk", "km") and out_layout in ("mn", "nm")
+    trans_lhs = lhs_layout == "km"
+    trans_out = out_layout == "nm"
+    if trans_lhs:
+        k, m = x.shape
+    else:
+        m, k = x.shape
     k2, n = y.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
     if interpret is None:
@@ -64,23 +94,29 @@ def matmul_pallas(x, y, bias=None, *, bm: int = 128, bn: int = 128,
 
     grid = (m // bm, n // bn, k // bk)
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)) if trans_lhs
+        else pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
     ]
     args = (x, y)
+    kw = dict(fuse_relu=fuse_relu, trans_lhs=trans_lhs,
+              trans_out=trans_out)
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         args = (x, y, bias.reshape(1, n))
-        kern = functools.partial(_mm_bias_kernel, fuse_relu=fuse_relu)
+        kern = functools.partial(_mm_bias_kernel, **kw)
     else:
-        kern = functools.partial(_mm_kernel, fuse_relu=fuse_relu)
+        kern = functools.partial(_mm_kernel, **kw)
 
+    out_spec = pl.BlockSpec((bn, bm), lambda i, j, kk: (j, i)) if trans_out \
+        else pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = (n, m) if trans_out else (m, n)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*args)

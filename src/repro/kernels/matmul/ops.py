@@ -10,22 +10,33 @@ from ..common import pad_to
 from .kernel import matmul_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "fuse_relu"))
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "fuse_relu",
+                                             "lhs_layout", "out_layout"))
 def matmul(x, y, bias=None, *, bm: int = 128, bn: int = 128, bk: int = 128,
-           fuse_relu: bool = False):
-    """General ``x @ y (+ bias)`` via the Pallas kernel, any shapes."""
-    m, k = x.shape
+           fuse_relu: bool = False, lhs_layout: str = "mk",
+           out_layout: str = "mn"):
+    """General ``x @ y (+ bias)`` via the Pallas kernel, any shapes.
+
+    ``lhs_layout="km"`` consumes a transposed (K, M) LHS in the kernel
+    prologue; ``out_layout="nm"`` emits the transposed (N, M) product in
+    the epilogue — no separate transpose pass in either case.
+    """
+    if lhs_layout == "km":
+        k, m = x.shape
+    else:
+        m, k = x.shape
     _, n = y.shape
     bm_ = min(bm, max(8, m))
     bn_ = min(bn, max(8, n))
     bk_ = min(bk, max(8, k))
-    xp, _ = pad_to(x, 0, bm_)
-    xp, _ = pad_to(xp, 1, bk_)
+    xp, _ = pad_to(x, 1 if lhs_layout == "km" else 0, bm_)
+    xp, _ = pad_to(xp, 0 if lhs_layout == "km" else 1, bk_)
     yp, _ = pad_to(y, 0, bk_)
     yp, _ = pad_to(yp, 1, bn_)
     bp = None
     if bias is not None:
         bp, _ = pad_to(bias, 0, bn_)
     out = matmul_pallas(xp, yp, bp, bm=bm_, bn=bn_, bk=bk_,
-                        fuse_relu=fuse_relu)
-    return out[:m, :n]
+                        fuse_relu=fuse_relu, lhs_layout=lhs_layout,
+                        out_layout=out_layout)
+    return out[:n, :m] if out_layout == "nm" else out[:m, :n]

@@ -22,14 +22,26 @@ def prepare_kernel(w, m_: int = 2):
 
 
 @functools.partial(jax.jit, static_argnames=("m_", "k", "stride", "pad",
-                                             "bn", "bc"))
+                                             "bn", "bc", "in_layout",
+                                             "out_layout"))
 def conv_winograd(x, u, b, *, m_: int = 2, k: int = 3, stride: int = 1,
-                  pad: int = 1, bn: int = 128, bc: int = 128):
+                  pad: int = 1, bn: int = 128, bc: int = 128,
+                  in_layout: str = "CHW", out_layout: str = "CHW"):
     """x: (C, H, W); u: prepared kernels (alpha^2, M, C); b: (M,).
 
     Returns (M, OH, OW).  stride must be 1 (Winograd restriction).
+
+    Layout-parameterized (transform fusion): ``in_layout="HWC"`` feeds
+    the transpose straight into the input-transform patch gather (XLA
+    fuses it — the transforms are already XLA-side by design);
+    ``out_layout="HWC"`` reorders the *output transform's* einsum so the
+    inverse transform itself emits (OH, OW, M) — the epilogue produces
+    the consumer's layout with no extra pass over the output.
     """
     assert stride == 1
+    assert in_layout in ("CHW", "HWC") and out_layout in ("CHW", "HWC")
+    if in_layout == "HWC":
+        x = jnp.transpose(x, (2, 0, 1))
     c, h, wd = x.shape
     _, m, _ = u.shape
     a = m_ + k - 1
@@ -55,6 +67,10 @@ def conv_winograd(x, u, b, *, m_: int = 2, k: int = 3, stride: int = 1,
     Q = winograd_bgemm_pallas(Up, Vp, bn=bn_, bc=bc_)[:, :, :n]
 
     Q = Q.reshape(a, a, m, nth, ntw)
+    if out_layout == "HWC":
+        Y = jnp.einsum("ap,abmtu,bq->tpuqm", A, Q, A)
+        y = Y.reshape(nth * m_, ntw * m_, m)[:oh, :ow, :]
+        return y + b
     Y = jnp.einsum("ap,abmtu,bq->mtpuq", A, Q, A)
     y = Y.reshape(m, nth * m_, ntw * m_)[:, :oh, :ow]
     return y + b[:, None, None]

@@ -51,7 +51,8 @@ def _plan(args):
     exclude = () if on_tpu else ("tpu-only",)
     items = plan_sweep(scns, families=args.families or None,
                        exclude_tags=exclude, dt=not args.no_dt,
-                       kernels=kernels, policy=policy)
+                       kernels=kernels, fused=not args.no_fused,
+                       policy=policy)
     return scns, items
 
 
@@ -80,6 +81,10 @@ def main(argv=None) -> int:
                          "(auto: only on TPU)")
     ap.add_argument("--no-dt", action="store_true",
                     help="skip layout-transform measurements")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="skip fused (primitive, layout) pair "
+                         "measurements — fused-edge pricing then falls "
+                         "back to the analytic discount")
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--min-time", type=float, default=5e-3,
                     help="minimum timed seconds per repetition")

@@ -35,7 +35,9 @@ __all__ = ["PLAN_SCHEMA", "plan_key", "selection_to_payload",
            "selection_from_payload", "PlanDiskCache", "LRU"]
 
 #: bump when the payload format below changes shape
-PLAN_SCHEMA = 1
+#: 2: per-edge fused realizations ("fusions") joined the payload; v1
+#:    plans predate fused-edge pricing and must re-solve
+PLAN_SCHEMA = 2
 
 
 def plan_key(net_fingerprint: str, bucket_key: str,
@@ -57,6 +59,8 @@ def selection_to_payload(sel: SelectionResult) -> Dict[str, Any]:
             for nid, ch in sel.choices.items()},
         "conversions": [[src, dst, chain]
                         for (src, dst), chain in sel.conversions.items()],
+        "fusions": [[src, dst, kind]
+                    for (src, dst), kind in sel.fusions.items()],
         "predicted_cost": sel.predicted_cost,
         "optimal": sel.optimal,
         "strategy": sel.strategy,
@@ -77,13 +81,17 @@ def selection_from_payload(payload: Dict[str, Any],
     conversions: Dict[Tuple[str, str], List[str]] = {
         (src, dst): list(chain)
         for src, dst, chain in payload["conversions"]}
+    fusions: Dict[Tuple[str, str], str] = {
+        (src, dst): str(kind)
+        for src, dst, kind in payload["fusions"]}
     return SelectionResult(
         net=net, choices=choices, conversions=conversions,
         predicted_cost=float(payload["predicted_cost"]),
         optimal=bool(payload["optimal"]),
         strategy=str(payload["strategy"]),
         solver_stats={k: int(v)
-                      for k, v in payload["solver_stats"].items()})
+                      for k, v in payload["solver_stats"].items()},
+        fusions=fusions)
 
 
 # ----------------------------------------------------------------------

@@ -91,10 +91,15 @@ class PlanServer:
                  policy: Optional[BucketPolicy] = None,
                  cache_dir=None, lru_capacity: int = 8,
                  exact: bool = True, params_seed: int = 0,
-                 jit: bool = True, max_workers: int = 2) -> None:
+                 jit: bool = True, max_workers: int = 2,
+                 fuse: bool = False) -> None:
         self.net_builder = net_builder
         self.cost = cost_model
-        self.cost_version = cost_model.version()
+        self.fuse = fuse
+        # a fused and an unfused plan for the same bucket are different
+        # plans (edges priced and realized differently) — fold the flag
+        # into the version string every cache tier keys on
+        self.cost_version = cost_model.version() + ("+fuse" if fuse else "")
         self.policy = policy or BucketPolicy()
         self.exact = exact
         self.params_seed = params_seed
@@ -146,7 +151,8 @@ class PlanServer:
         self.counters.add(plan_misses=1)
         warm = self._nearest_plan(pkey)
         t0 = time.perf_counter()
-        sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm)
+        sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm,
+                          fuse=self.fuse)
         self.counters.add(solves=1, solve_s=time.perf_counter() - t0,
                           warm_solves=int(sel.solver_stats.get("WARM", 0)))
         self._plans[pkey] = sel

@@ -141,7 +141,7 @@ class TestSweep:
         assert not any("pallas" in it.label for it in items)
         assert len({it.key for it in items}) == len(items)
         kinds = {it.kind for it in items}
-        assert kinds == {"prim", "dt"}
+        assert kinds == {"prim", "dt", "fuse"}
 
     def test_plan_kernels_adds_benchmark_entries(self):
         items = plan_sweep([SCN], families=["direct"], exclude_tags=(),

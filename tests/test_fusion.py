@@ -1,0 +1,364 @@
+"""Transform-fusion subsystem tests.
+
+Covers the tentpole end to end: fused prologue/epilogue entry points
+match the materialized reference for every fusable layout pair
+(including the in-kernel Pallas variants), fusion-aware PBQP pricing
+never worsens the optimum and provably flips assignments when fused
+costs are visible, the compile_plan fusion pass elides convert_layout
+while staying correct under vmap/batch and composing with
+``fuse_across_layers``, the plan payload round-trips fused edges, and a
+fused PlanServer serves identical cropped outputs.
+"""
+import numpy as np
+import pytest
+
+from repro.core.costs import (
+    AnalyticCostModel, fused_cost_key, prim_cost_key,
+)
+from repro.core.layouts import transform_feasible
+from repro.core.plan import compile_plan
+from repro.core.primitives import convert_layout, registry
+from repro.core.scenario import Scenario
+from repro.core.selection import select_fixed, select_pbqp
+
+COST = AnalyticCostModel()
+#: C divisible by 8 so blocked HWC8 legs are feasible; odd spatial
+SCN = Scenario(c=16, h=9, w=11, stride=1, k=3, m=16)
+SCN_K1 = Scenario(c=16, h=9, w=11, stride=1, k=1, m=16)
+
+BY_NAME = {p.name: p for p in registry()}
+
+#: one representative per jnp family (each has a distinct internal
+#: working layout / custom fused builder)
+REPRESENTATIVE = [
+    "direct_lax_chw_chw_oihw",
+    "direct_shiftadd_hwc",
+    "im2col_xla_n_chw",
+    "im2row_xla_n_hwc",
+    "kn2col_unroll_hwc",
+    "kn2row_unroll_chw",
+    "wino2d_f2x3_chw",
+    "fft1d_sum_ex_hwc",
+]
+
+
+def _run_native(prim, scn, x_chw, w, b):
+    """Native invocation on a logical-CHW input, output back as CHW."""
+    packed = prim.prepare(scn, w, b)
+    xin = convert_layout(x_chw, "CHW", prim.l_in)
+    y = prim.make(scn)(xin, packed)
+    return np.asarray(convert_layout(y, prim.l_out, "CHW"))
+
+
+class TestFusedMatchesMaterialized:
+    """Every fused prologue/epilogue equals convert_layout + native."""
+
+    @pytest.mark.parametrize("name", REPRESENTATIVE)
+    def test_fused_in_all_layouts(self, name):
+        prim = BY_NAME[name]
+        scn = SCN
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+        b = rng.normal(size=(scn.m,)).astype(np.float32)
+        ref = _run_native(prim, scn, x, w, b)
+        packed = prim.prepare(scn, w, b)
+        for lay in prim.fusable_in:
+            if not transform_feasible(lay, prim.l_in, scn.in_shape_chw):
+                continue
+            xin = convert_layout(x, "CHW", lay)
+            y = prim.make_fused(scn, l_in=lay)(xin, packed)
+            got = np.asarray(convert_layout(y, prim.l_out, "CHW"))
+            np.testing.assert_allclose(
+                got, ref, rtol=2e-3, atol=2e-3,
+                err_msg=f"{name} fused-in from {lay}")
+
+    @pytest.mark.parametrize("name", REPRESENTATIVE)
+    def test_fused_out_all_layouts(self, name):
+        prim = BY_NAME[name]
+        scn = SCN
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+        b = rng.normal(size=(scn.m,)).astype(np.float32)
+        ref = _run_native(prim, scn, x, w, b)
+        packed = prim.prepare(scn, w, b)
+        xin = convert_layout(x, "CHW", prim.l_in)
+        for lay in prim.fusable_out:
+            if not transform_feasible(prim.l_out, lay, scn.out_shape_chw):
+                continue
+            y = prim.make_fused(scn, l_out=lay)(xin, packed)
+            got = np.asarray(convert_layout(y, lay, "CHW"))
+            np.testing.assert_allclose(
+                got, ref, rtol=2e-3, atol=2e-3,
+                err_msg=f"{name} fused-out to {lay}")
+
+    def test_fused_both_ends(self):
+        """Simultaneous prologue + epilogue fusion (HWC8 included)."""
+        prim = BY_NAME["im2col_xla_n_chw"]
+        scn = SCN
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+        b = rng.normal(size=(scn.m,)).astype(np.float32)
+        ref = _run_native(prim, scn, x, w, b)
+        packed = prim.prepare(scn, w, b)
+        for li, lo in [("HWC", "HCW"), ("HWC8", "HWC8"), ("WHC", "CWH")]:
+            xin = convert_layout(x, "CHW", li)
+            y = prim.make_fused(scn, l_in=li, l_out=lo)(xin, packed)
+            got = np.asarray(convert_layout(y, lo, "CHW"))
+            np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3,
+                                       err_msg=f"fused {li}->{lo}")
+
+    def test_unfusable_layout_raises(self):
+        prim = BY_NAME["pallas_direct_hwc"]  # fusable_in == ("CHW",)
+        with pytest.raises(ValueError, match="cannot fuse input layout"):
+            prim.make_fused(SCN, l_in="WHC")
+
+    def test_native_layouts_return_plain_maker(self):
+        prim = BY_NAME["im2col_xla_n_chw"]
+        assert prim.make_fused(SCN) is not None  # no error, native path
+
+
+class TestPallasFusedKernels:
+    """The in-kernel (BlockSpec index-map) fused entry points."""
+
+    @pytest.mark.parametrize("name,scn", [
+        ("pallas_direct_hwc", SCN),
+        ("pallas_im2col_chw", SCN),
+        ("pallas_wino_f2x3_chw", SCN),
+        ("pallas_pw_gemm_chw", SCN_K1),
+    ])
+    def test_fused_matches_native(self, name, scn):
+        prim = BY_NAME[name]
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=scn.in_shape_chw).astype(np.float32)
+        w = (rng.normal(size=scn.weight_shape) * 0.1).astype(np.float32)
+        b = rng.normal(size=(scn.m,)).astype(np.float32)
+        ref = _run_native(prim, scn, x, w, b)
+        packed = prim.prepare(scn, w, b)
+        for li in prim.fusable_in:
+            xin = convert_layout(x, "CHW", li)
+            y = prim.make_fused(scn, l_in=li)(xin, packed)
+            got = np.asarray(convert_layout(y, prim.l_out, "CHW"))
+            np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2,
+                                       err_msg=f"{name} fused-in {li}")
+        for lo in prim.fusable_out:
+            xin = convert_layout(x, "CHW", prim.l_in)
+            y = prim.make_fused(scn, l_out=lo)(xin, packed)
+            got = np.asarray(convert_layout(y, lo, "CHW"))
+            np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2,
+                                       err_msg=f"{name} fused-out {lo}")
+
+
+def _alt_tower(depth=4, c=8, hw=12, k=1):
+    from repro.core.graph import Net
+    net = Net(f"alt{depth}")
+    x = net.input("data", (c, hw, hw))
+    for i in range(depth):
+        x = net.conv(f"conv{i}", x, k=k, m=c)
+    return net
+
+
+def _alt_selection(net, fuse):
+    """Fixed alternating-layout assignment: every edge mismatches."""
+    pick = {}
+    for i, node in enumerate(net.conv_nodes()):
+        pick[node.id] = BY_NAME["pw_gemm_n_hwc" if i % 2 == 0
+                                else "pw_gemm_n_chw"]
+    return select_fixed(net, COST, pick, "alt", fuse=fuse)
+
+
+class TestFusionSelection:
+    def test_fused_pricing_never_worse(self):
+        from repro.serving.towers import conv_tower
+        net = conv_tower((3, 24, 24), depth=2, width=8)
+        s0 = select_pbqp(net, COST, fuse=False)
+        s1 = select_pbqp(net, COST, fuse=True)
+        assert s1.predicted_cost <= s0.predicted_cost + 1e-12
+        assert s1.optimal
+
+    def test_fixed_alternating_realizes_fusions(self):
+        net = _alt_tower()
+        s_mat = _alt_selection(net, fuse=False)
+        s_fus = _alt_selection(net, fuse=True)
+        assert len(s_mat.conversions) == len(net.edges())
+        assert not s_mat.fusions
+        assert s_fus.fusions, "fused pricing should fuse mismatched edges"
+        # an edge is realized exactly once: fused or materialized
+        assert not set(s_fus.fusions) & set(s_fus.conversions)
+        assert s_fus.predicted_cost < s_mat.predicted_cost
+
+    def test_fused_out_requires_single_consumer(self):
+        """Fan-out edges must not fuse on the producer side."""
+        from repro.core.graph import Net, concat
+        net = Net("fanout")
+        x = net.input("data", (8, 12, 12))
+        a = net.conv("conva", x, k=1, m=8)
+        net.op("join", [a, a], concat())
+        s = select_pbqp(net, COST, fuse=True)
+        for (src, dst), kind in s.fusions.items():
+            assert not (src == "conva" and kind == "out")
+
+    def test_flip_with_calibrated_fused_costs(self):
+        """The bench's provable flip, as a regression test: fused edge
+        pricing changes the PBQP assignment itself."""
+        import importlib
+        bench = importlib.import_module("benchmarks.bench_plan_cache")
+        net = bench._fusion_tower(4, 16, 16)
+        prof, policy = bench._fusion_profile(
+            net, fast=10e-6, slow=20e-6, dt_s=10e-6, fuse_extra=0.5e-6)
+        from repro.calibrate import CalibratedCostModel
+        cm = CalibratedCostModel(prof, policy=policy)
+        s_mat = select_pbqp(net, cm, fuse=False)
+        s_fus = select_pbqp(net, cm, fuse=True)
+        flipped = [n.id for n in net.conv_nodes()
+                   if s_mat.choices[n.id].primitive.name
+                   != s_fus.choices[n.id].primitive.name]
+        assert flipped, "fused edge costs must flip at least one node"
+        assert s_fus.predicted_cost < s_mat.predicted_cost
+
+
+class TestFusionExecution:
+    def test_fused_execution_matches_materialized(self):
+        net = _alt_tower()
+        params = net.init_params(0)
+        x = np.random.default_rng(0).normal(
+            size=net.nodes["data"].out_shape).astype(np.float32)
+        ref = compile_plan(_alt_selection(net, False), params)(x)
+        sel = _alt_selection(net, True)
+        cn = compile_plan(sel, params)
+        assert cn.fused_edges == len(sel.fusions) > 0
+        got = cn(x)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_fusion_pass_composes_with_fuse_across_layers(self):
+        """Satellite regression: both flags set still produces a fused
+        executable with correct outputs."""
+        net = _alt_tower()
+        params = net.init_params(1)
+        x = np.random.default_rng(1).normal(
+            size=net.nodes["data"].out_shape).astype(np.float32)
+        sel = _alt_selection(net, True)
+        ref = compile_plan(_alt_selection(net, False), params)(x)
+        cn = compile_plan(sel, params, fuse_across_layers=True)
+        assert cn.fused_edges == len(sel.fusions) > 0
+        got = cn(x)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]),
+                                       rtol=2e-3, atol=2e-3)
+
+    def test_fusion_pass_correct_under_vmap(self):
+        """Fused executables vmap cleanly (batch > 1)."""
+        net = _alt_tower()
+        params = net.init_params(2)
+        sel = _alt_selection(net, True)
+        xs = np.random.default_rng(2).normal(
+            size=(4,) + tuple(net.nodes["data"].out_shape)
+        ).astype(np.float32)
+        single = compile_plan(sel, params)
+        batched = compile_plan(sel, params, batch=4)
+        assert batched.fused_edges == len(sel.fusions) > 0
+        out_b = batched(xs)
+        for i in range(4):
+            out_1 = single(xs[i])
+            for k in out_1:
+                np.testing.assert_allclose(np.asarray(out_b[k])[i],
+                                           np.asarray(out_1[k]),
+                                           rtol=2e-3, atol=2e-3)
+
+
+class TestPayloadAndServing:
+    def test_payload_roundtrips_fusions(self):
+        from repro.serving.plan_cache import (
+            selection_from_payload, selection_to_payload,
+        )
+        net = _alt_tower()
+        sel = _alt_selection(net, True)
+        assert sel.fusions
+        back = selection_from_payload(selection_to_payload(sel), net)
+        assert back.fusions == sel.fusions
+        assert back.conversions == sel.conversions
+        assert {k: (c.primitive.name if c.primitive else None)
+                for k, c in back.choices.items()} == \
+               {k: (c.primitive.name if c.primitive else None)
+                for k, c in sel.choices.items()}
+
+    def test_old_schema_payload_rejected(self):
+        from repro.serving.plan_cache import (
+            selection_from_payload, selection_to_payload,
+        )
+        net = _alt_tower()
+        payload = selection_to_payload(_alt_selection(net, False))
+        payload["schema"] = 1
+        with pytest.raises(ValueError, match="plan schema"):
+            selection_from_payload(payload, net)
+
+    def test_fused_server_serves_identical_cropped_outputs(self):
+        from repro.serving import BucketPolicy, PlanServer, conv_stack
+        req = np.random.default_rng(5).normal(
+            size=(4, 13, 15)).astype(np.float32)
+        outs = []
+        versions = []
+        for fuse in (False, True):
+            srv = PlanServer(lambda s: conv_stack(s, depth=2, width=8),
+                             AnalyticCostModel(),
+                             policy=BucketPolicy(min_hw=8, max_hw=64),
+                             fuse=fuse)
+            outs.append(srv.infer(req))
+            versions.append(srv.cost_version)
+            srv.close()
+        assert versions[0] != versions[1]  # distinct plan-cache keys
+        for k in outs[0]:
+            assert outs[0][k].shape == outs[1][k].shape
+            np.testing.assert_allclose(outs[0][k], outs[1][k],
+                                       rtol=2e-3, atol=2e-3)
+
+
+class TestCalibratedFusedCosts:
+    def test_calibrated_serves_fused_delta_with_fallback(self):
+        from repro.calibrate import CalibratedCostModel, HardwareProfile
+        prim = BY_NAME["im2col_xla_n_chw"]
+        from repro.serving.bucketing import BucketPolicy, bucket_scenario
+        policy = BucketPolicy()
+        b = bucket_scenario(SCN, policy)
+        prof = HardwareProfile.new()
+        prof.put(prim_cost_key(prim.name, b), 10e-6)
+        prof.put(fused_cost_key("in", prim.name, "HWC", b), 12e-6)
+        cm = CalibratedCostModel(prof, policy=policy)
+        assert cm.fused_in_cost(prim, SCN, "HWC") == pytest.approx(2e-6)
+        assert cm.fused_in_cost(prim, SCN, "CHW") == 0.0
+        # uncovered layout falls back to the analytic estimate
+        fb = cm.fallback.fused_in_cost(prim, SCN, "HCW")
+        assert cm.fused_in_cost(prim, SCN, "HCW") == pytest.approx(fb)
+        # a fused measurement faster than native clamps at zero
+        prof.put(fused_cost_key("out", prim.name, "HWC", b), 8e-6)
+        assert cm.fused_out_cost(prim, SCN, "HWC") == 0.0
+
+    def test_sweep_plans_fused_pairs(self):
+        from repro.calibrate import plan_sweep
+        items = plan_sweep([SCN], families=["im2"], dt=False)
+        kinds = {it.kind for it in items}
+        assert "fuse" in kinds
+        fuse_items = [it for it in items if it.kind == "fuse"]
+        assert all(it.key.startswith(("fusein::", "fuseout::"))
+                   for it in fuse_items)
+        # batched scenarios plan no fused pairs (deltas are per image)
+        items_b = plan_sweep([SCN.with_(n=4)], families=["im2"], dt=False)
+        assert not any(it.kind == "fuse" for it in items_b)
+        # and the flag can disable them
+        items_off = plan_sweep([SCN], families=["im2"], dt=False,
+                               fused=False)
+        assert not any(it.kind == "fuse" for it in items_off)
+
+    def test_run_sweep_measures_fused_items(self):
+        from repro.calibrate import HardwareProfile, plan_sweep, run_sweep
+        items = plan_sweep([SCN], families=["kn2"], dt=False)
+        prof = HardwareProfile.new()
+        report = run_sweep(prof, items, measure=lambda it: 1e-6)
+        assert report["measured"] == len(items)
+        assert all(it.key in prof for it in items)
