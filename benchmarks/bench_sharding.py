@@ -1,0 +1,232 @@
+"""Sharded-plan benchmark: the unified choice space on a device mesh.
+
+Three sections, one JSON document (written to benchmarks/results/):
+
+1. **data_parallel** — the serving tower compiled twice for the same
+   batch: the plain single-device batched executable vs the
+   mesh-sharded executable the placement-solved plan produces
+   (``compile_plan(mesh=...)`` on 8 fake CPU devices).  Records
+   predicted (cost-model currency) and measured wall-clock throughput
+   for both, with outputs verified identical.
+2. **placement_flip** — the same tower solved across a fabric-speed
+   sweep (``HardwareSpec.link_bw``): the per-node placement table and
+   the edges where the solver's choice flips, i.e. where it trades a
+   resharding collective against replicated compute.  This is the
+   distributed twin of the paper's layout-flip tables.
+3. **serving** — a hot request stream through a mesh-aware
+   :class:`~repro.serving.server.PlanServer` vs a plain one
+   (``infer_batch`` both sides), outputs compared per request.
+
+Run (the script forces 8 fake CPU devices before jax initialises):
+
+  PYTHONPATH=src python -m benchmarks.bench_sharding
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import time
+
+N_DEVICES = 8
+
+
+def _force_fake_devices() -> None:
+    from repro.launch.mesh import force_host_devices
+    force_host_devices(N_DEVICES)
+
+
+def _tower(batch: int):
+    from repro.serving.towers import conv_stack
+    return conv_stack((8, 64, 64), depth=3, width=16).with_batch(batch)
+
+
+def _throughput(fn, x, params, reps: int) -> float:
+    """Median seconds per invocation (warmed)."""
+    import jax
+    for _ in range(3):
+        jax.block_until_ready(fn(x, params))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x, params))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def bench_data_parallel(batch: int, reps: int, seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.plan import compile_plan
+    from repro.core.selection import select_pbqp
+    from repro.launch.mesh import make_mesh_compat, mesh_fingerprint
+
+    mesh = make_mesh_compat((N_DEVICES,), ("data",))
+    cm = AnalyticCostModel()
+    net = _tower(batch)
+    sel_mesh = select_pbqp(net, cm, mesh_axes={"data": N_DEVICES})
+    sel_plain = select_pbqp(net, cm)
+    params = net.init_params(seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(
+        size=(batch, 8, 64, 64)).astype(np.float32))
+
+    cn_mesh = compile_plan(sel_mesh, params, batch=batch, mesh=mesh)
+    cn_plain = compile_plan(sel_plain, params, batch=batch)
+    out_m, out_p = cn_mesh(x), cn_plain(x)
+    match = all(np.allclose(np.asarray(out_m[k]), np.asarray(out_p[k]),
+                            rtol=2e-3, atol=2e-3) for k in out_m)
+
+    t_mesh = _throughput(cn_mesh.fn, x, cn_mesh.params, reps)
+    t_plain = _throughput(cn_plain.fn, x, cn_plain.params, reps)
+
+    return {
+        "devices": N_DEVICES, "batch": batch,
+        "mesh": mesh_fingerprint(mesh),
+        "mesh_mode": cn_mesh.mesh_mode,
+        "dp_nodes": cn_mesh.dp_nodes,
+        "outputs_match": bool(match),
+        # solver currency: per-device time of the optimum under each
+        # choice space — the >1x gain the placement axis buys on paper
+        "predicted_plain_s": sel_plain.predicted_cost,
+        "predicted_sharded_s": sel_mesh.predicted_cost,
+        "predicted_speedup": sel_plain.predicted_cost /
+        max(sel_mesh.predicted_cost, 1e-30),
+        # honest wall clock on this host's fake-device mesh
+        "measured_plain_s": t_plain,
+        "measured_sharded_s": t_mesh,
+        "measured_plain_img_per_s": batch / max(t_plain, 1e-12),
+        "measured_sharded_img_per_s": batch / max(t_mesh, 1e-12),
+        "measured_speedup": t_plain / max(t_mesh, 1e-12),
+    }
+
+
+def bench_placement_flip(batch: int) -> dict:
+    """Solve the tower across a fabric-speed sweep and tabulate where
+    placements flip: slow links make collectives (the dp -> caller
+    delivery gather, any dp -> rep edge) expensive enough that the
+    solver prefers replicated compute."""
+    from repro.core.costs import CPU_SPEC, AnalyticCostModel, HardwareSpec
+    from repro.core.selection import select_pbqp
+
+    net = _tower(batch)
+    fabrics = {"fast": CPU_SPEC.link_bw, "slow": CPU_SPEC.link_bw / 2000}
+    tables = {}
+    for name, link in fabrics.items():
+        spec = HardwareSpec(
+            name=f"cpu-{name}-fabric", peak_flops=CPU_SPEC.peak_flops,
+            mem_bw=CPU_SPEC.mem_bw, link_bw=link,
+            family_eff=CPU_SPEC.family_eff,
+            family_setup=CPU_SPEC.family_setup)
+        sel = select_pbqp(net, AnalyticCostModel(spec),
+                          mesh_axes={"data": N_DEVICES})
+        tables[name] = {nid: ch.placement
+                        for nid, ch in sel.choices.items()}
+    flips = [nid for nid in tables["fast"]
+             if tables["fast"][nid] != tables["slow"][nid]]
+    edge_flips = [
+        {"edge": f"{src}->{dst}",
+         "fast": f"{tables['fast'][src]}->{tables['fast'][dst]}",
+         "slow": f"{tables['slow'][src]}->{tables['slow'][dst]}"}
+        for (src, dst) in net.edges()
+        if (tables["fast"][src], tables["fast"][dst]) !=
+           (tables["slow"][src], tables["slow"][dst])]
+    return {
+        "devices": N_DEVICES, "batch": batch,
+        "fabric_link_bw": fabrics,
+        "placements": tables,
+        "node_flips": flips,
+        "edge_flips": edge_flips,
+        "dp_nodes_fast": sum(1 for p in tables["fast"].values()
+                             if p == "dp"),
+        "dp_nodes_slow": sum(1 for p in tables["slow"].values()
+                             if p == "dp"),
+    }
+
+
+def bench_serving(requests: int, reps: int, seed: int = 0) -> dict:
+    import numpy as np
+
+    from repro.core.costs import AnalyticCostModel
+    from repro.launch.mesh import make_mesh_compat
+    from repro.serving import BucketPolicy, PlanServer, conv_stack
+
+    mesh = make_mesh_compat((N_DEVICES,), ("data",))
+    policy = BucketPolicy(min_hw=8, max_hw=64)
+    build = lambda s: conv_stack(s, depth=3, width=16)
+    rng = np.random.default_rng(seed)
+    stream = [rng.normal(size=(8, int(rng.integers(40, 64)),
+                               int(rng.integers(40, 64))))
+              .astype(np.float32) for _ in range(requests)]
+
+    results = {}
+    outs = {}
+    for name, mesh_arg in (("plain", None), ("sharded", mesh)):
+        srv = PlanServer(build, AnalyticCostModel(), policy=policy,
+                         lru_capacity=8, mesh=mesh_arg)
+        outs[name] = srv.infer_batch(stream)  # warm: solve+compile here
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            srv.infer_batch(stream)
+            times.append(time.perf_counter() - t0)
+        t = statistics.median(times)
+        s = srv.stats()
+        results[name] = {
+            "stream_s": t,
+            "req_per_s": requests / max(t, 1e-12),
+            "mesh_compiles": s["mesh_compiles"],
+            "batch_calls": s["batch_calls"],
+        }
+        srv.close()
+    match = all(
+        np.allclose(outs["plain"][i][k], outs["sharded"][i][k],
+                    rtol=2e-3, atol=2e-3)
+        for i in range(requests) for k in outs["plain"][i])
+    return {
+        "devices": N_DEVICES, "requests": requests,
+        "outputs_match": bool(match),
+        "plain": results["plain"],
+        "sharded": results["sharded"],
+        "serving_speedup": results["plain"]["stream_s"] /
+        max(results["sharded"]["stream_s"], 1e-12),
+    }
+
+
+def main():
+    _force_fake_devices()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    choices=("data_parallel", "placement_flip", "serving"))
+    args = ap.parse_args()
+
+    sections = {
+        "data_parallel": lambda: bench_data_parallel(
+            args.batch, args.reps, args.seed),
+        "placement_flip": lambda: bench_placement_flip(args.batch),
+        "serving": lambda: bench_serving(
+            args.requests, args.reps, args.seed),
+    }
+    result = {"benchmark": "sharding"}
+    for name, fn in sections.items():
+        if args.only is None or args.only == name:
+            result[name] = fn()
+    doc = json.dumps(result, indent=2)
+    print(doc)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    name = "sharding.json" if args.only is None \
+        else f"sharding_{args.only}.json"
+    (out / name).write_text(doc)
+
+
+if __name__ == "__main__":
+    main()

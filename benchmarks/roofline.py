@@ -38,9 +38,14 @@ import json
 import pathlib
 from typing import List, Optional
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+from repro.core.costs import TPU_V5E_SPEC
+
+# Single source of truth for TPU v5e rates is core.costs.TPU_V5E_SPEC;
+# the roofline uses the raw bf16 peak (the spec stores the halved f32
+# proxy that selection prices matmuls with).
+PEAK_FLOPS = TPU_V5E_SPEC.peak_flops * 2
+HBM_BW = TPU_V5E_SPEC.mem_bw
+LINK_BW = TPU_V5E_SPEC.link_bw
 
 ARTIFACT_DIR = pathlib.Path(__file__).resolve().parent / "results" / \
     "dryrun"

@@ -27,8 +27,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 from ..core.costs import (
-    AnalyticCostModel, CostModel, fused_cost_key, prim_cost_key,
-    transform_cost_key,
+    AnalyticCostModel, CostModel, collective_cost_key, fused_cost_key,
+    prim_cost_key, transform_cost_key,
 )
 from ..core.layouts import transform_feasible
 from ..core.primitives import Primitive
@@ -152,6 +152,32 @@ class CalibratedCostModel(CostModel):
     def fused_out_cost(self, prim: Primitive, scn: Scenario,
                        l_dst: str) -> float:
         return self._fused_cost("out", prim, scn, l_dst)
+
+    # -----------------------------------------------------------------
+    def collective_cost(self, kind: str, nbytes: float, n: int) -> float:
+        """Measured collective timings when the profile has them.
+
+        Payload sizes bucket to the next power of two (the same
+        round-up-only discipline request shapes get, via
+        :func:`~repro.serving.bucketing.round_dim`), so log-many
+        ``coll::`` entries price every tensor serving or sharding
+        selection can produce.  The calibration sweep does not yet
+        *measure* collectives (that needs a multi-chip pod run);
+        entries arrive from a pod-side timing pass loaded into the
+        profile by hand or by future tooling.  Uncovered (kind, bucket,
+        n) triples fall back to the fallback model's analytic ring
+        estimate — collective pricing never fails on partial coverage.
+        """
+        if n <= 1:
+            return 0.0
+        from ..serving.bucketing import round_dim
+        bucket = round_dim(int(nbytes), "pow2", 1, 1, 1 << 62)
+        v = self.profile.get(collective_cost_key(kind, bucket, n))
+        if v is not None:
+            self.table_hits += 1
+            return v
+        self.fallback_hits += 1
+        return self.fallback.collective_cost(kind, nbytes, n)
 
     # -----------------------------------------------------------------
     def coverage(self) -> dict:

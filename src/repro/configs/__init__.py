@@ -40,7 +40,7 @@ def cells():
             skip = None
             if sname == "long_500k" and not cfg.sub_quadratic:
                 skip = "long_500k needs sub-quadratic attention " \
-                       "(pure full-attention arch) — see DESIGN.md"
+                       "(pure full-attention arch) — see docs/distributed.md"
             out.append((aname, sname, skip))
     return out
 

@@ -6,8 +6,9 @@ attention, attention + final-logit soft-capping.
 
 long_500k: runs — half the layers are sliding-window (bounded KV), and
 decode-time global attention is linear per token; we mark it
-sub-quadratic for the decode-only long-context shape (see DESIGN.md
-§Arch-applicability for the discussion).
+sub-quadratic for the decode-only long-context shape (see
+docs/distributed.md §CPU-world testing of pod-world claims for why
+full-attention architectures skip that shape).
 """
 from .base import ModelConfig
 

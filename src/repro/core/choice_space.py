@@ -1,0 +1,114 @@
+"""Unified choice-space PBQP construction — one builder for every
+transformation kind.
+
+The paper's core claim is that implementation selection and data-format
+transformation are ONE joint optimization problem.  This module is that
+claim as code: a single, transform-kind-agnostic bridge from a *choice
+space* (per-entity choice domains with setup costs, plus pluggable
+transition pricing between adjacent entities) to a
+:class:`~repro.core.pbqp.PBQP` instance.  Two very different selection
+problems build through it:
+
+* **Layout-level selection** (:mod:`repro.core.selection`): entities are
+  the layers of a conv net, choices are primitives (or accepted layouts,
+  for op nodes), and transitions price
+  ``min(materialized DT conversion chain, fused prologue/epilogue)``.
+* **Sharding-level selection** (:mod:`repro.core.sharding_select`):
+  entities are the tensor groups of a transformer program, choices are
+  sharding rule-sets, and transitions price resharding collectives —
+  the "layout transformation" of the distributed world.
+
+Either way the objective the solver sees is the paper's::
+
+    sum_u setup(choice_u)  +  sum_{(u,v)} transition(choice_u, choice_v)
+
+and the same exact reduction/branch-and-bound engine
+(:func:`repro.core.pbqp.solve`) finds the global optimum.
+``docs/distributed.md`` maps the two instantiations side by side.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (
+    Any, Callable, Dict, Hashable, List, Sequence, Tuple,
+)
+
+import numpy as np
+
+from . import pbqp
+
+__all__ = ["ChoiceNode", "ChoiceEdge", "build_pbqp", "drop_infinite"]
+
+
+@dataclass
+class ChoiceNode:
+    """One entity's choice domain.
+
+    ``costs[i]`` is the setup cost of picking ``choices[i]`` for this
+    entity alone (a primitive's invocation time; a sharding rule's
+    intra-group collective time).  Infinite costs mark choices the
+    solver may only take when nothing finite exists.
+    """
+    id: Hashable
+    choices: Sequence[Any]
+    costs: Sequence[float]
+
+    def __post_init__(self):
+        if len(self.choices) != len(self.costs):
+            raise ValueError(
+                f"node {self.id!r}: {len(self.choices)} choices but "
+                f"{len(self.costs)} costs")
+        if not self.choices:
+            raise ValueError(f"node {self.id!r}: empty choice domain")
+
+
+@dataclass
+class ChoiceEdge:
+    """Transition pricing between two adjacent entities.
+
+    ``transition(cu, cv)`` returns the cost of moving data produced
+    under choice ``cu`` (of ``src``) into the form choice ``cv`` (of
+    ``dst``) consumes — a layout-conversion chain, a fused variant, a
+    resharding collective, ``inf`` when no transformation exists.
+    Scaling (minibatch, per-layer repeat counts) belongs inside
+    ``transition``: both callers scale per pair.
+    """
+    src: Hashable
+    dst: Hashable
+    transition: Callable[[Any, Any], float]
+
+
+def build_pbqp(nodes: Sequence[ChoiceNode], edges: Sequence[ChoiceEdge],
+               ) -> Tuple[pbqp.PBQP, Dict[Hashable, List[Any]]]:
+    """Materialize a choice space as a PBQP instance.
+
+    Returns ``(problem, domains)`` where ``domains[id]`` lists the node's
+    choice objects in the order the solver's assignment indexes them —
+    the caller recovers the winning choices as
+    ``{id: domains[id][sol.assignment[id]]}``.
+    """
+    pb = pbqp.PBQP()
+    domains: Dict[Hashable, List[Any]] = {}
+    for node in nodes:
+        domains[node.id] = list(node.choices)
+        pb.add_node(node.id, [float(c) for c in node.costs])
+    for edge in edges:
+        cu, cv = domains[edge.src], domains[edge.dst]
+        M = np.empty((len(cu), len(cv)), dtype=np.float64)
+        for i, a in enumerate(cu):
+            for j, b in enumerate(cv):
+                M[i, j] = edge.transition(a, b)
+        pb.add_edge(edge.src, edge.dst, M)
+    return pb, domains
+
+
+def drop_infinite(entries: Sequence[Tuple[Any, float]]
+                  ) -> List[Tuple[Any, float]]:
+    """Drop infinite-cost choices — unless that would empty the domain.
+
+    A domain of only-infinite choices is kept intact so the solver can
+    report :class:`~repro.core.pbqp.Infeasible` (or legalize through
+    edges) instead of the builder crashing on a degenerate instance.
+    """
+    finite = [(c, v) for (c, v) in entries if np.isfinite(v)]
+    return finite or list(entries)

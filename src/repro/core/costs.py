@@ -49,7 +49,9 @@ __all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
            "COST_MODEL_SCHEMA", "FUSED_TRANSFORM_DISCOUNT", "time_callable",
            "measure_primitive", "measure_fused_primitive",
            "measure_transform", "prim_cost_key", "transform_cost_key",
-           "fused_cost_key"]
+           "fused_cost_key", "collective_cost_key", "ring_ag_bytes",
+           "all_gather_time", "reduce_scatter_time", "all_reduce_time",
+           "all_to_all_time", "collective_time", "COLLECTIVE_KINDS"]
 
 #: bump when the *meaning* of costs changes (units, conventions, embedding)
 #: — persisted plan caches keyed on older schemas are invalidated.
@@ -100,6 +102,25 @@ class CostModel:
             return 0.0
         return FUSED_TRANSFORM_DISCOUNT * self.transform_cost(
             prim.l_out, l_dst, scn.out_shape_chw, scn.dtype)
+
+    # -------------------------------------------------------------
+    # collective pricing (the transform kind of the distributed world:
+    # resharding between device placements / sharding rules)
+    # -------------------------------------------------------------
+    def hardware_spec(self) -> "HardwareSpec":
+        """The hardware this model prices; drives collective costs.
+
+        Defaults to the generic CPU spec — models that know their
+        target (:class:`AnalyticCostModel`) override this.
+        """
+        return CPU_SPEC
+
+    def collective_cost(self, kind: str, nbytes: float, n: int) -> float:
+        """Seconds for one ``kind`` collective of ``nbytes`` (global
+        tensor bytes) over ``n`` chips.  Analytic ring-model default;
+        :class:`repro.calibrate.CalibratedCostModel` overrides it to
+        serve measured pod timings (``coll::…`` profile entries)."""
+        return collective_time(self.hardware_spec(), kind, nbytes, n)
 
     def dt_graph(self) -> DTGraph:
         """The library's DT graph priced by this model's transform_cost."""
@@ -381,6 +402,11 @@ class HardwareSpec:
     name: str
     peak_flops: float          # f32 FLOP/s
     mem_bw: float              # B/s
+    #: per-chip interconnect bandwidth (B/s, one direction): ICI links on
+    #: a TPU pod, shared-memory "fabric" between fake CPU devices.  0
+    #: means no fabric — every collective prices infinite, so selection
+    #: can never pick a sharded choice on fabric-less hardware.
+    link_bw: float = 0.0
     #: fraction of peak a family's GEMM-ish inner loop typically reaches
     family_eff: Dict[str, float] = field(default_factory=dict)
     #: per-*invocation* setup seconds (buffer allocation, GEMM/FFT
@@ -395,6 +421,7 @@ CPU_SPEC = HardwareSpec(
     name="cpu-generic",
     peak_flops=1.0e11,
     mem_bw=2.0e10,
+    link_bw=1.0e10,            # fake-device "fabric": memcpy through RAM
     family_eff={"direct": 0.30, "im2": 0.55, "kn2": 0.50,
                 "winograd": 0.45, "fft": 0.35, "pallas": 0.0},
     family_setup={"direct": 1e-6, "im2": 2e-5, "kn2": 1.5e-5,
@@ -405,11 +432,83 @@ TPU_V5E_SPEC = HardwareSpec(
     name="tpu-v5e",
     peak_flops=197e12 / 2,     # bf16 peak halved as an f32-ish proxy
     mem_bw=819e9,
+    link_bw=50e9,              # ICI, per chip per direction
     family_eff={"direct": 0.45, "im2": 0.65, "kn2": 0.55,
                 "winograd": 0.55, "fft": 0.25, "pallas": 0.70},
     family_setup={"direct": 2e-6, "im2": 5e-6, "kn2": 5e-6,
                   "winograd": 8e-6, "fft": 1e-5, "pallas": 3e-6},
 )
+
+
+# ----------------------------------------------------------------------
+# collective pricing (shared by sharding selection, the placement axis
+# of layout selection, and CalibratedCostModel's fallback path)
+# ----------------------------------------------------------------------
+def ring_ag_bytes(nbytes: float, n: int) -> float:
+    """Ring all-gather over ``n`` chips moves (n-1)/n of the tensor per
+    link (same bytes for its mirror image, reduce-scatter)."""
+    return float(nbytes) * (n - 1) / max(n, 1)
+
+
+def all_gather_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
+    """Ring all-gather seconds for an ``nbytes`` *global* tensor."""
+    if n <= 1:
+        return 0.0
+    if spec.link_bw <= 0:
+        return float("inf")
+    return ring_ag_bytes(nbytes, n) / spec.link_bw
+
+
+def reduce_scatter_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
+    """Ring reduce-scatter: byte-symmetric with the all-gather."""
+    return all_gather_time(spec, nbytes, n)
+
+
+def all_reduce_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
+    """Ring all-reduce = reduce-scatter + all-gather."""
+    return 2.0 * all_gather_time(spec, nbytes, n)
+
+
+def all_to_all_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
+    """All-to-all: every chip ships ~its whole shard across the fabric
+    (the MoE dispatch/combine pattern)."""
+    if n <= 1:
+        return 0.0
+    if spec.link_bw <= 0:
+        return float("inf")
+    return float(nbytes) / spec.link_bw
+
+
+COLLECTIVE_KINDS = {
+    "all_gather": all_gather_time,
+    "reduce_scatter": reduce_scatter_time,
+    "all_reduce": all_reduce_time,
+    "all_to_all": all_to_all_time,
+}
+
+
+def collective_time(spec: HardwareSpec, kind: str, nbytes: float,
+                    n: int) -> float:
+    """Analytic time of one collective over ``n`` chips (seconds)."""
+    try:
+        fn = COLLECTIVE_KINDS[kind]
+    except KeyError:
+        raise ValueError(f"unknown collective kind {kind!r}; "
+                         f"one of {sorted(COLLECTIVE_KINDS)}") from None
+    return fn(spec, nbytes, n)
+
+
+def collective_cost_key(kind: str, nbytes: int, n: int) -> str:
+    """Cache/profile entry key for one measured collective.
+
+    ``nbytes`` should be bucketed (pow2) by the caller so one pod sweep
+    covers every payload size serving produces; stored value is seconds
+    for the whole collective over ``n`` participants.
+    """
+    if kind not in COLLECTIVE_KINDS:
+        raise ValueError(f"unknown collective kind {kind!r}; "
+                         f"one of {sorted(COLLECTIVE_KINDS)}")
+    return f"coll::{kind}::b{int(nbytes)}::n{int(n)}"
 
 
 class AnalyticCostModel(CostModel):
@@ -434,8 +533,12 @@ class AnalyticCostModel(CostModel):
         eff = ",".join(f"{k}={v}" for k, v in sorted(s.family_eff.items()))
         setup = ",".join(f"{k}={v}"
                          for k, v in sorted(s.family_setup.items()))
-        return (f"spec={s.name}|flops={s.peak_flops}|bw={s.mem_bw}|{eff}"
+        return (f"spec={s.name}|flops={s.peak_flops}|bw={s.mem_bw}"
+                f"|link={s.link_bw}|{eff}"
                 f"|setup={setup}|tpu={self.include_tpu_only}")
+
+    def hardware_spec(self) -> HardwareSpec:
+        return self.spec
 
     def _alg_flops_bytes(self, prim: Primitive, scn: Scenario):
         """(total flops, per-image activation bytes, weight bytes)."""

@@ -3,6 +3,16 @@ which emitted calls to primitive operations" — here it builds a single
 jit'd function that walks the DAG in topological order, invoking the
 selected primitive per conv layer and the explicit layout-conversion
 chains the legalizer inserted on illegal edges.
+
+With ``mesh=`` the generator emits a *mesh-sharded* executable: every
+node's device placement (the ``Choice.placement`` axis solved by
+``select_pbqp(..., mesh_axes=...)``) is realized as a ``NamedSharding``
+constraint over the mesh's ``data`` axis — GSPMD inserts exactly the
+resharding collectives the PBQP edges priced — and an all-``dp`` plan
+takes a ``shard_map`` fast path (one per-shard program per device, no
+partitioner round trip).  Runs on real pods and on fake CPU devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) alike; see
+docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -19,7 +29,14 @@ from .layouts import LAYOUT_BY_NAME
 from .primitives import convert_layout
 from .selection import SelectionResult
 
-__all__ = ["compile_plan", "CompiledNet", "measure", "compile_count"]
+__all__ = ["compile_plan", "CompiledNet", "measure", "compile_count",
+           "mesh_shape_dict"]
+
+
+def mesh_shape_dict(mesh) -> Dict[str, int]:
+    """Axis name -> size for a jax Mesh.  Single definition —
+    ``launch.mesh`` re-exports it for CLI-side callers."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 #: process-wide count of compile_plan() calls — executable construction is
 #: the expensive step the serving LRU exists to amortise, so tests and the
@@ -44,6 +61,13 @@ class CompiledNet:
     #: materialized convert_layout dispatches (observability for tests
     #: and the fusion benchmark)
     fused_edges: int = 0
+    #: mesh the executable is sharded over (None: single device)
+    mesh: Optional[Any] = None
+    #: nodes realized batch-sharded over the mesh's data axis
+    dp_nodes: int = 0
+    #: "shard_map" (all-dp fast path) | "gspmd" (per-node constraints)
+    #: | "" (no mesh)
+    mesh_mode: str = ""
 
     def __call__(self, x):
         return self.fn(jnp.asarray(x), self.params)
@@ -51,7 +75,7 @@ class CompiledNet:
 
 def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
                  jit: bool = True, fuse_across_layers: bool = False,
-                 batch: int = 1) -> CompiledNet:
+                 batch: int = 1, mesh: Optional[Any] = None) -> CompiledNet:
     """``fuse_across_layers=False`` (default) inserts optimization
     barriers between primitive calls: the paper's code generator emits
     *calls into a library of routines*, so no cross-layer fusion exists
@@ -76,11 +100,41 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     barriers the transform can never be split back out into an HBM
     round trip.  The pass is orthogonal to ``fuse_across_layers`` and
     ``batch``: fused makers are emitted regardless of barrier placement
-    and are vmap-safe, so all flag combinations compose."""
+    and are vmap-safe, so all flag combinations compose.
+
+    **Mesh-sharded executables.**  ``mesh`` (with ``batch > 1``)
+    realizes the plan's device placements: nodes whose
+    :class:`~repro.core.selection.Choice` carries ``placement="dp"``
+    run batch-sharded over the mesh's ``data`` axis, ``"rep"`` nodes
+    replicated.  An all-``dp`` plan compiles through ``shard_map`` (one
+    per-shard vmapped program per device — the pure data-parallel fast
+    path); any plan with a ``rep`` node compiles the batched program
+    with one ``NamedSharding`` constraint per node, so GSPMD inserts
+    exactly the resharding collectives the selection's edge costs
+    priced.  Input is (N, C, H, W) as for any batched executable;
+    callers pass host arrays and receive global (gathered-on-read)
+    outputs, so a mesh executable is a drop-in for the single-device
+    batched one (verified output-identical in tests/test_distributed.py).
+    """
     global _COMPILE_COUNT
     _COMPILE_COUNT += 1
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
+    if mesh is not None and batch < 2:
+        raise ValueError("mesh-sharded executables are batched: pass "
+                         "batch >= 2 (a single image cannot be sharded "
+                         "over the data axis)")
+    dp_nodes = 0
+    d_mesh = 1
+    if mesh is not None:
+        mesh_shape = mesh_shape_dict(mesh)
+        d_mesh = int(mesh_shape.get("data", 1))
+        dp_nodes = sum(1 for ch in sel.choices.values()
+                       if ch.placement == "dp")
+        if dp_nodes and ("data" not in mesh_shape or batch % d_mesh):
+            raise ValueError(
+                f"plan has {dp_nodes} dp nodes but mesh {mesh_shape} "
+                f"cannot shard batch {batch} over its 'data' axis")
     t0 = time.perf_counter()
     net = sel.net
 
@@ -123,11 +177,36 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     barrier = (lambda v: v) if fuse_across_layers or batch > 1 else \
         (lambda v: jax.lax.optimization_barrier(v))
 
+    if mesh is not None:
+        fn, mode = _build_mesh_fn(sel, net, makers, mesh, d_mesh,
+                                  dp_nodes, jit)
+        return CompiledNet(sel, fn, packed,
+                           build_s=time.perf_counter() - t0, batch=batch,
+                           fused_edges=len(fusions), mesh=mesh,
+                           dp_nodes=dp_nodes, mesh_mode=mode)
+
+    run = _image_walker(sel, net, makers, barrier)
+
+    if batch > 1:
+        run = jax.vmap(run, in_axes=(0, None))
+    fn = jax.jit(run) if jit else run
+    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0,
+                       batch=batch, fused_edges=len(fusions))
+
+
+def _image_walker(sel: SelectionResult, net: Net,
+                  makers: Dict[str, Callable],
+                  barrier: Callable = lambda v: v) -> Callable:
+    """The per-image DAG walk every executable variant shares: invoke
+    the selected primitive per conv node, the op function per op node,
+    the legalizer's conversion chains per mismatched edge, then convert
+    outputs to logical CHW.  ``barrier`` wraps per-layer results (the
+    paper's no-cross-layer-fusion discipline; identity for batched and
+    mesh executables)."""
     def run(x, params):
         vals: Dict[str, Any] = {}
         for nid in net.order:
             node = net.nodes[nid]
-            ch = sel.choices[nid]
             if node.kind == "input":
                 vals[nid] = x  # inputs arrive in logical CHW
                 continue
@@ -142,20 +221,83 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
             if node.kind == "conv":
                 vals[nid] = barrier(makers[nid](ins[0], params[nid]))
             else:
-                layout = LAYOUT_BY_NAME[ch.l_in]
+                layout = LAYOUT_BY_NAME[sel.choices[nid].l_in]
                 vals[nid] = node.op.fn(ins, layout, params.get(nid))
-        outs = {}
-        for nid in net.outputs():
-            v = vals[nid]
-            lo = sel.choices[nid].l_out
-            outs[nid] = convert_layout(v, lo, "CHW")
-        return outs
+        return {nid: convert_layout(vals[nid], sel.choices[nid].l_out,
+                                    "CHW")
+                for nid in net.outputs()}
+    return run
 
-    if batch > 1:
-        run = jax.vmap(run, in_axes=(0, None))
-    fn = jax.jit(run) if jit else run
-    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0,
-                       batch=batch, fused_edges=len(fusions))
+
+def _build_mesh_fn(sel: SelectionResult, net: Net, makers: Dict[str,
+                   Callable], mesh, d_mesh: int, dp_nodes: int,
+                   jit: bool):
+    """Emit the mesh-sharded executable for a placement-solved plan.
+
+    Two modes (both barrier-free, like every batched executable):
+
+    * ``shard_map`` — every node is ``dp``: split the batch once over
+      the ``data`` axis and run the vmapped per-shard program
+      (:func:`_image_walker`, the same walk the single-device
+      executable runs) on each device.  No partitioner in the loop;
+      the pure data-parallel serving fast path.
+    * ``gspmd`` — mixed placements: run the batched program with one
+      ``NamedSharding`` constraint per node, so GSPMD inserts exactly
+      the resharding collectives the selection's edge costs priced
+      (``dp -> rep``: all-gather; ``rep -> dp``: a local slice).  This
+      walker is the batched per-node-vmap variant of the walk — the
+      constraints must land on whole-batch values, so it cannot reuse
+      the vmapped per-image program.
+    """
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    if dp_nodes == len(net.order) and d_mesh > 1:
+        from jax.experimental.shard_map import shard_map
+        inner = jax.vmap(_image_walker(sel, net, makers),
+                         in_axes=(0, None))
+        fn = shard_map(inner, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P("data"))
+        return (jax.jit(fn) if jit else fn), "shard_map"
+
+    def spec_of(nid: str) -> "NamedSharding":
+        pl = sel.choices[nid].placement
+        return NamedSharding(mesh, P("data") if pl == "dp" else P())
+
+    def run_batched(x, params):
+        vals: Dict[str, Any] = {}
+        for nid in net.order:
+            node = net.nodes[nid]
+            ch = sel.choices[nid]
+            if node.kind == "input":
+                v = x
+            else:
+                ins = []
+                for src in node.inputs:
+                    vi = vals[src]
+                    chain = sel.conversions.get((src, nid))
+                    if chain:
+                        for a, b in zip(chain, chain[1:]):
+                            vi = jax.vmap(
+                                lambda t, a=a, b=b:
+                                convert_layout(t, a, b))(vi)
+                    ins.append(vi)
+                if node.kind == "conv":
+                    v = jax.vmap(makers[nid], in_axes=(0, None))(
+                        ins[0], params[nid])
+                else:
+                    layout = LAYOUT_BY_NAME[ch.l_in]
+                    p = params.get(nid)
+                    v = jax.vmap(
+                        lambda *xs, op=node.op, lay=layout, p=p:
+                        op.fn(list(xs), lay, p))(*ins)
+            vals[nid] = jax.lax.with_sharding_constraint(v, spec_of(nid))
+        return {nid: jax.vmap(
+                    lambda t, lo=sel.choices[nid].l_out:
+                    convert_layout(t, lo, "CHW"))(vals[nid])
+                for nid in net.outputs()}
+
+    return (jax.jit(run_batched) if jit else run_batched), "gspmd"
 
 
 def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,

@@ -1,6 +1,8 @@
 """PBQP construction, solving, legalization — Section 3 of the paper.
 
-The embedding:
+The embedding (built through the unified choice-space bridge of
+:mod:`repro.core.choice_space`, which :mod:`repro.core.sharding_select`
+shares for its resharding-collective transform kind):
 
 * conv node  -> PBQP node whose domain is the applicable primitives;
   node cost vector = profiled execution time of each primitive.
@@ -16,6 +18,20 @@ the explicit shortest chain of conversion layers — the cost of which the
 optimum already accounts for (the paper's key point: pricing conversions
 *after* selection is what makes greedy/local strategies sub-optimal).
 
+**Device placement axis.**  With ``mesh_axes={"data": D}`` the choice
+space gains a second dimension: every node's domain is primitives (or
+layouts) × placements {``rep``: whole batch replicated on every device,
+``dp``: batch sharded D ways over the mesh's ``data`` axis}.  Node
+costs price the per-device invocation (``Scenario.n/D`` for ``dp``);
+edges whose endpoints disagree on placement pay the resharding
+collective (``dp -> rep``: an all-gather of the whole batched tensor —
+the distributed analogue of a layout transform); ``dp`` choices on
+output nodes pay the final delivery gather.  The solver therefore
+trades collective time against replicated compute per layer, exactly
+as it trades transform time against primitive speed.
+:func:`~repro.core.plan.compile_plan` realizes placements as
+``NamedSharding`` constraints on a mesh (docs/distributed.md).
+
 docs/solver.md works a small instance through this embedding end to
 end; any :class:`~repro.core.costs.CostModel` can price it, including
 the measured tables of :class:`repro.calibrate.CalibratedCostModel`
@@ -29,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import pbqp
+from .choice_space import ChoiceEdge, ChoiceNode, build_pbqp
 from .costs import CostModel
 from .graph import Net, Node
 from .layouts import DTGraph, transform_feasible
@@ -37,7 +54,7 @@ from .scenario import Scenario
 
 __all__ = ["SelectionResult", "select_pbqp", "select_fixed",
            "select_sum2d", "select_local_optimal", "select_family_best",
-           "Choice", "warm_assignment"]
+           "Choice", "warm_assignment", "placements_for"]
 
 
 @dataclass(frozen=True)
@@ -46,6 +63,9 @@ class Choice:
     primitive: Optional[Primitive]  # None for op nodes
     l_in: str
     l_out: str
+    #: device placement: "rep" (replicated over the mesh's data axis)
+    #: or "dp" (batch sharded over it).  Always "rep" without a mesh.
+    placement: str = "rep"
 
 
 @dataclass
@@ -76,16 +96,6 @@ def _conv_domain(node: Node, cost: CostModel,
     if not entries:
         raise ValueError(f"no primitive supports {node.scn}")
     return entries
-
-
-def _edge_matrix(dt: DTGraph, shape, out_layouts: Sequence[str],
-                 in_layouts: Sequence[str]) -> np.ndarray:
-    costs, idx = dt.cost_matrix(shape)
-    M = np.zeros((len(out_layouts), len(in_layouts)))
-    for i, lo in enumerate(out_layouts):
-        for j, li in enumerate(in_layouts):
-            M[i, j] = costs[idx[lo], idx[li]]
-    return M
 
 
 def _fused_options(cost: CostModel, src_node: Node, dst_node: Node,
@@ -124,10 +134,31 @@ def _out_degree(net: Net) -> Dict[str, int]:
     return deg
 
 
+def _net_batch(net: Net) -> int:
+    """The net's minibatch (single definition: placement domains and
+    dp shard pricing must derive it identically)."""
+    return max((n.scn.n for n in net.conv_nodes()), default=1)
+
+
+def placements_for(net: Net,
+                   mesh_axes: Optional[Dict[str, int]]) -> List[str]:
+    """Placement domain for a net on a mesh: ``["rep"]`` (no mesh, a
+    degenerate data axis, or a batch the axis cannot divide) or
+    ``["dp", "rep"]`` — dp first, so cost *ties* (zero-cost op nodes,
+    free edges) resolve to the sharded choice: replicated execution at
+    equal priced time still burns D× the compute."""
+    d = int(mesh_axes.get("data", 1)) if mesh_axes else 1
+    nb = _net_batch(net)
+    if d > 1 and nb >= d and nb % d == 0:
+        return ["dp", "rep"]
+    return ["rep"]
+
+
 def _build(net: Net, cost: CostModel, *,
            fixed: Optional[Dict[str, Primitive]] = None,
            families: Optional[Sequence[str]] = None,
-           fuse: bool = False):
+           fuse: bool = False,
+           mesh_axes: Optional[Dict[str, int]] = None):
     """Build the PBQP instance; returns (problem, domains).
 
     ``fixed`` pins given conv nodes to a single primitive (domain size 1)
@@ -138,54 +169,91 @@ def _build(net: Net, cost: CostModel, *,
     fused prologue, fused epilogue)`` — the solver then sees transforms
     at their fused price and can pick primitive pairs a materialized-only
     model would reject (the tentpole of the fusion subsystem).
+
+    ``mesh_axes`` (e.g. ``{"data": 8}``) enables the device-placement
+    axis: domains cross with {rep, dp}, ``dp`` node costs price the
+    per-device shard (``Scenario.n/D``), placement-mismatched edges pay
+    the resharding collective, and ``dp`` output nodes pay the delivery
+    all-gather.  The whole construction goes through the shared
+    :func:`repro.core.choice_space.build_pbqp` bridge — the same one
+    :mod:`repro.core.sharding_select` builds its collective-priced
+    instances with.
     """
     dt = cost.dt_graph()
-    pb = pbqp.PBQP()
-    domains: Dict[str, List[Choice]] = {}
+    nb = _net_batch(net)
+    placements = placements_for(net, mesh_axes)
+    d_mesh = int(mesh_axes.get("data", 1)) if mesh_axes else 1
+    outputs = set(net.outputs())
 
+    def delivery(node: Node, pl: str) -> float:
+        """Final all-gather a dp *output* node pays so the caller sees
+        the full batch (rep outputs are already whole on every device)."""
+        if pl != "dp" or node.id not in outputs:
+            return 0.0
+        nbytes = 4 * float(np.prod(node.out_shape)) * nb
+        return cost.collective_cost("all_gather", nbytes, d_mesh)
+
+    nodes: List[ChoiceNode] = []
     for nid in net.order:
         node = net.nodes[nid]
         if node.kind == "input":
-            domains[nid] = [Choice(None, "CHW", "CHW")]
-            pb.add_node(nid, [0.0])
+            choices = [Choice(None, "CHW", "CHW", pl) for pl in placements]
+            costs = [0.0] * len(choices)
         elif node.kind == "conv":
             if fixed and nid in fixed:
                 p = fixed[nid]
                 c = cost.primitive_cost(p, node.scn)
-                domains[nid] = [Choice(p, p.l_in, p.l_out)]
-                pb.add_node(nid, [c if np.isfinite(c) else 1e6])
+                entries = [(p, c if np.isfinite(c) else 1e6)]
             else:
                 entries = _conv_domain(node, cost, families)
-                domains[nid] = [Choice(p, p.l_in, p.l_out)
-                                for p, _ in entries]
-                pb.add_node(nid, [c for _, c in entries])
+            choices, costs = [], []
+            for p, c_rep in entries:
+                for pl in placements:
+                    choices.append(Choice(p, p.l_in, p.l_out, pl))
+                    c = c_rep if pl == "rep" else cost.primitive_cost(
+                        p, node.scn.with_(n=nb // d_mesh))
+                    costs.append(c + delivery(node, pl))
         else:  # op
-            lays = list(node.op.layouts)
-            domains[nid] = [Choice(None, l, l) for l in lays]
-            pb.add_node(nid, [0.0] * len(lays))
+            choices = [Choice(None, l, l, pl) for l in node.op.layouts
+                       for pl in placements]
+            costs = [delivery(node, ch.placement) for ch in choices]
+        nodes.append(ChoiceNode(nid, choices, costs))
 
-    # Transform costs are priced per image by the DT graph; a batched
-    # net moves nb times the activation bytes along every edge, so the
-    # edge matrices scale with the net's minibatch (node costs already
-    # price the whole batched invocation via Scenario.n).
-    nb = max((n.scn.n for n in net.conv_nodes()), default=1)
+    # Transform costs are priced per image by the DT graph and scale
+    # with the images each device actually transforms: the whole
+    # minibatch nb when both endpoints are replicated, the nb/D shard
+    # when either endpoint is batch-sharded (GSPMD runs the transform
+    # on the sharded side of a mixed edge).  A dp -> rep transition
+    # additionally pays the all-gather of the whole batched tensor —
+    # the resharding collective is this axis's "layout transformation".
     deg = _out_degree(net)
+    edges: List[ChoiceEdge] = []
     for (src, dst) in net.edges():
         shape = net.nodes[src].out_shape
-        M = _edge_matrix(dt, shape,
-                         [c.l_out for c in domains[src]],
-                         [c.l_in for c in domains[dst]])
-        if fuse:
-            sn, dn = net.nodes[src], net.nodes[dst]
-            single = deg.get(src, 0) == 1
-            for i, cu in enumerate(domains[src]):
-                for j, cv in enumerate(domains[dst]):
-                    for c, _ in _fused_options(cost, sn, dn, cu, cv,
-                                               single, shape):
-                        if c < M[i, j]:
-                            M[i, j] = c
-        pb.add_edge(src, dst, M * nb if nb > 1 else M)
+        dtcosts, idx = dt.cost_matrix(shape)
+        sn, dn = net.nodes[src], net.nodes[dst]
+        single = deg.get(src, 0) == 1
+        img_bytes = 4 * float(np.prod(shape))
 
+        def transition(cu: Choice, cv: Choice, *, dtcosts=dtcosts,
+                       idx=idx, sn=sn, dn=dn, single=single,
+                       shape=shape, img_bytes=img_bytes) -> float:
+            per_img = dtcosts[idx[cu.l_out], idx[cv.l_in]]
+            if fuse and cu.placement == cv.placement:
+                for c, _ in _fused_options(cost, sn, dn, cu, cv,
+                                           single, shape):
+                    if c < per_img:
+                        per_img = c
+            sharded = "dp" in (cu.placement, cv.placement)
+            t = per_img * (nb // d_mesh if sharded else nb)
+            if cu.placement == "dp" and cv.placement == "rep":
+                t += cost.collective_cost("all_gather",
+                                          img_bytes * nb, d_mesh)
+            return t
+
+        edges.append(ChoiceEdge(src, dst, transition))
+
+    pb, domains = build_pbqp(nodes, edges)
     return pb, domains, dt
 
 
@@ -198,9 +266,11 @@ def _legalize(net: Net, dt: DTGraph, choices: Dict[str, Choice], *,
 
     The realization replays exactly the pricing :func:`_build` fed the
     solver — ``min(materialized, fused options)``, materialized
-    preferred on ties — so the executed plan's transform cost is the one
-    the optimum accounted for.  With ``fuse=False`` (the paper's
-    system), every mismatched edge materializes.
+    preferred on ties, fused options only offered when both endpoints
+    share a device placement (exactly as the edge matrices were priced)
+    — so the executed plan's transform cost is the one the optimum
+    accounted for.  With ``fuse=False`` (the paper's system), every
+    mismatched edge materializes.
     """
     conversions: Dict[Tuple[str, str], List[str]] = {}
     fusions: Dict[Tuple[str, str], str] = {}
@@ -212,7 +282,8 @@ def _legalize(net: Net, dt: DTGraph, choices: Dict[str, Choice], *,
             continue
         shape = net.nodes[src].out_shape
         kind = "dt"
-        if fuse and cost is not None:
+        if fuse and cost is not None and \
+                choices[src].placement == choices[dst].placement:
             costs, idx = dt.cost_matrix(shape)
             options = [(costs[idx[lo], idx[li]], "dt")]
             options += _fused_options(cost, net.nodes[src], net.nodes[dst],
@@ -239,26 +310,34 @@ def warm_assignment(prev: "SelectionResult",
 
     Neighbouring serving buckets share graph topology but have different
     scenarios, so per-node domains may differ; choices are matched by
-    primitive name (conv nodes) / input layout (op nodes).  Nodes whose
-    previous choice no longer exists fall back to index 0 — the resulting
+    primitive name + placement (conv nodes) / input layout + placement
+    (op nodes), degrading to a primitive/layout-only match when the
+    previous placement no longer exists in the new domain (e.g. warm
+    starting a mesh solve from a meshless plan).  Nodes whose previous
+    choice no longer exists fall back to index 0 — the resulting
     assignment is still feasible-or-infinite, and an infinite warm cost
     simply disables the bound (see :func:`repro.core.pbqp.solve_warm`).
     Returns None when the topologies do not line up at all.
     """
+    def matches(ch: Choice, pc: Choice, with_placement: bool) -> bool:
+        if with_placement and ch.placement != pc.placement:
+            return False
+        if pc.primitive is None:
+            return ch.primitive is None and ch.l_in == pc.l_in
+        return ch.primitive is not None and \
+            ch.primitive.name == pc.primitive.name
+
     asg: Dict[str, int] = {}
     for nid, dom in domains.items():
         pc = prev.choices.get(nid)
         if pc is None:
             return None
         idx = 0
-        for i, ch in enumerate(dom):
-            if pc.primitive is None:
-                if ch.primitive is None and ch.l_in == pc.l_in:
-                    idx = i
-                    break
-            elif ch.primitive is not None and \
-                    ch.primitive.name == pc.primitive.name:
-                idx = i
+        for with_placement in (True, False):
+            hit = next((i for i, ch in enumerate(dom)
+                        if matches(ch, pc, with_placement)), None)
+            if hit is not None:
+                idx = hit
                 break
         asg[nid] = idx
     return asg
@@ -267,7 +346,9 @@ def warm_assignment(prev: "SelectionResult",
 def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
                 families: Optional[Sequence[str]] = None,
                 warm_start: Optional["SelectionResult"] = None,
-                fuse: bool = False) -> SelectionResult:
+                fuse: bool = False,
+                mesh_axes: Optional[Dict[str, int]] = None
+                ) -> SelectionResult:
     """The paper's approach: globally optimal primitive selection.
 
     ``warm_start`` seeds the branch-and-bound incumbent with a previous
@@ -280,8 +361,13 @@ def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
     result carries per-edge fused realizations that
     :func:`~repro.core.plan.compile_plan` turns into fused calls.  Off
     by default — the materialized system is the paper's.
+
+    ``mesh_axes`` (e.g. ``mesh_shape_dict(mesh)``) additionally solves
+    the device-placement axis over the mesh's ``data`` axis; realize the
+    result with ``compile_plan(..., mesh=mesh, batch=nb)``.
     """
-    pb, domains, dt = _build(net, cost, families=families, fuse=fuse)
+    pb, domains, dt = _build(net, cost, families=families, fuse=fuse,
+                             mesh_axes=mesh_axes)
     if warm_start is not None:
         warm = warm_assignment(warm_start, domains)
         sol = pbqp.solve_warm(pb, warm, exact=exact)

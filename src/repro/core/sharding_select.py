@@ -1,6 +1,6 @@
 """PBQP sharding selection — the paper's technique at datacenter scale.
 
-The exact analogy (DESIGN.md §Technique-mapping):
+The exact analogy (docs/distributed.md §Technique mapping):
 
   CPU world (paper)                  TPU-pod world (this module)
   -----------------                  ---------------------------
@@ -16,8 +16,19 @@ feasibility-filtered sharding rule-sets; node costs price the
 collectives a rule implies *inside* its group (e.g. Megatron row-
 parallel out-proj => per-layer all-reduce of the activations); edge
 costs price the resharding between adjacent groups (the "layout
-transformation" of the distributed world).  The same exact solver the
-paper uses for CPU layouts finds the global optimum.
+transformation" of the distributed world).  The instance is built
+through the same unified choice-space bridge
+(:mod:`repro.core.choice_space`) the layout-level selection uses, and
+the same exact solver the paper uses for CPU layouts finds the global
+optimum.
+
+Hardware comes from a :class:`~repro.core.costs.HardwareSpec` (default
+:data:`~repro.core.costs.TPU_V5E_SPEC`): ``peak_flops`` is the
+achievable matmul rate (the spec's f32-proxy peak — for TPU v5e the
+bf16 peak halved, i.e. the old hardcoded 0.5-MXU-efficiency constant),
+``mem_bw`` prices replicated reads, ``link_bw`` prices every collective
+via the shared helpers in :mod:`repro.core.costs`.  A calibrated
+profile can therefore re-price the whole instance for a different pod.
 """
 from __future__ import annotations
 
@@ -28,13 +39,13 @@ import numpy as np
 
 from ..models.sharding import MEGATRON_RULES, Rules
 from . import pbqp
+from .choice_space import ChoiceEdge, ChoiceNode, build_pbqp, drop_infinite
+from .costs import (
+    TPU_V5E_SPEC, HardwareSpec, all_gather_time, all_reduce_time,
+    all_to_all_time, reduce_scatter_time,
+)
 
 __all__ = ["select_rules", "candidate_report", "ShardingChoice"]
-
-# TPU v5e constants (per chip)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
 
 
 @dataclass(frozen=True)
@@ -51,11 +62,6 @@ def _bytes(*dims, dtype_bytes=2):
     return float(np.prod(dims)) * dtype_bytes
 
 
-def _ring_ag_bytes(nbytes, n):
-    """all-gather over n chips moves (n-1)/n of the tensor per link."""
-    return nbytes * (n - 1) / n
-
-
 def _mesh_size(mesh_shape: Dict[str, int], axis) -> int:
     if axis is None:
         return 1
@@ -64,6 +70,7 @@ def _mesh_size(mesh_shape: Dict[str, int], axis) -> int:
 
 
 def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
+                 spec: HardwareSpec = TPU_V5E_SPEC,
                  exact: bool = True, fsdp: bool = False,
                  return_solution: bool = False):
     """Solve the sharding PBQP for (arch, shape) on a mesh.
@@ -82,32 +89,42 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
     act = _bytes(b_local, t, d)          # residual activation per device
 
     bwd = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd flops factor
-    mxu_eff = 0.5 * PEAK_FLOPS
 
     def mm_time(flops: float, ways: int) -> float:
-        """Matmul time when sharded ``ways`` ways (0.5 MXU efficiency)."""
-        return bwd * flops / (max(ways, 1) * mxu_eff)
+        """Matmul time when sharded ``ways`` ways (``spec.peak_flops``
+        is the achievable-rate proxy, MXU efficiency included)."""
+        return bwd * flops / (max(ways, 1) * spec.peak_flops)
 
-    pb = pbqp.PBQP()
+    def xfer(nbytes: float) -> float:
+        """Naive (non-ring) fabric transfer: the one-exchange
+        collectives below that don't follow the ring model.  A
+        fabric-less spec (``link_bw == 0``) prices them infinite, like
+        the shared ring helpers do — selection then replicates."""
+        return nbytes / spec.link_bw if spec.link_bw > 0 else np.inf
+
+    nodes: List[ChoiceNode] = []
     domains: Dict[str, List[ShardingChoice]] = {}
 
     def add(node: str, choices: List[Tuple[ShardingChoice, float]]):
-        choices = [c for c in choices if np.isfinite(c[1])] or choices
+        choices = drop_infinite(choices)
         domains[node] = [c for c, _ in choices]
-        pb.add_node(node, [c for _, c in choices])
+        nodes.append(ChoiceNode(node, [c for c, _ in choices],
+                                [c for _, c in choices]))
 
     # ---------------- embed ----------------
     emb = []
     if v % tp == 0:
         # vocab-sharded gather -> all-reduce of the (b,t,d) activations
+        # (naive, not ring: the partitioner reassembles the one-hot
+        # gather output in a single exchange)
         emb.append((ShardingChoice("embed:vocab", (("vocab", "model"),)),
-                    2 * act / (LINK_BW)))
+                    xfer(2 * act)))
     if d % tp == 0:
         emb.append((ShardingChoice("embed:dmodel",
                                    (("vocab", None),)),  # d sharded in rule
-                    _ring_ag_bytes(act, tp) / LINK_BW))
+                    all_gather_time(spec, act, tp)))
     emb.append((ShardingChoice("embed:rep", (("vocab", None),)),
-                _bytes(v, d) / HBM_BW * 0.0))  # replicated: no collective
+                0.0))  # replicated: no collective
     add("embed", emb)
 
     # ---------------- attention (or mamba mixer) ----------------
@@ -120,7 +137,7 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
         if h_ssm % tp == 0:
             attn.append((ShardingChoice(
                 "mixer:ssm_heads", (("ssm_heads", "model"),)),
-                mm_time(f_ssm, tp) + nl * 2 * act / LINK_BW))
+                mm_time(f_ssm, tp) + nl * xfer(2 * act)))
         attn.append((ShardingChoice("mixer:rep", (("ssm_heads", None),)),
                      mm_time(f_ssm, 1)))
     else:
@@ -135,8 +152,7 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
             kv_ax = "model" if cfg.n_kv_heads % tp == 0 else None
             attn.append((ShardingChoice(
                 "attn:heads", (("heads", "model"), ("kv_heads", kv_ax))),
-                mm_time(f_attn, tp) +
-                nl * 2 * act * (tp - 1) / tp / LINK_BW))
+                mm_time(f_attn, tp) + nl * all_reduce_time(spec, act, tp)))
         if hd % tp == 0:
             # head_dim-parallel (whisper/llava fallback): QK^T contracts
             # over the sharded head_dim -> all-reduce of the FULL score
@@ -149,7 +165,8 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
                 "attn:head_dim", (("head_dim", "model"),
                                   ("heads", None), ("kv_heads", None))),
                 mm_time(f_attn, tp) +
-                bwd * nl * (2 * act + score_b) * (tp - 1) / tp / LINK_BW))
+                bwd * nl * (all_reduce_time(spec, act, tp) +
+                            reduce_scatter_time(spec, score_b, tp))))
         attn.append((ShardingChoice(
             "attn:rep", (("heads", None), ("kv_heads", None))),
             mm_time(f_attn, 1)))
@@ -165,18 +182,19 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
             disp = _bytes(b_local, t, d) * cfg.top_k
             ffn.append((ShardingChoice("ffn:ep", (("experts", "model"),
                                                   ("d_ff", None))),
-                        mm_time(f_moe, tp) + n_moe * 2 * disp / LINK_BW))
+                        mm_time(f_moe, tp) +
+                        n_moe * 2 * all_to_all_time(spec, disp, tp)))
         if cfg.d_ff % tp == 0:
             ffn.append((ShardingChoice("ffn:tp", (("experts", None),
                                                   ("d_ff", "model"))),
                         mm_time(f_moe, tp) +
-                        n_moe * 2 * act * (tp - 1) / tp / LINK_BW))
+                        n_moe * all_reduce_time(spec, act, tp)))
     elif cfg.d_ff:
         f_ffn = 2 * n_tok * d * cfg.d_ff * 3 * nl
         if cfg.d_ff % tp == 0:
             ffn.append((ShardingChoice("ffn:tp", (("d_ff", "model"),)),
                         mm_time(f_ffn, tp) +
-                        nl * 2 * act * (tp - 1) / tp / LINK_BW))
+                        nl * all_reduce_time(spec, act, tp)))
         ffn.append((ShardingChoice("ffn:rep", (("d_ff", None),)),
                     mm_time(f_ffn, 1)))
     else:  # pure SSM: no FFN at all
@@ -212,57 +230,55 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
             cache.append((ShardingChoice(
                 "cache:seq", (("kv_seq", dp_ax),
                               ("batch", None))),
-                cfg.n_layers * _bytes(shape.global_batch, cfg.n_heads,
-                                      hd + 2, dtype_bytes=4) / LINK_BW))
+                cfg.n_layers * xfer(_bytes(shape.global_batch,
+                                           cfg.n_heads, hd + 2,
+                                           dtype_bytes=4))))
         cache.append((ShardingChoice(
             "cache:replicated", (("kv_seq", None),)),
-            kv_bytes / HBM_BW))  # every chip reads the whole cache
+            kv_bytes / spec.mem_bw))  # every chip reads the whole cache
         add("cache", cache)
 
     # ---------------- head ----------------
     head = []
-    logits = _bytes(b_local, t, v, dtype_bytes=4)
     if v % tp == 0:
         head.append((ShardingChoice("head:vocab", ()),
-                     _ring_ag_bytes(_bytes(b_local, t, 1, dtype_bytes=4),
-                                    tp) / LINK_BW))
+                     all_gather_time(
+                         spec, _bytes(b_local, t, 1, dtype_bytes=4), tp)))
     head.append((ShardingChoice("head:rep", (("vocab", None),)),
-                 logits / HBM_BW / tp * 0 + _bytes(d, v) / HBM_BW))
+                 _bytes(d, v) / spec.mem_bw))
     add("head", head)
 
     # ---------------- edges: resharding between stream and groups ----
-    # stream "layout" transitions are the DT-graph edges: SP <-> rep
-    # costs one all-gather (rep->needs full seq) or reduce-scatter.
-    def stream_edge(group: str):
-        M = np.zeros((len(domains["stream"]), len(domains[group])))
-        for i, sc in enumerate(domains["stream"]):
-            for j, gc in enumerate(domains[group]):
-                if sc.stream == "sp":
-                    # per-layer all-gather + reduce-scatter of activations
-                    M[i, j] = nl * 2 * _ring_ag_bytes(act, tp) / LINK_BW
-                    # SP only composes with sharded compute groups
-                    if gc.name.endswith(":rep"):
-                        M[i, j] = np.inf
-                else:
-                    M[i, j] = 0.0
-        pb.add_edge("stream", group, M)
+    # stream "layout" transitions are the DT-graph edges of this choice
+    # space: an SP stream costs one all-gather (rep -> needs full seq)
+    # plus one reduce-scatter around every sharded compute group, and
+    # composes only with sharded groups.
+    edges: List[ChoiceEdge] = []
 
-    stream_edge("attn")
-    stream_edge("ffn")
-    # embed/head connect to the stream once (not per layer)
-    M = np.zeros((len(domains["embed"]), len(domains["stream"])))
-    for i, ec in enumerate(domains["embed"]):
-        for j, sc in enumerate(domains["stream"]):
-            M[i, j] = _ring_ag_bytes(act, tp) / LINK_BW \
-                if sc.stream == "sp" else 0.0
-    pb.add_edge("embed", "stream", M)
-    M = np.zeros((len(domains["stream"]), len(domains["head"])))
-    for i, sc in enumerate(domains["stream"]):
-        for j, hc in enumerate(domains["head"]):
-            M[i, j] = _ring_ag_bytes(act, tp) / LINK_BW \
-                if sc.stream == "sp" else 0.0
-    pb.add_edge("stream", "head", M)
+    def stream_group(sc: ShardingChoice, gc: ShardingChoice) -> float:
+        if sc.stream != "sp":
+            return 0.0
+        # SP only composes with sharded compute groups
+        if gc.name.endswith(":rep"):
+            return np.inf
+        # per-layer all-gather + reduce-scatter of activations
+        return nl * (all_gather_time(spec, act, tp) +
+                     reduce_scatter_time(spec, act, tp))
 
+    # embed/head touch the stream once (not per layer): entering or
+    # leaving a seq-sharded stream costs one activation all-gather,
+    # regardless of which embed/head variant sits on the other end
+    sp_boundary = all_gather_time(spec, act, tp)
+    edges.append(ChoiceEdge("stream", "attn", stream_group))
+    edges.append(ChoiceEdge("stream", "ffn", stream_group))
+    edges.append(ChoiceEdge(
+        "embed", "stream",
+        lambda ec, sc: sp_boundary if sc.stream == "sp" else 0.0))
+    edges.append(ChoiceEdge(
+        "stream", "head",
+        lambda sc, hc: sp_boundary if sc.stream == "sp" else 0.0))
+
+    pb, _ = build_pbqp(nodes, edges)
     sol = pbqp.solve(pb, exact=exact)
     chosen = {n: domains[n][sol.assignment[n]] for n in domains}
 
@@ -288,7 +304,7 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
 
     report = {
         "arch": cfg.name, "shape": shape.name,
-        "mesh": dict(mesh_shape),
+        "mesh": dict(mesh_shape), "spec": spec.name,
         "assignment": {n: c.name for n, c in chosen.items()},
         "predicted_comm_s": sol.cost,
         "optimal": sol.optimal,

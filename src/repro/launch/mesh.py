@@ -6,12 +6,39 @@ must set XLA_FLAGS before jax initialises.
 """
 from __future__ import annotations
 
-from typing import Dict
-
 import jax
 
+from ..core.plan import mesh_shape_dict  # re-export: single definition
+
 __all__ = ["make_mesh_compat", "make_production_mesh", "make_cpu_mesh",
-           "mesh_shape_dict"]
+           "mesh_shape_dict", "mesh_fingerprint", "force_host_devices"]
+
+
+def force_host_devices(n: int) -> None:
+    """Ensure XLA_FLAGS requests at least ``n`` fake host devices.
+
+    Must run before jax initialises its backends (flags are read at
+    backend init, not at ``import jax``).  A pre-existing
+    ``--xla_force_host_platform_device_count`` with a *smaller* count
+    is replaced — the caller's mesh needs ``n`` — while a larger one is
+    kept; on real accelerator hosts the flag only affects the unused
+    CPU platform, so forcing is always safe.  Single home for this
+    mangling: the serve CLI and the sharding benchmark both route
+    through here.
+    """
+    import os
+    import re
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m:
+        if int(m.group(1)) >= n:
+            return
+        flags = flags.replace(
+            m.group(0), f"--xla_force_host_platform_device_count={n}")
+    else:
+        flags = (f"{flags} "
+                 f"--xla_force_host_platform_device_count={n}").strip()
+    os.environ["XLA_FLAGS"] = flags
 
 
 def make_mesh_compat(shape, axis_names):
@@ -41,5 +68,16 @@ def make_cpu_mesh(data: int = 1, model: int = 1):
     return make_mesh_compat((data, model), ("data", "model"))
 
 
-def mesh_shape_dict(mesh) -> Dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+def mesh_fingerprint(mesh) -> str:
+    """Stable cache-key component for a mesh: platform + axis topology.
+
+    Device *ids* are deliberately excluded — the same topology on a
+    different pod (or a restarted fake-device process) solves identical
+    placement PBQPs, so its persisted plans stay valid.
+    """
+    if mesh is None:
+        return "none"
+    axes = "x".join(f"{n}{s}" for n, s in
+                    zip(mesh.axis_names, mesh.devices.shape))
+    platform = mesh.devices.flat[0].platform
+    return f"{platform}-{axes}"

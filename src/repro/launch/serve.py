@@ -14,6 +14,11 @@ HardwareProfile (built by ``python -m repro.launch.calibrate``) instead
 of the analytic roofline; uncovered buckets fall back analytically, and
 a recalibrated profile automatically invalidates previously persisted
 plans through the cost-model version key (docs/calibration.md).
+
+``--dp-mesh N`` serves the vision tower mesh-sharded: bucket solves
+gain the device-placement axis and batched invocations run
+data-parallel over an N-device ``data`` mesh (fake CPU devices are
+forced when the host has fewer — docs/distributed.md).
 """
 from __future__ import annotations
 
@@ -37,10 +42,20 @@ def main():
                     help="measured HardwareProfile JSON driving PBQP "
                          "selection (see repro.launch.calibrate)")
     ap.add_argument("--image-tokens", type=int, default=4)
+    ap.add_argument("--dp-mesh", type=int, default=0,
+                    help="serve the vision tower data-parallel over an "
+                         "N-device 'data' mesh (0: single device)")
     args = ap.parse_args()
     if args.profile and args.vision_every <= 0:
         ap.error("--profile prices the vision plan path; it needs "
                  "--vision-every > 0 to have any effect")
+    if args.dp_mesh > 1 and args.vision_every <= 0:
+        ap.error("--dp-mesh shards the vision plan path; it needs "
+                 "--vision-every > 0 to have any effect")
+    if args.dp_mesh > 1:
+        # must happen before jax initialises its backends
+        from .mesh import force_host_devices
+        force_host_devices(args.dp_mesh)
 
     import jax
     import jax.numpy as jnp
@@ -64,10 +79,14 @@ def main():
             cost_model = CalibratedCostModel(
                 HardwareProfile.load(args.profile), fallback=cost_model,
                 policy=policy)
+        mesh = None
+        if args.dp_mesh > 1:
+            from .mesh import make_mesh_compat
+            mesh = make_mesh_compat((args.dp_mesh,), ("data",))
         plan_server = PlanServer(
             lambda s: conv_tower(s, depth=2, width=8),
             cost_model,
-            policy=policy,
+            policy=policy, mesh=mesh,
             cache_dir=args.plan_cache_dir, lru_capacity=4)
 
     loop = ServeLoop(cfg, params, max_batch=args.max_batch,
@@ -103,7 +122,8 @@ def main():
               f" compiles={s['compiles']}"
               f" | plan hits={s['plan_hits']} exec hits={s['exec_hits']}"
               f" | batched calls={s['batch_calls']}"
-              f" (+{s['coalesced']} coalesced)"
+              f" (+{s['coalesced']} coalesced,"
+              f" {s['mesh_compiles']} mesh-sharded)"
               f" | solve {s['solve_s']*1e3:.0f} ms"
               f" compile {s['compile_s']*1e3:.0f} ms"
               f" execute {s['execute_s']*1e3:.0f} ms")

@@ -34,6 +34,8 @@ class ServingCounters:
     solves: int = 0
     warm_solves: int = 0          # of which seeded by a neighbouring bucket
     compiles: int = 0
+    #: of which emitted mesh-sharded (dp-placement-carrying) executables
+    mesh_compiles: int = 0
     #: accumulated wall time (seconds)
     solve_s: float = 0.0
     compile_s: float = 0.0

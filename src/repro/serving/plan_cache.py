@@ -37,7 +37,9 @@ __all__ = ["PLAN_SCHEMA", "plan_key", "selection_to_payload",
 #: bump when the payload format below changes shape
 #: 2: per-edge fused realizations ("fusions") joined the payload; v1
 #:    plans predate fused-edge pricing and must re-solve
-PLAN_SCHEMA = 2
+#: 3: per-node device placements joined the choices (the unified
+#:    choice-space mesh axis); v2 plans predate placement solving
+PLAN_SCHEMA = 3
 
 
 def plan_key(net_fingerprint: str, bucket_key: str,
@@ -55,7 +57,7 @@ def selection_to_payload(sel: SelectionResult) -> Dict[str, Any]:
         "schema": PLAN_SCHEMA,
         "choices": {
             nid: [ch.primitive.name if ch.primitive else None,
-                  ch.l_in, ch.l_out]
+                  ch.l_in, ch.l_out, ch.placement]
             for nid, ch in sel.choices.items()},
         "conversions": [[src, dst, chain]
                         for (src, dst), chain in sel.conversions.items()],
@@ -75,9 +77,9 @@ def selection_from_payload(payload: Dict[str, Any],
                          f"{PLAN_SCHEMA}")
     by_name = {p.name: p for p in registry()}
     choices: Dict[str, Choice] = {}
-    for nid, (pname, l_in, l_out) in payload["choices"].items():
+    for nid, (pname, l_in, l_out, placement) in payload["choices"].items():
         prim = by_name[pname] if pname is not None else None
-        choices[nid] = Choice(prim, l_in, l_out)
+        choices[nid] = Choice(prim, l_in, l_out, str(placement))
     conversions: Dict[Tuple[str, str], List[str]] = {
         (src, dst): list(chain)
         for src, dst, chain in payload["conversions"]}

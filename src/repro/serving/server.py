@@ -29,6 +29,14 @@ Three execution entry points:
   :meth:`infer_batch`.  The LM serve loop flushes once per admission
   tick, so all images admitted in a tick share one tower invocation.
 
+With a device ``mesh``, batched buckets solve the unified choice space
+(primitive × layout × device placement — ``select_pbqp(...,
+mesh_axes=)``), dp-carrying plans compile mesh-sharded
+(``compile_plan(..., mesh=)``), the mesh topology fingerprint joins
+every cache key (a plan solved for one topology is never served to
+another), and :meth:`infer_batch` runs each bucket group data-parallel
+across the mesh's ``data`` axis.  See docs/distributed.md.
+
 Misses can be taken off the caller's thread with :meth:`PlanServer.
 prefetch` (async solve+compile).  Cache bookkeeping (and the
 millisecond-scale PBQP solve) runs under one lock, but the expensive
@@ -53,6 +61,7 @@ from ..core.costs import CostModel
 from ..core.graph import Net
 from ..core.plan import CompiledNet, compile_plan
 from ..core.selection import SelectionResult, select_pbqp
+from ..launch.mesh import mesh_fingerprint, mesh_shape_dict
 from .bucketing import BucketPolicy, bucket_key, bucket_shape
 from .metrics import ServingCounters
 from .plan_cache import (
@@ -92,14 +101,24 @@ class PlanServer:
                  cache_dir=None, lru_capacity: int = 8,
                  exact: bool = True, params_seed: int = 0,
                  jit: bool = True, max_workers: int = 2,
-                 fuse: bool = False) -> None:
+                 fuse: bool = False, mesh=None) -> None:
         self.net_builder = net_builder
         self.cost = cost_model
         self.fuse = fuse
+        #: device mesh for batched executables: batch-bucket solves gain
+        #: the placement axis over the mesh's "data" axis, and
+        #: dp-carrying plans compile mesh-sharded (``infer_batch`` then
+        #: runs each bucket group data-parallel across the mesh)
+        self.mesh = mesh
+        self._mesh_axes = mesh_shape_dict(mesh) if mesh is not None \
+            else None
         # a fused and an unfused plan for the same bucket are different
-        # plans (edges priced and realized differently) — fold the flag
+        # plans (edges priced and realized differently), and so is the
+        # same bucket solved for a different mesh topology — fold both
         # into the version string every cache tier keys on
-        self.cost_version = cost_model.version() + ("+fuse" if fuse else "")
+        self.cost_version = cost_model.version() + \
+            ("+fuse" if fuse else "") + \
+            (f"+mesh={mesh_fingerprint(mesh)}" if mesh is not None else "")
         self.policy = policy or BucketPolicy()
         self.exact = exact
         self.params_seed = params_seed
@@ -152,7 +171,7 @@ class PlanServer:
         warm = self._nearest_plan(pkey)
         t0 = time.perf_counter()
         sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm,
-                          fuse=self.fuse)
+                          fuse=self.fuse, mesh_axes=self._mesh_axes)
         self.counters.add(solves=1, solve_s=time.perf_counter() - t0,
                           warm_solves=int(sel.solver_stats.get("WARM", 0)))
         self._plans[pkey] = sel
@@ -201,8 +220,14 @@ class PlanServer:
             params = sel.net.init_params(self.params_seed)
             t0 = time.perf_counter()
             # XLA compile + warm-up outside the lock: hot buckets must
-            # not stall behind a cold bucket compiling
-            cnet = compile_plan(sel, params, jit=self.jit, batch=nb)
+            # not stall behind a cold bucket compiling.  Mesh-sharded
+            # compilation only when the plan actually carries dp nodes
+            # (an all-rep plan on a mesh is just the plain executable).
+            mesh = self.mesh if nb > 1 and any(
+                ch.placement == "dp" for ch in sel.choices.values()) \
+                else None
+            cnet = compile_plan(sel, params, jit=self.jit, batch=nb,
+                                mesh=mesh)
             warm_in = np.zeros(bshape if nb == 1 else (nb, *bshape),
                                np.float32)
             _block(cnet(warm_in))
@@ -212,6 +237,7 @@ class PlanServer:
                 self._building.pop(pkey, None)
                 self.counters.add(
                     compiles=1, compile_s=time.perf_counter() - t0,
+                    mesh_compiles=int(cnet.mesh is not None),
                     exec_evictions=self._compiled.evictions - ev0)
             fut.set_result(cnet)
             return cnet

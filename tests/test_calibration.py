@@ -126,6 +126,27 @@ class TestCalibratedModel:
         cm = CalibratedCostModel(prof, policy=POLICY)
         assert cm.primitive_cost(pallas, SCN) == float("inf")
 
+    def test_collective_cost_table_and_fallback(self):
+        """Measured pod collectives (``coll::`` entries) are served
+        with pow2 byte-bucketing; uncovered triples fall back to the
+        analytic ring model (docs/distributed.md)."""
+        from repro.core.costs import collective_cost_key
+        prof = _profile(**{
+            collective_cost_key("all_gather", 1 << 20, 8): 123e-6})
+        fallback = AnalyticCostModel()
+        cm = CalibratedCostModel(prof, fallback=fallback, policy=POLICY)
+        # any payload rounding up into the 1 MiB bucket hits the table
+        assert cm.collective_cost("all_gather", 1_000_000, 8) == \
+            pytest.approx(123e-6)
+        assert cm.table_hits == 1 and cm.fallback_hits == 0
+        # uncovered kind / participant count: analytic fallback
+        assert cm.collective_cost("all_reduce", 1 << 20, 8) == \
+            pytest.approx(fallback.collective_cost(
+                "all_reduce", 1 << 20, 8))
+        assert cm.fallback_hits == 1
+        # degenerate fabric: one participant is always free
+        assert cm.collective_cost("all_gather", 1 << 20, 1) == 0.0
+
     def test_device_mismatch_rejected_unless_transfer(self):
         prof = _profile()
         prof.device = "tpu:TPU_v5e:n8"

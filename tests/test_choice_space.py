@@ -1,0 +1,165 @@
+"""Unit tests for the unified choice-space PBQP builder."""
+import numpy as np
+import pytest
+
+from repro.core import pbqp
+from repro.core.choice_space import (
+    ChoiceEdge, ChoiceNode, build_pbqp, drop_infinite,
+)
+
+
+class TestBuildPBQP:
+    def test_matches_manual_construction(self):
+        """build_pbqp must produce the same instance (same optimum) as
+        hand-built PBQP with explicit matrices."""
+        nodes = [
+            ChoiceNode("a", ["a0", "a1"], [1.0, 5.0]),
+            ChoiceNode("b", ["b0", "b1", "b2"], [2.0, 0.0, 9.0]),
+        ]
+        trans = lambda cu, cv: 10.0 if (cu, cv) == ("a0", "b1") else 0.5
+        pb, domains = build_pbqp(nodes, [ChoiceEdge("a", "b", trans)])
+
+        manual = pbqp.PBQP()
+        manual.add_node("a", [1.0, 5.0])
+        manual.add_node("b", [2.0, 0.0, 9.0])
+        M = np.full((2, 3), 0.5)
+        M[0, 1] = 10.0
+        manual.add_edge("a", "b", M)
+
+        got, want = pbqp.solve(pb), pbqp.solve(manual)
+        assert got.cost == pytest.approx(want.cost)
+        assert got.assignment == want.assignment
+        assert domains["a"][got.assignment["a"]] in ("a0", "a1")
+
+    def test_infinite_transitions_legal(self):
+        """inf transitions encode illegal pairs; the solver routes
+        around them."""
+        nodes = [ChoiceNode("a", ["a0", "a1"], [0.0, 100.0]),
+                 ChoiceNode("b", ["b0"], [0.0])]
+        trans = lambda cu, cv: np.inf if cu == "a0" else 0.0
+        pb, domains = build_pbqp(nodes, [ChoiceEdge("a", "b", trans)])
+        sol = pbqp.solve(pb)
+        assert domains["a"][sol.assignment["a"]] == "a1"
+        assert sol.cost == pytest.approx(100.0)
+
+    def test_node_validation(self):
+        with pytest.raises(ValueError, match="choices"):
+            ChoiceNode("a", ["x", "y"], [1.0])
+        with pytest.raises(ValueError, match="empty"):
+            ChoiceNode("a", [], [])
+
+    def test_drop_infinite(self):
+        entries = [("x", 1.0), ("y", np.inf), ("z", 2.0)]
+        assert drop_infinite(entries) == [("x", 1.0), ("z", 2.0)]
+        # an all-infinite domain is kept intact (solver reports
+        # Infeasible instead of the builder crashing)
+        only_inf = [("x", np.inf), ("y", np.inf)]
+        assert drop_infinite(only_inf) == only_inf
+
+
+class TestSharedBuildPath:
+    """Both selection layers go through build_pbqp (the acceptance
+    criterion of the unified-solver refactor)."""
+
+    def test_selection_routes_through_builder(self, monkeypatch):
+        import repro.core.choice_space as cs
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import select_pbqp
+        from repro.serving.towers import conv_stack
+
+        calls = []
+        orig = cs.build_pbqp
+
+        def spy(nodes, edges):
+            calls.append(len(nodes))
+            return orig(nodes, edges)
+
+        monkeypatch.setattr("repro.core.selection.build_pbqp", spy)
+        select_pbqp(conv_stack((4, 16, 16), depth=2, width=8),
+                    AnalyticCostModel())
+        assert calls, "select_pbqp did not use the shared builder"
+
+    def test_sharding_routes_through_builder(self, monkeypatch):
+        import repro.core.choice_space as cs
+        from repro.configs import SHAPES, get_config
+        from repro.core.sharding_select import select_rules
+
+        calls = []
+        orig = cs.build_pbqp
+
+        def spy(nodes, edges):
+            calls.append(len(nodes))
+            return orig(nodes, edges)
+
+        monkeypatch.setattr("repro.core.sharding_select.build_pbqp", spy)
+        select_rules(get_config("mistral-nemo-12b"), SHAPES["train_4k"],
+                     {"data": 16, "model": 16})
+        assert calls, "select_rules did not use the shared builder"
+
+
+class TestPlacementEdgePricing:
+    def test_dp_to_rep_gather_prices_each_edges_own_bytes(self):
+        """Every edge's dp->rep entry must charge the all-gather of THAT
+        edge's tensor (regression: the transition closure once
+        late-bound img_bytes, pricing every edge with the last edge's —
+        typically much smaller — byte count)."""
+        from repro.core import selection
+        from repro.core.costs import AnalyticCostModel
+        from repro.serving.towers import conv_stack
+
+        nb, d = 8, 8
+        net = conv_stack((4, 32, 32), depth=2, width=8).with_batch(nb)
+        cm = AnalyticCostModel()
+        pb, domains, _ = selection._build(net, cm,
+                                          mesh_axes={"data": d})
+        shapes = {net.nodes[s].out_shape for (s, _) in net.edges()}
+        assert len(shapes) > 1, "fixture needs distinct edge tensors"
+        for (src, dst) in net.edges():
+            shape = net.nodes[src].out_shape
+            want = cm.collective_cost(
+                "all_gather", 4 * float(np.prod(shape)) * nb, d)
+            M = pb.edge_cost(src, dst)
+            du, dv = domains[src], domains[dst]
+            i = next(k for k, c in enumerate(du) if c.placement == "dp")
+            # rep/dp twins of the same consumer choice: their entry
+            # difference is exactly the resharding gather (the layout
+            # term is identical — both sharded-side, nb/D images)
+            j_dp = next(k for k, c in enumerate(dv)
+                        if c.placement == "dp")
+            j_rep = next(k for k, c in enumerate(dv)
+                         if c.placement == "rep"
+                         and c.l_in == dv[j_dp].l_in
+                         and (c.primitive.name if c.primitive else None)
+                         == (dv[j_dp].primitive.name
+                             if dv[j_dp].primitive else None))
+            got = M[i, j_rep] - M[i, j_dp]
+            assert got == pytest.approx(want, rel=1e-12), \
+                f"edge {src}->{dst}: gather priced {got}, want {want}"
+
+
+class TestMeshCompileValidation:
+    def test_mesh_requires_batched_executable(self):
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.plan import compile_plan
+        from repro.core.selection import select_pbqp
+        from repro.launch.mesh import make_cpu_mesh
+        from repro.serving.towers import conv_stack
+
+        net = conv_stack((4, 16, 16), depth=2, width=8)
+        sel = select_pbqp(net, AnalyticCostModel())
+        mesh = make_cpu_mesh(1, 1)
+        with pytest.raises(ValueError, match="batch"):
+            compile_plan(sel, net.init_params(0), batch=1, mesh=mesh)
+
+    def test_placement_axis_needs_divisible_batch(self):
+        """No dp choices are offered when the data axis cannot divide
+        the batch — the plan falls back to all-rep."""
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import placements_for, select_pbqp
+        from repro.serving.towers import conv_stack
+
+        net = conv_stack((4, 16, 16), depth=2, width=8).with_batch(6)
+        assert placements_for(net, {"data": 4}) == ["rep"]
+        sel = select_pbqp(net, AnalyticCostModel(),
+                          mesh_axes={"data": 4})
+        assert all(c.placement == "rep" for c in sel.choices.values())

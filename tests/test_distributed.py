@@ -155,6 +155,148 @@ class TestCompression:
         assert err < 0.02  # stochastic rounding averages out
 
 
+class TestShardedPlan:
+    """The unified choice-space pipeline: solve (placement axis) ->
+    compile (mesh executables) -> serve, on an 8-fake-device CPU mesh.
+    Acceptance: mesh-sharded outputs identical to the unsharded plan."""
+
+    def test_sharded_tower_matches_unsharded(self):
+        out = run_with_devices("""
+            import numpy as np
+            from repro.core.costs import AnalyticCostModel
+            from repro.core.plan import compile_plan
+            from repro.core.selection import select_pbqp
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving.towers import conv_stack, conv_tower
+
+            mesh = make_mesh_compat((8,), ('data',))
+            cm = AnalyticCostModel()
+            rng = np.random.default_rng(0)
+            modes = set()
+            for builder in (conv_stack, conv_tower):
+                net = builder((4, 32, 32), depth=3, width=8).with_batch(8)
+                sel = select_pbqp(net, cm, mesh_axes={'data': 8})
+                assert sel.optimal
+                assert any(c.placement == 'dp'
+                           for c in sel.choices.values()), 'no dp chosen'
+                sel0 = select_pbqp(net, cm)
+                assert all(c.placement == 'rep'
+                           for c in sel0.choices.values())
+                params = net.init_params(0)
+                x = rng.normal(size=(8, 4, 32, 32)).astype(np.float32)
+                cn = compile_plan(sel, params, batch=8, mesh=mesh)
+                cn0 = compile_plan(sel0, params, batch=8)
+                modes.add(cn.mesh_mode)
+                out, out0 = cn(x), cn0(x)
+                assert set(out) == set(out0)
+                for k in out:
+                    np.testing.assert_allclose(
+                        np.asarray(out[k]), np.asarray(out0[k]),
+                        rtol=2e-3, atol=2e-3)
+            # both executable modes exercised: the all-dp shard_map
+            # fast path and the mixed-placement GSPMD path
+            assert modes == {'shard_map', 'gspmd'}, modes
+            print('OK', sorted(modes))
+        """)
+        assert "OK" in out
+
+    def test_mesh_plan_server_matches_plain(self):
+        out = run_with_devices("""
+            import numpy as np
+            from repro.core.costs import AnalyticCostModel
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving import BucketPolicy, PlanServer, conv_stack
+
+            mesh = make_mesh_compat((8,), ('data',))
+            policy = BucketPolicy(min_hw=8, max_hw=64)
+            build = lambda s: conv_stack(s, depth=2, width=8)
+            rng = np.random.default_rng(0)
+            stream = [rng.normal(size=(
+                4, int(rng.integers(12, 17)), int(rng.integers(12, 17))
+                )).astype(np.float32) for _ in range(16)]
+            srv_m = PlanServer(build, AnalyticCostModel(), policy=policy,
+                               mesh=mesh)
+            srv_0 = PlanServer(build, AnalyticCostModel(), policy=policy)
+            # the mesh topology is part of every cache key
+            assert srv_m.cost_version != srv_0.cost_version
+            out_m = srv_m.infer_batch(stream)
+            out_0 = srv_0.infer_batch(stream)
+            for i in range(len(stream)):
+                assert set(out_m[i]) == set(out_0[i])
+                for k in out_m[i]:
+                    assert out_m[i][k].shape == out_0[i][k].shape
+                    np.testing.assert_allclose(out_m[i][k], out_0[i][k],
+                                               rtol=2e-3, atol=2e-3)
+            s = srv_m.stats()
+            assert s['mesh_compiles'] >= 1, s
+            # single-image latency path stays mesh-free but must agree
+            one_m = srv_m.infer(stream[0])
+            one_0 = srv_0.infer(stream[0])
+            for k in one_m:
+                np.testing.assert_allclose(one_m[k], one_0[k],
+                                           rtol=2e-3, atol=2e-3)
+            srv_m.close(); srv_0.close()
+            print('OK', int(s['mesh_compiles']))
+        """)
+        assert "OK" in out
+
+    def test_mesh_plan_roundtrips_through_disk_cache(self):
+        out = run_with_devices("""
+            import numpy as np, tempfile
+            from repro.core.costs import AnalyticCostModel
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving import BucketPolicy, PlanServer, conv_stack
+
+            mesh = make_mesh_compat((8,), ('data',))
+            policy = BucketPolicy(min_hw=8, max_hw=64)
+            build = lambda s: conv_stack(s, depth=2, width=8)
+            xs = [np.ones((4, 16, 16), np.float32)] * 8
+            with tempfile.TemporaryDirectory() as d:
+                srv = PlanServer(build, AnalyticCostModel(),
+                                 policy=policy, mesh=mesh, cache_dir=d)
+                out1 = srv.infer_batch(xs)
+                assert srv.stats()['solves'] == 1
+                srv.close()
+                # new server, same dir: placements come back from disk
+                srv2 = PlanServer(build, AnalyticCostModel(),
+                                  policy=policy, mesh=mesh, cache_dir=d)
+                out2 = srv2.infer_batch(xs)
+                s = srv2.stats()
+                assert s['solves'] == 0 and s['plan_disk_hits'] == 1, s
+                assert s['mesh_compiles'] >= 1, s
+                for k in out1[0]:
+                    np.testing.assert_allclose(out1[0][k], out2[0][k],
+                                               rtol=2e-3, atol=2e-3)
+                srv2.close()
+            print('OK')
+        """)
+        assert "OK" in out
+
+
+class TestForceHostDevices:
+    """XLA_FLAGS mangling for fake-device meshes (single home:
+    launch/mesh.py::force_host_devices — serve CLI and the sharding
+    benchmark both route through it)."""
+
+    def test_appends_when_absent(self, monkeypatch):
+        from repro.launch.mesh import force_host_devices
+        monkeypatch.setenv("XLA_FLAGS", "--some_other_flag")
+        force_host_devices(8)
+        assert os.environ["XLA_FLAGS"] == \
+            "--some_other_flag --xla_force_host_platform_device_count=8"
+
+    def test_replaces_smaller_keeps_larger(self, monkeypatch):
+        from repro.launch.mesh import force_host_devices
+        monkeypatch.setenv(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+        force_host_devices(8)  # a 4-device flag cannot carry an 8-mesh
+        assert "--xla_force_host_platform_device_count=8" in \
+            os.environ["XLA_FLAGS"]
+        force_host_devices(2)  # but a larger pre-set count is kept
+        assert "--xla_force_host_platform_device_count=8" in \
+            os.environ["XLA_FLAGS"]
+
+
 class TestElastic:
     def test_remesh_on_device_change(self):
         out = run_with_devices("""

@@ -169,6 +169,34 @@ def _alt_selection(net, fuse):
     return select_fixed(net, COST, pick, "alt", fuse=fuse)
 
 
+class TestPlacementFusionInteraction:
+    def test_legalize_never_fuses_across_placements(self):
+        """_legalize must replay _build's pricing exactly: fused
+        realizations are only offered when both endpoints share a
+        device placement (regression: it once fused placement-
+        mismatched edges the solver had priced materialized +
+        collective, desynchronizing predicted_cost from the emitted
+        program)."""
+        from dataclasses import replace
+
+        from repro.core import selection as sel_mod
+        net = _alt_tower()
+        s = _alt_selection(net, fuse=True)
+        assert s.fusions  # fixture sanity: fused edges exist
+        dt = COST.dt_graph()
+        (src, dst) = next(iter(s.fusions))
+        mixed = dict(s.choices)
+        mixed[src] = replace(mixed[src], placement="dp")
+        conv, fus = sel_mod._legalize(net, dt, mixed, cost=COST,
+                                      fuse=True)
+        assert (src, dst) not in fus
+        assert (src, dst) in conv
+        # with placements agreeing, the same edge still fuses
+        _, fus2 = sel_mod._legalize(net, dt, dict(s.choices),
+                                    cost=COST, fuse=True)
+        assert (src, dst) in fus2
+
+
 class TestFusionSelection:
     def test_fused_pricing_never_worse(self):
         from repro.serving.towers import conv_tower

@@ -1,13 +1,27 @@
 """Tests for the distributed-level PBQP sharding selection."""
+import json
+import pathlib
+
 import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config
+from repro.core.costs import TPU_V5E_SPEC, HardwareSpec
 from repro.core.sharding_select import select_rules
 from repro.models.sharding import MEGATRON_RULES, Rules
 
 MESH_1POD = {"data": 16, "model": 16}
 MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+#: pre-refactor behavior snapshot: select_rules assignments + costs for
+#: every (arch, shape, mesh) cell, captured before the hardcoded
+#: PEAK_FLOPS/HBM_BW/LINK_BW constants were replaced by HardwareSpec
+#: and the PBQP build moved onto core.choice_space.  The refactor must
+#: be cost-equivalent: identical picks, identical predicted comm.
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "data" /
+     "sharding_golden.json").read_text())
+GOLDEN_MESHES = {"1pod": MESH_1POD, "2pod": MESH_2POD}
 
 
 class TestFeasibility:
@@ -77,6 +91,59 @@ class TestSolverProperties:
         batch_axes = rules.get("batch")
         assert "pod" in (batch_axes if isinstance(batch_axes, tuple)
                          else (batch_axes,))
+
+
+class TestCostEquivalence:
+    """The HardwareSpec + unified-builder refactor is cost-equivalent:
+    every pick and every predicted comm time matches the pre-refactor
+    golden snapshot (tests/data/sharding_golden.json)."""
+
+    @pytest.mark.parametrize("key", sorted(GOLDEN))
+    def test_matches_pre_refactor_golden(self, key):
+        arch, sname, mname = key.split("|")
+        _, rep = select_rules(get_config(arch), SHAPES[sname],
+                              GOLDEN_MESHES[mname])
+        want = GOLDEN[key]
+        assert rep["assignment"] == want["assignment"]
+        assert rep["predicted_comm_s"] == pytest.approx(
+            want["predicted_comm_s"], rel=1e-12)
+
+    def test_default_spec_is_tpu_v5e(self):
+        cfg = get_config("mistral-nemo-12b")
+        _, rep = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert rep["spec"] == TPU_V5E_SPEC.name
+
+    def test_no_fabric_spec_replicates_instead_of_crashing(self):
+        """link_bw=0 (the HardwareSpec default) means no interconnect:
+        every collective prices infinite and the solver must fall back
+        to replication — never divide by zero."""
+        cfg = get_config("mistral-nemo-12b")
+        no_fabric = HardwareSpec(
+            name="no-fabric", peak_flops=TPU_V5E_SPEC.peak_flops,
+            mem_bw=TPU_V5E_SPEC.mem_bw)
+        _, rep = select_rules(cfg, SHAPES["train_4k"], MESH_1POD,
+                              spec=no_fabric)
+        assert rep["optimal"]
+        assert np.isfinite(rep["predicted_comm_s"])
+        for group, choice in rep["assignment"].items():
+            assert choice.endswith(":rep"), (group, choice)
+
+    def test_spec_reprices_the_instance(self):
+        """A slower fabric must raise (never lower) predicted comm and
+        can legitimately change picks — the de Prado et al. point that
+        selection must be re-priced per target platform."""
+        cfg = get_config("mistral-nemo-12b")
+        slow = HardwareSpec(
+            name="tpu-slow-links", peak_flops=TPU_V5E_SPEC.peak_flops,
+            mem_bw=TPU_V5E_SPEC.mem_bw,
+            link_bw=TPU_V5E_SPEC.link_bw / 100,
+            family_eff=TPU_V5E_SPEC.family_eff,
+            family_setup=TPU_V5E_SPEC.family_setup)
+        _, fast_rep = select_rules(cfg, SHAPES["train_4k"], MESH_1POD)
+        _, slow_rep = select_rules(cfg, SHAPES["train_4k"], MESH_1POD,
+                                   spec=slow)
+        assert slow_rep["spec"] == "tpu-slow-links"
+        assert slow_rep["predicted_comm_s"] > fast_rep["predicted_comm_s"]
 
 
 class TestRules:

@@ -167,3 +167,37 @@ class TestSelectionWarmStart:
         assert warm.optimal and fresh.optimal
         assert warm.predicted_cost == pytest.approx(fresh.predicted_cost)
         assert warm.solver_stats.get("WARM") == 1
+
+    def test_unified_choice_space_same_optimum(self):
+        """Warm starts on the placement-extended (unified choice-space)
+        graph stay cost-identical to fresh exact solves — both across
+        neighbouring buckets and across the mesh/no-mesh axis (a
+        meshless plan seeding a mesh solve degrades to a
+        placement-agnostic match, never to a wrong optimum)."""
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import select_pbqp
+        from repro.serving import conv_tower
+
+        cm = AnalyticCostModel()
+        axes = {"data": 8}
+        net_a = conv_tower((4, 32, 32), depth=2, width=8).with_batch(8)
+        net_b = conv_tower((4, 64, 64), depth=2, width=8).with_batch(8)
+        prev = select_pbqp(net_a, cm, exact=True, mesh_axes=axes)
+        assert any(c.placement == "dp" for c in prev.choices.values())
+        fresh = select_pbqp(net_b, cm, exact=True, mesh_axes=axes)
+        warm = select_pbqp(net_b, cm, exact=True, mesh_axes=axes,
+                           warm_start=prev)
+        assert warm.optimal and fresh.optimal
+        assert warm.predicted_cost == pytest.approx(fresh.predicted_cost)
+        assert warm.solver_stats.get("WARM") == 1
+        assert {n: (c.primitive.name if c.primitive else None,
+                    c.placement) for n, c in warm.choices.items()} == \
+               {n: (c.primitive.name if c.primitive else None,
+                    c.placement) for n, c in fresh.choices.items()}
+        # cross-axis: a plan solved WITHOUT a mesh warm-starts the mesh
+        # solve of the same bucket (placement match degrades gracefully)
+        prev0 = select_pbqp(net_b, cm, exact=True)
+        warm2 = select_pbqp(net_b, cm, exact=True, mesh_axes=axes,
+                            warm_start=prev0)
+        assert warm2.predicted_cost == pytest.approx(fresh.predicted_cost)
+        assert warm2.optimal
