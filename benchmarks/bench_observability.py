@@ -1,0 +1,236 @@
+"""Observability benchmark: instrumentation overhead, drift detection
+end to end, and metric-update cost.
+
+Three sections (CI's ``observability`` job asserts on the JSON):
+
+1. **overhead** — the serving hot path (``PlanServer.infer`` on a hot
+   bucket) with tracing enabled vs disabled, interleaved in blocks so
+   machine drift hits both arms equally.  The acceptance gate is
+   instrumented overhead < 5%: tracing must be cheap enough to leave on.
+2. **drift** — the full recalibration workflow against a deliberately
+   stale profile: calibrate a tower's profile from instrumented
+   observations to a fixed point, perturb the converged node entries 8x
+   *down* (a stale-fast profile attracts the solver to exactly the
+   mis-priced primitives — perturbing up would just make it avoid
+   them), re-solve, and assert the perturbed nodes are flagged, only
+   flagged entries are recalibrated, the profile content hash (and with
+   it every plan-cache key) rotates, and the re-converged plan's
+   predicted total lands within the drift threshold of observed.
+3. **metrics** — ns/op of registry counter increments and histogram
+   records (single-threaded), plus a threaded-hammer exactness check.
+
+  PYTHONPATH=src python -m benchmarks.bench_observability
+  PYTHONPATH=src python -m benchmarks.bench_observability --only drift
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import time
+
+import numpy as np
+
+#: restricted primitive pool for the drift demo: the explore loop
+#: re-prices a primitive only once the solver selects it, so a bounded
+#: candidate set bounds the rounds to convergence (see
+#: repro.obs.drift.RestrictedCostModel)
+DRIFT_ALLOWED = ("direct_lax_chw_chw_oihw", "direct_lax_hwc_hwc_hwio",
+                 "wino2d_f2x3_chw")
+
+
+def bench_overhead(reps: int = 60, blocks: int = 6, seed: int = 0) -> dict:
+    from repro.core.costs import AnalyticCostModel
+    from repro.obs.trace import configure
+    from repro.serving import BucketPolicy, PlanServer
+    from repro.serving.towers import conv_stack
+
+    srv = PlanServer(lambda s: conv_stack(s, depth=3, width=8),
+                     AnalyticCostModel(), policy=BucketPolicy())
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(3, 16, 16)).astype(np.float32)
+    srv.infer(x)  # solve + compile + warm the bucket
+
+    def run_block(n: int) -> float:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            srv.infer(x)
+        return (time.perf_counter() - t0) / n
+
+    sink: list = []
+    off, on = [], []
+    try:
+        for _ in range(blocks):
+            configure(enabled=False)
+            off.append(run_block(reps))
+            configure(sink, enabled=True)
+            on.append(run_block(reps))
+    finally:
+        configure(enabled=False)
+        srv.close()
+    off_s, on_s = statistics.median(off), statistics.median(on)
+    return {
+        "reps": reps, "blocks": blocks,
+        "uninstrumented_ms": off_s * 1e3,
+        "instrumented_ms": on_s * 1e3,
+        "overhead_pct": (on_s / off_s - 1.0) * 100.0,
+        "spans_emitted": len(sink),
+    }
+
+
+def bench_drift(seed: int = 0, threshold: float = 2.0,
+                runs: int = 4) -> dict:
+    from repro.calibrate.model import CalibratedCostModel
+    from repro.calibrate.profile import HardwareProfile
+    from repro.core.plan import compile_plan
+    from repro.core.selection import select_pbqp
+    from repro.obs.drift import (DriftDetector, InstrumentedNet,
+                                 RestrictedCostModel, recalibration_loop)
+    from repro.serving.bucketing import bucket_key
+    from repro.serving.plan_cache import plan_key
+    from repro.serving.towers import conv_stack
+
+    shape = (3, 16, 16)
+    net = conv_stack(shape, depth=3, width=8, k=3)
+    params = net.init_params(seed)
+    x = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+    # phase 1: calibrate from live instrumented traffic to a fixed point
+    profile = HardwareProfile.new()
+    base = recalibration_loop(net, params, x, profile,
+                              allowed=DRIFT_ALLOWED, threshold=threshold,
+                              runs=runs)
+    det0 = base["detector"]
+
+    # phase 2: make the profile deliberately stale — the converged
+    # plan's node entries 8x too FAST (entries the analytic fallback
+    # already priced accurately are seeded from the prediction first)
+    perturbed_nodes, perturbed_keys = [], []
+    hash_before = profile.content_hash()
+    for e in det0.entries.values():
+        if e.kind != "node":
+            continue
+        old = profile.get(e.profile_key)
+        profile.put(e.profile_key,
+                    (old if old is not None else e.predicted_s) / 8.0)
+        perturbed_nodes.append(e.nid)
+        perturbed_keys.append(e.profile_key)
+    hash_stale = profile.content_hash()
+
+    # phase 3: the stale-fast entries attract the re-solve; the
+    # detector must flag exactly the mis-predicted nodes
+    cost = RestrictedCostModel(CalibratedCostModel(profile), DRIFT_ALLOWED)
+    sel = select_pbqp(net, cost)
+    inst = InstrumentedNet(compile_plan(sel, params))
+    det = DriftDetector(cost, threshold=threshold)
+    for _ in range(runs):
+        _, timings = inst(x)
+        det.observe(sel, timings)
+    flagged = sorted(e.nid for e in det.flagged())
+    stale_ratio = det.plan_ratio()
+
+    # phase 4: recalibrate ONLY the flagged entries, re-converge
+    updated = det.recalibrate(profile)
+    post = recalibration_loop(net, params, x, profile,
+                              allowed=DRIFT_ALLOWED, threshold=threshold,
+                              runs=runs, max_rounds=4)
+    det_post = post["detector"]
+
+    bkey = bucket_key(shape, 1)
+    return {
+        "threshold": threshold,
+        "calibration_rounds": len(base["rounds"]),
+        "calibrated_converged": base["converged"],
+        "calibrated_plan_ratio": det0.plan_ratio(),
+        "perturbed_nodes": sorted(perturbed_nodes),
+        "perturbed_keys": sorted(perturbed_keys),
+        "stale_plan_ratio": stale_ratio,
+        "flagged_nodes": flagged,
+        "all_perturbed_flagged":
+            set(perturbed_nodes) <= set(flagged),
+        "recalibrated_keys": sorted(updated),
+        "recalibrated_only_flagged":
+            set(updated) <= {e.profile_key for e in det.flagged()},
+        "profile_hash_rotated": hash_before != hash_stale !=
+            profile.content_hash(),
+        "plan_key_rotated":
+            plan_key(net.fingerprint(), bkey, "v" + hash_stale) !=
+            plan_key(net.fingerprint(), bkey, "v" + profile.content_hash()),
+        "final_plan_ratio": det_post.plan_ratio(),
+        "final_within_threshold": det_post.plan_within_threshold(),
+        "final_converged": post["converged"],
+        "rounds": base["rounds"] + post["rounds"],
+    }
+
+
+def bench_metrics(ops: int = 100_000, threads: int = 8,
+                  per_thread: int = 20_000) -> dict:
+    import threading
+
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    c = reg.counter("bench_counter")
+    h = reg.histogram("bench_hist")
+    t0 = time.perf_counter()
+    for _ in range(ops):
+        c.add()
+    counter_ns = (time.perf_counter() - t0) / ops * 1e9
+    t0 = time.perf_counter()
+    for i in range(ops):
+        h.record(1e-6 * (i % 1000 + 1))
+    hist_ns = (time.perf_counter() - t0) / ops * 1e9
+
+    hammer = reg.counter("hammer")
+    ts = [threading.Thread(
+        target=lambda: [hammer.add() for _ in range(per_thread)])
+        for _ in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return {
+        "counter_add_ns": counter_ns,
+        "histogram_record_ns": hist_ns,
+        "hammer_threads": threads,
+        "hammer_expected": threads * per_thread,
+        "hammer_observed": hammer.value,
+        "hammer_exact": hammer.value == threads * per_thread,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=60,
+                    help="hot-path infer() calls per overhead block")
+    ap.add_argument("--blocks", type=int, default=6)
+    ap.add_argument("--runs", type=int, default=4,
+                    help="instrumented passes per drift round")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    choices=("overhead", "drift", "metrics"),
+                    help="run a single section (CI smoke jobs)")
+    args = ap.parse_args()
+
+    sections = {
+        "overhead": lambda: bench_overhead(args.reps, args.blocks,
+                                           args.seed),
+        "drift": lambda: bench_drift(args.seed, runs=args.runs),
+        "metrics": lambda: bench_metrics(),
+    }
+    result = {"benchmark": "observability"}
+    for name, fn in sections.items():
+        if args.only is None or args.only == name:
+            result[name] = fn()
+    doc = json.dumps(result, indent=2)
+    print(doc)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    name = "observability.json" if args.only is None \
+        else f"observability_{args.only}.json"
+    (out / name).write_text(doc)
+
+
+if __name__ == "__main__":
+    main()

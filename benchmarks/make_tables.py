@@ -104,10 +104,45 @@ def hillclimb_table():
                   f"{t['roofline_fraction']:.4f} |")
 
 
+def observability_table():
+    """Summarize benchmarks/results/observability.json (written by
+    bench_observability / run.py): the tracing-overhead gate and the
+    drift round trip."""
+    p = pathlib.Path(__file__).parent / "results" / "observability.json"
+    if not p.exists():
+        print("(no observability.json — run "
+              "`python -m benchmarks.bench_observability` first)")
+        return
+    d = json.loads(p.read_text())
+    o = d.get("overhead")
+    if o:
+        print("| hot path | ms/call | overhead | gate |")
+        print("|---|---|---|---|")
+        print(f"| tracing off | {o['uninstrumented_ms']:.3f} | — | — |")
+        print(f"| tracing on | {o['instrumented_ms']:.3f} | "
+              f"{o['overhead_pct']:.2f}% | "
+              f"{'ok (<5%)' if o['overhead_pct'] < 5 else 'FAIL'} |")
+    dr = d.get("drift")
+    if dr:
+        print("\n| drift round trip | value |")
+        print("|---|---|")
+        print(f"| calibration rounds | {dr['calibration_rounds']} |")
+        print(f"| perturbed entries | {len(dr['perturbed_keys'])} |")
+        print(f"| stale plan obs/pred | {dr['stale_plan_ratio']:.2f} |")
+        print(f"| flagged == perturbed | "
+              f"{dr['all_perturbed_flagged']} |")
+        print(f"| recalibrated only flagged | "
+              f"{dr['recalibrated_only_flagged']} |")
+        print(f"| plan keys rotated | {dr['plan_key_rotated']} |")
+        print(f"| final plan obs/pred | {dr['final_plan_ratio']:.2f} "
+              f"(within threshold: {dr['final_within_threshold']}) |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "hillclimb"])
+                    choices=["all", "dryrun", "roofline", "hillclimb",
+                             "observability"])
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
         print("## Dry-run matrix\n")
@@ -118,6 +153,9 @@ def main():
     if args.section in ("all", "hillclimb"):
         print("\n## Hillclimbs\n")
         hillclimb_table()
+    if args.section in ("all", "observability"):
+        print("\n## Observability\n")
+        observability_table()
 
 
 if __name__ == "__main__":

@@ -99,6 +99,27 @@ def run_roofline(args) -> None:
              f"bound={r['bottleneck']};frac={r['roofline_fraction']:.3f}")
 
 
+def run_observability(args) -> None:
+    """Observability section: tracing overhead on the serving hot path
+    and the drift-detection round trip (benchmarks/bench_observability
+    sections, folded into results/observability.json)."""
+    from .bench_observability import bench_drift, bench_metrics, \
+        bench_overhead
+
+    rows = {"benchmark": "observability",
+            "overhead": bench_overhead(),
+            "drift": bench_drift(),
+            "metrics": bench_metrics()}
+    _emit(rows, "observability.json")
+    o, d = rows["overhead"], rows["drift"]
+    _csv("obs/trace_overhead", o["instrumented_ms"] * 1e3,
+         f"overhead_pct={o['overhead_pct']:.2f}")
+    _csv("obs/drift_recalibration", 0.0,
+         f"stale_ratio={d['stale_plan_ratio']:.2f};"
+         f"final_ratio={d['final_plan_ratio']:.2f};"
+         f"converged={d['final_converged']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nets", nargs="+",
@@ -112,12 +133,19 @@ def main() -> None:
                     help="selection only; skip whole-net measurement")
     ap.add_argument("--roofline-only", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--observability-only", action="store_true")
+    ap.add_argument("--skip-observability", action="store_true")
     args = ap.parse_args()
 
+    if args.observability_only:
+        run_observability(args)
+        return
     if not args.roofline_only:
         run_paper_tables(args)
     if not args.skip_roofline:
         run_roofline(args)
+    if not args.skip_observability:
+        run_observability(args)
 
 
 if __name__ == "__main__":

@@ -44,6 +44,8 @@ from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.trace import get_tracer
+
 __all__ = [
     "PBQP",
     "Solution",
@@ -247,10 +249,26 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000,
     sub-problem whose admissible lower bound strictly exceeds it, which is
     optimality preserving: the branch containing an optimum has a lower
     bound <= optimum <= upper_bound and thus survives.
+
+    Emits a ``pbqp.solve`` trace span (repro.obs.trace) carrying the
+    instance size and the B&B work actually done: ``bb`` nodes entered,
+    ``prunes`` sub-problems cut by the bound test.
     """
+    with get_tracer().span("pbqp.solve", nodes=len(pb._costs),
+                           edges=len(pb._edges),
+                           warm=upper_bound is not None) as sp:
+        sol = _solve_impl(pb, exact, bb_budget, upper_bound)
+        sp.set(cost=sol.cost, optimal=sol.optimal,
+               bb=sol.stats.get("BB", 0),
+               prunes=sol.stats.get("PRUNE", 0))
+        return sol
+
+
+def _solve_impl(pb: PBQP, exact: bool, bb_budget: int,
+                upper_bound: Optional[float]) -> Solution:
     g = _Graph(pb)
     g.prune_trivial_edges()
-    stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0}
+    stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0, "PRUNE": 0}
     # backtrack stack: callables applied in reverse to extend assignment
     trail: List[Callable[[Dict[Hashable, int]], None]] = []
     optimal = True
@@ -325,17 +343,29 @@ def solve_warm(pb: PBQP, warm: Optional[Dict[Hashable, int]], *,
 
     An invalid or infeasible warm assignment silently degrades to a cold
     solve — warm starting is a pure acceleration, never a correctness
-    hazard.  ``stats['WARM']`` records whether the bound was usable.
+    hazard.  ``stats['WARM']`` records whether the bound was usable;
+    ``stats['WARM_DIST']`` the seed distance (number of nodes where the
+    final assignment differs from the warm seed — 0 means the seed was
+    already optimal for this instance).  A ``pbqp.solve_warm`` trace
+    span reports both, around the inner ``pbqp.solve`` span.
     """
-    ub: Optional[float] = None
-    if warm is not None and set(warm) == set(pb._costs):
-        if all(0 <= warm[u] < pb.domain(u) for u in warm):
-            cand = pb.evaluate(warm)
-            if np.isfinite(cand):
-                ub = cand
-    sol = solve(pb, exact=exact, bb_budget=bb_budget, upper_bound=ub)
-    sol.stats["WARM"] = int(ub is not None)
-    return sol
+    with get_tracer().span("pbqp.solve_warm",
+                           nodes=len(pb._costs)) as sp:
+        ub: Optional[float] = None
+        if warm is not None and set(warm) == set(pb._costs):
+            if all(0 <= warm[u] < pb.domain(u) for u in warm):
+                cand = pb.evaluate(warm)
+                if np.isfinite(cand):
+                    ub = cand
+        sol = solve(pb, exact=exact, bb_budget=bb_budget, upper_bound=ub)
+        sol.stats["WARM"] = int(ub is not None)
+        sol.stats["WARM_DIST"] = (
+            sum(1 for u, i in sol.assignment.items() if warm[u] != i)
+            if ub is not None else len(sol.assignment))
+        sp.set(warm=sol.stats["WARM"], warm_dist=sol.stats["WARM_DIST"],
+               bb=sol.stats.get("BB", 0),
+               prunes=sol.stats.get("PRUNE", 0))
+        return sol
 
 
 def _r0(g: _Graph, u, trail, stats) -> None:
@@ -457,9 +487,11 @@ def _branch_and_bound(g: _Graph, trail, stats, budget,
         # the optimal branch by a rounding ulp (-> spurious Infeasible).
         if lb >= best_cost or \
                 (ub is not None and lb > ub + 1e-9 * max(1.0, abs(ub))):
+            stats["PRUNE"] += 1
             continue
         sub_trail: List[Callable] = []
-        sub_stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0}
+        sub_stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0,
+                     "PRUNE": 0}
         ok = _solve_rec(sub, sub_trail, sub_stats, budget, ub)
         if not ok:
             return False

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.metrics import default_registry
+from ..obs.trace import get_tracer
 from .graph import Net
 from .layouts import LAYOUT_BY_NAME
 from .primitives import convert_layout
@@ -40,12 +42,14 @@ def mesh_shape_dict(mesh) -> Dict[str, int]:
 
 #: process-wide count of compile_plan() calls — executable construction is
 #: the expensive step the serving LRU exists to amortise, so tests and the
-#: plan-cache benchmark assert on this.
-_COMPILE_COUNT = 0
+#: plan-cache benchmark assert on this.  Backed by the obs registry's
+#: locked Counter: PlanServer.prefetch compiles from an executor, and the
+#: old ``global n; n += 1`` lost increments under that concurrency.
+_COMPILE_COUNTER = default_registry().counter("compile_plan_calls")
 
 
 def compile_count() -> int:
-    return _COMPILE_COUNT
+    return _COMPILE_COUNTER.value
 
 
 @dataclass
@@ -68,6 +72,10 @@ class CompiledNet:
     #: "shard_map" (all-dp fast path) | "gspmd" (per-node constraints)
     #: | "" (no mesh)
     mesh_mode: str = ""
+    #: per-conv-node maker callables (fusion-resolved wire layouts) —
+    #: kept so obs.drift.InstrumentedNet can rebuild the same walk with
+    #: per-node timing.  None only on hand-constructed instances.
+    makers: Optional[Dict[str, Callable]] = None
 
     def __call__(self, x):
         return self.fn(jnp.asarray(x), self.params)
@@ -116,8 +124,7 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     outputs, so a mesh executable is a drop-in for the single-device
     batched one (verified output-identical in tests/test_distributed.py).
     """
-    global _COMPILE_COUNT
-    _COMPILE_COUNT += 1
+    _COMPILE_COUNTER.add()
     if batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
     if mesh is not None and batch < 2:
@@ -180,18 +187,25 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     if mesh is not None:
         fn, mode = _build_mesh_fn(sel, net, makers, mesh, d_mesh,
                                   dp_nodes, jit)
-        return CompiledNet(sel, fn, packed,
+        cnet = CompiledNet(sel, fn, packed,
                            build_s=time.perf_counter() - t0, batch=batch,
                            fused_edges=len(fusions), mesh=mesh,
-                           dp_nodes=dp_nodes, mesh_mode=mode)
-
-    run = _image_walker(sel, net, makers, barrier)
-
-    if batch > 1:
-        run = jax.vmap(run, in_axes=(0, None))
-    fn = jax.jit(run) if jit else run
-    return CompiledNet(sel, fn, packed, build_s=time.perf_counter() - t0,
-                       batch=batch, fused_edges=len(fusions))
+                           dp_nodes=dp_nodes, mesh_mode=mode,
+                           makers=makers)
+    else:
+        run = _image_walker(sel, net, makers, barrier)
+        if batch > 1:
+            run = jax.vmap(run, in_axes=(0, None))
+        fn = jax.jit(run) if jit else run
+        cnet = CompiledNet(sel, fn, packed,
+                           build_s=time.perf_counter() - t0,
+                           batch=batch, fused_edges=len(fusions),
+                           makers=makers)
+    get_tracer().emit("compile", t0, time.perf_counter(),
+                      nodes=len(net.order), batch=batch,
+                      fused_edges=cnet.fused_edges,
+                      mesh_mode=cnet.mesh_mode)
+    return cnet
 
 
 def _image_walker(sel: SelectionResult, net: Net,

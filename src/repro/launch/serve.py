@@ -19,6 +19,13 @@ plans through the cost-model version key (docs/calibration.md).
 gain the device-placement axis and batched invocations run
 data-parallel over an N-device ``data`` mesh (fake CPU devices are
 forced when the host has fewer — docs/distributed.md).
+
+Observability (docs/observability.md): ``--trace PATH`` writes one
+JSON line per span (admit/flush/queue_wait/infer_batch/plan/
+pbqp.solve/compile/execute/crop) for the whole run; ``--metrics-dump``
+prints the plan server's Prometheus text exposition, and phase latency
+percentiles (p50/p95/p99 per phase and batch bucket) print with the
+plan-cache stats either way.
 """
 from __future__ import annotations
 
@@ -45,7 +52,15 @@ def main():
     ap.add_argument("--dp-mesh", type=int, default=0,
                     help="serve the vision tower data-parallel over an "
                          "N-device 'data' mesh (0: single device)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write request-scoped trace spans as JSONL")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the Prometheus text exposition of the "
+                         "plan server's metrics registry at the end")
     args = ap.parse_args()
+    if args.trace:
+        from ..obs.trace import configure
+        tracer = configure(args.trace, enabled=True)
     if args.profile and args.vision_every <= 0:
         ap.error("--profile prices the vision plan path; it needs "
                  "--vision-every > 0 to have any effect")
@@ -127,12 +142,21 @@ def main():
               f" | solve {s['solve_s']*1e3:.0f} ms"
               f" compile {s['compile_s']*1e3:.0f} ms"
               f" execute {s['execute_s']*1e3:.0f} ms")
+        for phase, q in sorted(s.get("phases", {}).items()):
+            print(f"  {phase}: n={q['count']} "
+                  f"p50={q['p50']*1e3:.2f}ms p95={q['p95']*1e3:.2f}ms "
+                  f"p99={q['p99']*1e3:.2f}ms")
+        if args.metrics_dump:
+            print(plan_server.metrics_text(), end="")
         if args.profile:
             cov = cost_model.coverage()
             print(f"calibrated costs: {cov['table_hits']} table hits, "
                   f"{cov['fallback_hits']} analytic fallbacks "
                   f"({cov['table_rate']:.0%} measured)")
         plan_server.close()
+    if args.trace:
+        tracer.flush()
+        print(f"trace spans written to {args.trace}")
 
 
 if __name__ == "__main__":

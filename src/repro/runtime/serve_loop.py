@@ -133,14 +133,18 @@ class ServeLoop:
             return
         # Micro-batch the tick's vision work: enqueue every admitted
         # image, then one flush -> all same-bucket images share ONE
-        # batched tower invocation instead of one call each.
+        # batched tower invocation instead of one call each.  The
+        # admit span parents that flush (and its queue_wait/execute
+        # children) to this admission tick in the trace.
         vision: Dict[int, Any] = {}
         if self.plan_server is not None:
-            for slot, req in admitted:
-                if req.pixels is not None:
-                    vision[slot] = self.plan_server.enqueue(req.pixels)
-            if vision:
-                self.plan_server.flush()
+            from ..obs.trace import get_tracer
+            with get_tracer().span("admit", requests=len(admitted)):
+                for slot, req in admitted:
+                    if req.pixels is not None:
+                        vision[slot] = self.plan_server.enqueue(req.pixels)
+                if vision:
+                    self.plan_server.flush()
         for slot, req in admitted:
             if slot in vision:
                 self._encode_pixels(req, vision[slot].result())

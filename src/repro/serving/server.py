@@ -62,6 +62,7 @@ from ..core.graph import Net
 from ..core.plan import CompiledNet, compile_plan
 from ..core.selection import SelectionResult, select_pbqp
 from ..launch.mesh import mesh_fingerprint, mesh_shape_dict
+from ..obs.trace import get_tracer
 from .bucketing import BucketPolicy, bucket_key, bucket_shape
 from .metrics import ServingCounters
 from .plan_cache import (
@@ -133,8 +134,8 @@ class PlanServer:
                                         thread_name_prefix="planserver")
         #: request-shape -> output-node expected shapes (crop targets)
         self._out_shapes = LRU(512)
-        #: micro-batching admission queue: (image, future) pairs
-        self._queue: List[Tuple[np.ndarray, Future]] = []
+        #: micro-batching admission queue: (image, future, enqueue time)
+        self._queue: List[Tuple[np.ndarray, Future, float]] = []
         self._closed = False
 
     # -----------------------------------------------------------------
@@ -148,36 +149,45 @@ class PlanServer:
             return self._plan_locked(bshape, nb)
 
     def _plan_locked(self, bshape: Shape, nb: int) -> SelectionResult:
-        pkey: PlanKey = (*bshape, nb)
-        sel = self._plans.get(pkey)
-        if sel is not None:
-            self.counters.add(plan_mem_hits=1)
-            return sel
-        net = self.net_builder(bshape).with_batch(nb)
-        key = plan_key(net.fingerprint(), bucket_key(bshape, nb),
-                       self.cost_version)
-        if self._disk is not None:
-            payload = self._disk.get(key)
-            if payload is not None:
-                try:
-                    sel = selection_from_payload(payload, net)
-                except (KeyError, ValueError):
-                    sel = None  # unknown primitive / schema: re-solve
+        bkey = bucket_key(bshape, nb)
+        with get_tracer().span("plan", bucket=bkey) as sp:
+            pkey: PlanKey = (*bshape, nb)
+            sel = self._plans.get(pkey)
             if sel is not None:
-                self.counters.add(plan_disk_hits=1)
-                self._plans[pkey] = sel
+                self.counters.add(plan_mem_hits=1)
+                sp.set(source="mem")
                 return sel
-        self.counters.add(plan_misses=1)
-        warm = self._nearest_plan(pkey)
-        t0 = time.perf_counter()
-        sel = select_pbqp(net, self.cost, exact=self.exact, warm_start=warm,
-                          fuse=self.fuse, mesh_axes=self._mesh_axes)
-        self.counters.add(solves=1, solve_s=time.perf_counter() - t0,
-                          warm_solves=int(sel.solver_stats.get("WARM", 0)))
-        self._plans[pkey] = sel
-        if self._disk is not None:
-            self._disk.put(key, selection_to_payload(sel))
-        return sel
+            net = self.net_builder(bshape).with_batch(nb)
+            key = plan_key(net.fingerprint(), bkey, self.cost_version)
+            if self._disk is not None:
+                payload = self._disk.get(key)
+                if payload is not None:
+                    try:
+                        sel = selection_from_payload(payload, net)
+                    except (KeyError, ValueError):
+                        sel = None  # unknown primitive / schema: re-solve
+                if sel is not None:
+                    self.counters.add(plan_disk_hits=1)
+                    self._plans[pkey] = sel
+                    sp.set(source="disk")
+                    return sel
+            self.counters.add(plan_misses=1)
+            warm = self._nearest_plan(pkey)
+            t0 = time.perf_counter()
+            # select_pbqp opens the nested pbqp.solve/solve_warm spans
+            sel = select_pbqp(net, self.cost, exact=self.exact,
+                              warm_start=warm, fuse=self.fuse,
+                              mesh_axes=self._mesh_axes)
+            self.counters.add(
+                _bucket=bkey, solves=1,
+                solve_s=time.perf_counter() - t0,
+                warm_solves=int(sel.solver_stats.get("WARM", 0)))
+            sp.set(source="solve",
+                   warm_dist=sel.solver_stats.get("WARM_DIST", -1))
+            self._plans[pkey] = sel
+            if self._disk is not None:
+                self._disk.put(key, selection_to_payload(sel))
+            return sel
 
     def _nearest_plan(self, pkey: PlanKey) -> Optional[SelectionResult]:
         """Closest already-solved bucket in log-shape space (warm start).
@@ -236,6 +246,7 @@ class PlanServer:
                 self._compiled.put(pkey, cnet)
                 self._building.pop(pkey, None)
                 self.counters.add(
+                    _bucket=bucket_key(bshape, nb),
                     compiles=1, compile_s=time.perf_counter() - t0,
                     mesh_compiles=int(cnet.mesh is not None),
                     exec_evictions=self._compiled.evictions - ev0)
@@ -301,26 +312,33 @@ class PlanServer:
         x = np.asarray(x_chw, np.float32)
         if x.ndim != 3:
             raise ValueError(f"expected (C, H, W) input, got {x.shape}")
-        cnet = self.compiled_for(x.shape)
-        bshape = bucket_shape(x.shape, self.policy)
-        pads = [(0, b - s) for b, s in zip(bshape, x.shape)]
-        xb = np.pad(x, pads)
-        if cnet.batch > 1:
-            # a policy whose batch bucket for n=1 is > 1 (linear batch
-            # mode, min_n > 1) hands the single request a batched
-            # executable: embed the image as row 0, zero rows pad
-            xb = np.concatenate(
-                [xb[None], np.zeros((cnet.batch - 1, *bshape),
-                                    np.float32)])
-        expected = self._expected_out_shapes(x.shape)
-        t0 = time.perf_counter()
-        out = cnet(xb)
-        out = {nid: self._crop(np.asarray(v)[0] if cnet.batch > 1
-                               else np.asarray(v), expected.get(nid, ()))
-               for nid, v in out.items()}
-        self.counters.add(requests=1,
-                          execute_s=time.perf_counter() - t0)
-        return out
+        tracer = get_tracer()
+        with tracer.span("infer", shape="x".join(map(str, x.shape))):
+            cnet = self.compiled_for(x.shape)
+            bshape = bucket_shape(x.shape, self.policy)
+            bkey = bucket_key(bshape, cnet.batch)
+            pads = [(0, b - s) for b, s in zip(bshape, x.shape)]
+            xb = np.pad(x, pads)
+            if cnet.batch > 1:
+                # a policy whose batch bucket for n=1 is > 1 (linear
+                # batch mode, min_n > 1) hands the single request a
+                # batched executable: embed the image as row 0, zero
+                # rows pad
+                xb = np.concatenate(
+                    [xb[None], np.zeros((cnet.batch - 1, *bshape),
+                                        np.float32)])
+            expected = self._expected_out_shapes(x.shape)
+            t0 = time.perf_counter()
+            with tracer.span("execute", bucket=bkey):
+                out = cnet(xb)
+            with tracer.span("crop"):
+                out = {nid: self._crop(
+                           np.asarray(v)[0] if cnet.batch > 1
+                           else np.asarray(v), expected.get(nid, ()))
+                       for nid, v in out.items()}
+            self.counters.add(_bucket=bkey, requests=1,
+                              execute_s=time.perf_counter() - t0)
+            return out
 
     def infer_batch(self, xs: Sequence[np.ndarray]
                     ) -> List[Dict[str, np.ndarray]]:
@@ -341,6 +359,12 @@ class PlanServer:
                 raise ValueError(f"expected (C, H, W) inputs, got {x.shape}")
         if not imgs:
             return []
+        with get_tracer().span("infer_batch", requests=len(imgs)) as sp:
+            return self._infer_batch_traced(imgs, sp)
+
+    def _infer_batch_traced(self, imgs: List[np.ndarray], sp
+                            ) -> List[Dict[str, np.ndarray]]:
+        tracer = get_tracer()
         groups: "OrderedDict[Shape, List[int]]" = OrderedDict()
         for i, x in enumerate(imgs):
             groups.setdefault(bucket_shape(x.shape, self.policy),
@@ -373,21 +397,26 @@ class PlanServer:
             for row, i in enumerate(chunk):
                 x = imgs[i]
                 xb[row, :x.shape[0], :x.shape[1], :x.shape[2]] = x
+            bkey = bucket_key(bshape, nb)
             t0 = time.perf_counter()
-            out = cnet(xb if nb > 1 else xb[0])
-            out = {nid: np.asarray(v) for nid, v in out.items()}
+            with tracer.span("execute", bucket=bkey,
+                             coalesced=len(chunk)):
+                out = cnet(xb if nb > 1 else xb[0])
+                out = {nid: np.asarray(v) for nid, v in out.items()}
             # coalesced counts per *invocation*: requests that
             # shared this executable call with at least one other
-            self.counters.add(batch_calls=1,
+            self.counters.add(_bucket=bkey, batch_calls=1,
                               coalesced=len(chunk) - 1,
                               execute_s=time.perf_counter() - t0)
-            for row, i in enumerate(chunk):
-                expected = self._expected_out_shapes(imgs[i].shape)
-                results[i] = {
-                    nid: self._crop(v[row] if nb > 1 else v,
-                                    expected.get(nid, ()))
-                    for nid, v in out.items()}
+            with tracer.span("crop"):
+                for row, i in enumerate(chunk):
+                    expected = self._expected_out_shapes(imgs[i].shape)
+                    results[i] = {
+                        nid: self._crop(v[row] if nb > 1 else v,
+                                        expected.get(nid, ()))
+                        for nid, v in out.items()}
         self.counters.add(requests=len(imgs))
+        sp.set(invocations=len(chunks))
         return results  # type: ignore[return-value]
 
     # -----------------------------------------------------------------
@@ -405,7 +434,7 @@ class PlanServer:
                 # after close() no flush will ever run: a silently
                 # queued future would hang its waiter forever
                 raise RuntimeError("PlanServer is closed")
-            self._queue.append((x, fut))
+            self._queue.append((x, fut, time.perf_counter()))
         return fut
 
     def flush(self) -> int:
@@ -419,15 +448,23 @@ class PlanServer:
             pending, self._queue = self._queue, []
         if not pending:
             return 0
-        try:
-            outs = self.infer_batch([x for x, _ in pending])
-        except BaseException as exc:
-            for _, fut in pending:
-                fut.set_exception(exc)
-            raise
-        for (_, fut), out in zip(pending, outs):
-            fut.set_result(out)
-        return len(pending)
+        with get_tracer().span("flush", requests=len(pending)):
+            # queue wait: enqueue() timestamp to the moment the flush
+            # drained it — opened and closed on different call stacks,
+            # so it is emitted from explicit timestamps, parented here
+            t_drain = time.perf_counter()
+            tracer = get_tracer()
+            for _, _, t_enq in pending:
+                tracer.emit("queue_wait", t_enq, t_drain)
+            try:
+                outs = self.infer_batch([x for x, _, _ in pending])
+            except BaseException as exc:
+                for _, fut, _ in pending:
+                    fut.set_exception(exc)
+                raise
+            for (_, fut, _), out in zip(pending, outs):
+                fut.set_result(out)
+            return len(pending)
 
     # -----------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
@@ -436,7 +473,14 @@ class PlanServer:
         d["live_executables"] = len(self._compiled)
         if self._disk is not None:
             d["disk_plans"] = len(self._disk)
+        #: histogram-backed latency percentiles per phase — entries
+        #: like "execute[bucket=8x3x32x32]" split them per batch bucket
+        d["phases"] = self.counters.phase_quantiles()
         return d
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of this server's registry."""
+        return self.counters.registry.prometheus_text()
 
     def close(self) -> None:
         # Drain the admission queue: enqueued-but-unflushed futures
@@ -446,7 +490,7 @@ class PlanServer:
         with self._lock:
             self._closed = True
             pending, self._queue = self._queue, []
-        for _, fut in pending:
+        for _, fut, _ in pending:
             fut.cancel()
         self._pool.shutdown(wait=True)
 

@@ -11,7 +11,8 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 
 
 def test_docs_exist():
-    for name in ("architecture.md", "solver.md", "calibration.md"):
+    for name in ("architecture.md", "solver.md", "calibration.md",
+                 "observability.md"):
         assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
 
 

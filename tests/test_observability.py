@@ -1,0 +1,566 @@
+"""Observability acceptance tests (ISSUE: close the loop).
+
+Pins down the three pillars end to end: the metrics registry is
+exactly-once under a threaded hammer and its percentiles are correct;
+trace spans nest correctly through the serving stack (including the
+``infer_batch`` coalescing path and the cross-stack ``queue_wait``
+region); and the drift detector flags a deliberately staled profile,
+recalibrates ONLY the flagged entries, rotates every plan-cache key
+through the content hash, and re-converges.
+"""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.costs import AnalyticCostModel
+from repro.core.plan import compile_plan
+from repro.core.selection import select_pbqp
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import NULL_SPAN, Tracer, configure, get_tracer
+from repro.serving import BucketPolicy, PlanServer, conv_tower
+from repro.serving.metrics import COUNT_FIELDS, TIME_FIELDS, ServingCounters
+from repro.serving.towers import conv_stack
+
+CM = AnalyticCostModel()
+POLICY = BucketPolicy(min_hw=8, max_hw=64)
+
+#: bounded primitive pool for the recalibration-loop tests — see
+#: repro.obs.drift.RestrictedCostModel
+ALLOWED = ("direct_lax_chw_chw_oihw", "direct_lax_hwc_hwc_hwio",
+           "wino2d_f2x3_chw")
+
+
+def _server(**kw):
+    kw.setdefault("policy", POLICY)
+    kw.setdefault("lru_capacity", 4)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=8), CM, **kw)
+
+
+@pytest.fixture
+def sink():
+    """Route the global tracer into a list for the test, then disable."""
+    records = []
+    configure(records, enabled=True)
+    try:
+        yield records
+    finally:
+        configure(enabled=False)
+
+
+def _by_name(records, name):
+    return [r for r in records if r["name"] == name]
+
+
+# ---------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------
+class TestMetricsRegistry:
+    def test_counter_hammer_exact(self):
+        reg = MetricsRegistry()
+        c = reg.counter("hits")
+        n_threads, per_thread = 8, 5000
+
+        def worker():
+            for _ in range(per_thread):
+                c.add()
+
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert c.value == n_threads * per_thread
+        assert isinstance(c.value, int)
+
+    def test_histogram_hammer_exact(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat")
+        n_threads, per_thread = 8, 2000
+
+        def worker(i):
+            for j in range(per_thread):
+                h.record(1e-6 * (i * per_thread + j + 1))
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert h.count == n_threads * per_thread
+        assert sum(h.counts) == h.count
+
+    def test_percentiles(self):
+        h = Histogram()
+        for ms in range(1, 101):          # 1..100 ms, uniform
+            h.record(ms * 1e-3)
+        assert h.percentile(0) == pytest.approx(1e-3)
+        assert h.percentile(100) == pytest.approx(0.1)
+        # geometric buckets estimate within a factor of the bucket width
+        assert h.percentile(50) == pytest.approx(0.05, rel=0.5)
+        assert h.percentile(95) >= h.percentile(50)
+        q = h.quantiles()
+        assert set(q) == {"p50", "p95", "p99"}
+
+    def test_percentile_single_sample_is_exact(self):
+        h = Histogram()
+        h.record(3.3e-3)
+        for p in (0, 50, 99, 100):
+            assert h.percentile(p) == pytest.approx(3.3e-3)
+
+    def test_empty_histogram_nan(self):
+        h = Histogram()
+        assert math.isnan(h.percentile(50))
+        assert h.snapshot()["count"] == 0
+
+    def test_labels_key_distinct_metrics(self):
+        reg = MetricsRegistry()
+        reg.counter("x", phase="a").add(1)
+        reg.counter("x", phase="b").add(2)
+        snap = reg.snapshot()
+        assert snap['x{phase="a"}'] == 1
+        assert snap['x{phase="b"}'] == 2
+        # same labels -> same underlying metric
+        assert reg.counter("x", phase="a") is reg.counter("x", phase="a")
+
+    def test_prometheus_text(self):
+        reg = MetricsRegistry()
+        reg.counter("requests").add(3)
+        reg.histogram("lat_seconds", phase="execute").record(2e-3)
+        text = reg.prometheus_text()
+        assert "# TYPE requests counter" in text
+        assert "requests 3" in text
+        assert "# TYPE lat_seconds summary" in text
+        assert 'lat_seconds{phase="execute",quantile="0.50"}' in text
+        assert 'lat_seconds_count{phase="execute"} 1' in text
+        assert text.endswith("\n")
+
+
+# ---------------------------------------------------------------------
+# serving counters on the registry
+# ---------------------------------------------------------------------
+class TestServingCounters:
+    def test_snapshot_compat(self):
+        c = ServingCounters()
+        c.add(requests=2, solves=1, solve_s=0.5, plan_mem_hits=1,
+              plan_misses=1)
+        s = c.snapshot()
+        for f in COUNT_FIELDS:
+            assert isinstance(s[f], int), f
+        for f in TIME_FIELDS:
+            assert isinstance(s[f], float), f
+        assert s["requests"] == 2 and s["solves"] == 1
+        assert s["solve_s"] == pytest.approx(0.5)
+        assert s["plan_hits"] == 1 and s["plan_hit_rate"] == 0.5
+        assert c.requests == 2  # attribute reads still work
+
+    def test_unknown_field_raises(self):
+        with pytest.raises(AttributeError):
+            ServingCounters().add(bogus=1)
+        with pytest.raises(AttributeError):
+            ServingCounters().bogus
+
+    def test_threaded_hammer_no_lost_increments(self):
+        c = ServingCounters()
+        n_threads, per_thread = 8, 2000
+
+        def worker():
+            for _ in range(per_thread):
+                c.add(requests=1, exec_hits=1, execute_s=1e-5)
+
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        total = n_threads * per_thread
+        s = c.snapshot()
+        assert s["requests"] == total
+        assert s["exec_hits"] == total
+        assert s["execute_s"] == pytest.approx(total * 1e-5)
+        assert c.phase_quantiles()["execute"]["count"] == total
+
+    def test_phase_quantiles_bucket_split(self):
+        c = ServingCounters()
+        c.add(execute_s=1e-3, _bucket="8x8x1")
+        c.add(execute_s=2e-3, _bucket="16x16x1")
+        q = c.phase_quantiles()
+        assert q["execute"]["count"] == 2
+        assert q["execute[bucket=8x8x1]"]["count"] == 1
+        assert q["execute[bucket=16x16x1]"]["count"] == 1
+        for v in q.values():
+            assert {"count", "p50", "p95", "p99"} <= set(v)
+
+
+# ---------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------
+class TestTracer:
+    def test_disabled_is_null(self):
+        tr = Tracer()  # default: disabled, no sink
+        with tr.span("x") as sp:
+            assert sp is NULL_SPAN
+            sp.set(ignored=1)
+        tr.emit("y", 0.0, 1.0)
+
+    def test_nesting_and_attrs(self):
+        records = []
+        tr = Tracer(records, enabled=True)
+        with tr.span("outer", a=1) as outer:
+            with tr.span("inner") as inner:
+                inner.set(b=2)
+            tr.emit("event", 1.0, 1.5, c=3)
+        assert [r["name"] for r in records] == ["inner", "event", "outer"]
+        inner_r, event_r, outer_r = records
+        assert outer_r["parent"] is None and outer_r["a"] == 1
+        assert inner_r["parent"] == outer_r["span"] and inner_r["b"] == 2
+        assert event_r["parent"] == outer_r["span"]
+        assert event_r["dur_s"] == pytest.approx(0.5)
+        assert inner_r["trace"] == event_r["trace"] == outer_r["trace"]
+
+    def test_sibling_spans_share_trace(self):
+        records = []
+        tr = Tracer(records, enabled=True)
+        with tr.span("root"):
+            with tr.span("a"):
+                pass
+            with tr.span("b"):
+                pass
+        a, b, root = records
+        assert a["parent"] == b["parent"] == root["span"]
+
+    def test_jsonl_file_sink(self, tmp_path):
+        path = tmp_path / "trace.jsonl"
+        tr = Tracer(path, enabled=True)
+        with tr.span("x", k="v"):
+            pass
+        tr.flush()
+        recs = [json.loads(line)
+                for line in path.read_text().splitlines()]
+        assert recs[0]["name"] == "x" and recs[0]["k"] == "v"
+        assert {"trace", "span", "parent", "t0", "dur_s"} <= set(recs[0])
+
+
+# ---------------------------------------------------------------------
+# spans through the serving stack
+# ---------------------------------------------------------------------
+class TestServingSpans:
+    def test_infer_cold_span_tree(self, sink):
+        srv = _server()
+        try:
+            srv.infer(np.zeros((3, 12, 12), np.float32))
+        finally:
+            srv.close()
+        names = {r["name"] for r in sink}
+        assert {"infer", "plan", "pbqp.solve", "compile", "execute",
+                "crop"} <= names
+        infer = _by_name(sink, "infer")[0]
+        plan = _by_name(sink, "plan")[0]
+        solve = _by_name(sink, "pbqp.solve")[0]
+        assert plan["parent"] == infer["span"]
+        assert plan["source"] == "solve"
+        assert solve["parent"] == plan["span"]
+        assert {"nodes", "edges", "cost", "bb", "prunes"} <= set(solve)
+        for name in ("execute", "crop", "compile"):
+            r = _by_name(sink, name)[0]
+            assert r["parent"] == infer["span"]
+            assert r["trace"] == infer["trace"]
+
+    def test_infer_warm_plan_source_mem(self, sink):
+        srv = _server()
+        try:
+            x = np.zeros((3, 12, 12), np.float32)
+            srv.infer(x)
+            sink.clear()
+            srv.infer(x)
+        finally:
+            srv.close()
+        # hot bucket: no plan lookup at all (executable LRU hit), no
+        # solve, no compile — just the request spans
+        names = [r["name"] for r in sink]
+        assert names.count("infer") == 1
+        assert "pbqp.solve" not in names and "compile" not in names
+        # evicting the executable but keeping the plan shows the
+        # plan-tier memory hit
+        srv2 = _server()
+        try:
+            srv2.plan_for(x.shape)
+            sink.clear()
+            srv2.infer(x)
+            plan = _by_name(sink, "plan")[0]
+            assert plan["source"] == "mem"
+        finally:
+            srv2.close()
+
+    def test_coalesced_flush_span_tree(self, sink):
+        srv = _server()
+        try:
+            imgs = [np.zeros((3, 12, 12), np.float32) for _ in range(3)]
+            futs = [srv.enqueue(x) for x in imgs]
+            served = srv.flush()
+            assert served == 3
+            for f in futs:
+                assert f.result() is not None
+        finally:
+            srv.close()
+        flush = _by_name(sink, "flush")[0]
+        batch = _by_name(sink, "infer_batch")[0]
+        waits = _by_name(sink, "queue_wait")
+        execs = _by_name(sink, "execute")
+        assert flush["requests"] == 3
+        assert batch["parent"] == flush["span"]
+        assert batch["requests"] == 3
+        # 3 same-bucket images coalesce into ONE executable invocation
+        assert batch["invocations"] == 1
+        assert len(execs) == 1 and execs[0]["coalesced"] == 3
+        assert execs[0]["parent"] == batch["span"]
+        # queue_wait: opened in enqueue(), closed (and parented) in flush
+        assert len(waits) == 3
+        for w in waits:
+            assert w["parent"] == flush["span"]
+            assert w["trace"] == flush["trace"]
+            assert w["dur_s"] >= 0.0
+
+    def test_stats_phases_percentiles(self, sink):
+        srv = _server()
+        try:
+            srv.infer(np.zeros((3, 12, 12), np.float32))
+            s = srv.stats()
+        finally:
+            srv.close()
+        phases = s["phases"]
+        assert {"solve", "compile", "execute"} <= set(phases)
+        for q in phases.values():
+            assert q["count"] >= 1
+            assert {"p50", "p95", "p99"} <= set(q)
+        # per-bucket split for the executed bucket
+        assert any(k.startswith("execute[bucket=") for k in phases)
+        assert "serving_latency_seconds" in srv.metrics_text()
+
+
+# ---------------------------------------------------------------------
+# compile counter (satellite: thread-safe, registry-backed)
+# ---------------------------------------------------------------------
+class TestCompileCount:
+    def test_concurrent_compiles_counted_exactly(self):
+        net = conv_stack((3, 8, 8), depth=1, width=4)
+        sel = select_pbqp(net, CM)
+        params = net.init_params(0)
+        before = plan_mod.compile_count()
+        n_threads = 6
+
+        def worker():
+            compile_plan(sel, params, jit=False)
+
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert plan_mod.compile_count() == before + n_threads
+
+
+# ---------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------
+class TestInstrumentedNet:
+    def test_outputs_identical_and_timings_complete(self):
+        from repro.obs.drift import InstrumentedNet
+
+        net = conv_stack((3, 12, 12), depth=2, width=8)
+        sel = select_pbqp(net, CM)
+        cnet = compile_plan(sel, net.init_params(0))
+        inst = InstrumentedNet(cnet)
+        x = np.random.default_rng(0).normal(
+            size=(3, 12, 12)).astype(np.float32)
+        ref = {k: np.asarray(v) for k, v in cnet(x).items()}
+        outs, timings = inst(x)
+        assert set(outs) == set(ref)
+        for k in ref:
+            np.testing.assert_allclose(outs[k], ref[k],
+                                       rtol=1e-4, atol=1e-5)
+        conv_ids = {n.id for n in net.conv_nodes()}
+        assert conv_ids <= set(timings["node"])
+        assert all(t > 0 for t in timings["node"].values())
+        assert set(timings["edge"]) <= set(sel.conversions)
+        assert timings["unmodeled_s"] >= 0.0
+
+
+class TestDriftDetector:
+    def _plan(self):
+        net = conv_stack((3, 12, 12), depth=2, width=8)
+        sel = select_pbqp(net, CM)
+        return net, sel
+
+    def _synthetic(self, pred, scale):
+        return {"node": {nid: s * scale for nid, s in
+                         pred["node"].items()},
+                "edge": {}, "unmodeled_s": 0.0}
+
+    def test_predictions_itemize_objective(self):
+        from repro.obs.drift import plan_predictions
+
+        net, sel = self._plan()
+        pred = plan_predictions(sel, CM)
+        total = sum(pred["node"].values()) + sum(pred["edge"].values())
+        assert total == pytest.approx(sel.predicted_cost, rel=1e-6)
+
+    def test_flags_only_drifted_entries(self):
+        from repro.obs.drift import DriftDetector, plan_predictions
+
+        net, sel = self._plan()
+        pred = plan_predictions(sel, CM)
+        det = DriftDetector(CM, threshold=2.0)
+        det.observe(sel, self._synthetic(pred, 1.0))
+        assert det.flagged() == []
+        assert det.plan_within_threshold()
+
+        det4 = DriftDetector(CM, threshold=2.0)
+        det4.observe(sel, self._synthetic(pred, 4.0))
+        flagged = {e.nid for e in det4.flagged()}
+        assert flagged == {n.id for n in net.conv_nodes()}
+        assert det4.plan_ratio() == pytest.approx(4.0, rel=1e-6)
+        assert not det4.plan_within_threshold()
+        rows = det4.report()
+        assert rows[0]["flagged"] and rows[0]["ratio"] == \
+            pytest.approx(4.0, rel=1e-6)
+        rec = det4.recommendation()
+        assert rec["recalibrate"] and set(rec["flagged"]) == flagged
+
+    def test_ewma_converges_to_new_level(self):
+        from repro.obs.drift import DriftDetector, plan_predictions
+
+        net, sel = self._plan()
+        pred = plan_predictions(sel, CM)
+        det = DriftDetector(CM, alpha=0.5, threshold=2.0)
+        det.observe(sel, self._synthetic(pred, 1.0))
+        for _ in range(12):
+            det.observe(sel, self._synthetic(pred, 4.0))
+        assert all(e.ratio() == pytest.approx(4.0, rel=1e-2)
+                   for e in det.entries.values())
+
+    def test_recalibrate_writes_only_flagged(self):
+        from repro.calibrate.profile import HardwareProfile
+        from repro.obs.drift import DriftDetector, plan_predictions
+
+        net, sel = self._plan()
+        pred = plan_predictions(sel, CM)
+        det = DriftDetector(CM, threshold=2.0)
+        det.observe(sel, self._synthetic(pred, 4.0))
+        profile = HardwareProfile.new()
+        h0 = profile.content_hash()
+        updated = det.recalibrate(profile)
+        assert updated == [e.profile_key for e in det.flagged()
+                           if e.profile_key]
+        assert len(updated) == len({n.id for n in net.conv_nodes()})
+        # the invalidation chain: new entries -> new content hash
+        assert profile.content_hash() != h0
+        for e in det.flagged():
+            assert profile.get(e.profile_key) == pytest.approx(
+                e.ewma_observed_s / max(e.per_image_div, 1))
+        # nothing flagged -> nothing written, hash stable
+        det_ok = DriftDetector(CM, threshold=2.0)
+        det_ok.observe(sel, self._synthetic(pred, 1.0))
+        h1 = profile.content_hash()
+        assert det_ok.recalibrate(profile) == []
+        assert profile.content_hash() == h1
+
+    def test_rejects_mesh_plans(self):
+        from repro.obs.drift import plan_predictions
+
+        net, sel = self._plan()
+        # Choice is a frozen dataclass; forge a dp placement in place
+        object.__setattr__(next(iter(sel.choices.values())),
+                           "placement", "dp")
+        with pytest.raises(ValueError, match="mesh-less"):
+            plan_predictions(sel, CM)
+
+
+class TestDriftEndToEnd:
+    """The full workflow: calibrate -> stale -> flag -> recalibrate."""
+
+    def test_recalibration_loop_closes_the_loop(self):
+        from repro.calibrate.model import CalibratedCostModel
+        from repro.calibrate.profile import HardwareProfile
+        from repro.obs.drift import (
+            DriftDetector, InstrumentedNet, RestrictedCostModel,
+            recalibration_loop,
+        )
+        from repro.serving.bucketing import bucket_key
+        from repro.serving.plan_cache import plan_key
+
+        shape = (3, 16, 16)
+        net = conv_stack(shape, depth=2, width=8)
+        params = net.init_params(0)
+        x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+        threshold, runs = 2.0, 2
+
+        # calibrate from instrumented traffic to a fixed point
+        profile = HardwareProfile.new()
+        base = recalibration_loop(net, params, x, profile,
+                                  allowed=ALLOWED, threshold=threshold,
+                                  runs=runs)
+        assert base["converged"]
+        assert base["detector"].plan_within_threshold()
+
+        # stale the profile: converged node entries 8x too fast — the
+        # underpriced entries *attract* the next solve
+        hash_before = profile.content_hash()
+        perturbed = {}
+        for e in base["detector"].entries.values():
+            if e.kind != "node":
+                continue
+            old = profile.get(e.profile_key)
+            profile.put(e.profile_key,
+                        (old if old is not None else e.predicted_s) / 8.0)
+            perturbed[e.nid] = e.profile_key
+        assert profile.content_hash() != hash_before
+
+        cost = RestrictedCostModel(CalibratedCostModel(profile), ALLOWED)
+        sel = select_pbqp(net, cost)
+        inst = InstrumentedNet(compile_plan(sel, params))
+        det = DriftDetector(cost, threshold=threshold)
+        for _ in range(runs):
+            _, tm = inst(x)
+            det.observe(sel, tm)
+        flagged = det.flagged()
+        # every perturbed node is flagged...
+        assert set(perturbed) <= {e.nid for e in flagged}
+        assert not det.plan_within_threshold()
+
+        # ...and recalibration touches ONLY flagged entries
+        hash_stale = profile.content_hash()
+        updated = det.recalibrate(profile)
+        assert set(updated) <= {e.profile_key for e in flagged}
+        assert set(perturbed.values()) <= set(updated)
+
+        # content hash rotation invalidates every cached plan key
+        bkey = bucket_key(shape, 1)
+        v_stale = CalibratedCostModel.__name__ + hash_stale
+        v_fresh = CalibratedCostModel.__name__ + profile.content_hash()
+        assert plan_key(net.fingerprint(), bkey, v_stale) != \
+            plan_key(net.fingerprint(), bkey, v_fresh)
+
+        # re-converge: the re-solved plan predicts within threshold
+        post = recalibration_loop(net, params, x, profile,
+                                  allowed=ALLOWED, threshold=threshold,
+                                  runs=runs, max_rounds=4)
+        assert post["converged"]
+        assert post["detector"].plan_within_threshold()
+
+    def test_calibrated_model_version_tracks_profile(self):
+        from repro.calibrate.model import CalibratedCostModel
+        from repro.calibrate.profile import HardwareProfile
+        from repro.obs.drift import RestrictedCostModel
+
+        profile = HardwareProfile.new()
+        cm = CalibratedCostModel(profile)
+        v0 = cm.version()
+        profile.put("prim::direct_lax_chw_chw_oihw::whatever", 1e-3)
+        assert CalibratedCostModel(profile).version() != v0
+        r = RestrictedCostModel(CalibratedCostModel(profile), ALLOWED)
+        assert "+allow=" in r.version()

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Render the per-node predicted-vs-observed drift table for a tower.
+
+Builds a conv tower, prices it (measured ``--profile`` with analytic
+fallback, or pure analytic), solves the PBQP selection, runs the
+instrumented executable (:class:`repro.obs.drift.InstrumentedNet`) and
+prints one row per modeled term — node kernels and edge transforms —
+with predicted ms, observed EWMA ms, the observed/predicted ratio and
+the EWMA drift score, flagging entries outside the threshold:
+
+  python tools/obs_report.py --shape 3x16x16 --depth 3 --runs 4 \
+      --profile profile.json
+
+``--recalibrate`` writes the flagged observations back into the
+profile (only those — see docs/observability.md#recalibration) and
+saves it, which rotates the profile's content hash and invalidates
+every cached plan priced by the stale entries.
+
+``--trace summary``: instead of measuring, summarize a span JSONL file
+written by ``repro.launch.serve --trace`` (count/total/p50 per span
+name):
+
+  python tools/obs_report.py --trace-file trace.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+for p in (str(ROOT), str(ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def _shape(s: str):
+    c, h, w = (int(v) for v in s.lower().split("x"))
+    return (c, h, w)
+
+
+def drift_table(args) -> int:
+    import numpy as np
+
+    from repro.calibrate.model import CalibratedCostModel
+    from repro.calibrate.profile import HardwareProfile
+    from repro.core.plan import compile_plan
+    from repro.core.selection import select_pbqp
+    from repro.obs.drift import DriftDetector, InstrumentedNet
+    from repro.serving.towers import conv_stack
+
+    if args.profile and pathlib.Path(args.profile).exists():
+        profile = HardwareProfile.load(args.profile)
+    else:
+        profile = HardwareProfile.new()
+    cost = CalibratedCostModel(profile, check_device=not args.no_check)
+    net = conv_stack(args.shape, depth=args.depth, width=args.width,
+                     k=args.k)
+    sel = select_pbqp(net, cost)
+    cnet = compile_plan(sel, net.init_params(args.seed))
+    inst = InstrumentedNet(cnet)
+    det = DriftDetector(cost, threshold=args.threshold)
+    x = np.random.default_rng(args.seed).normal(
+        size=args.shape).astype(np.float32)
+    for _ in range(args.runs):
+        _, timings = inst(x)
+        det.observe(sel, timings)
+
+    rows = det.report()
+    hdr = (f"{'node':<14} {'primitive':<26} {'layout':<12} "
+           f"{'pred ms':>9} {'obs ms':>9} {'ratio':>7} {'drift':>7}  flag")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['node']:<14} {r['primitive']:<26} {r['layout']:<12} "
+              f"{r['predicted_ms']:>9.4f} {r['observed_ms']:>9.4f} "
+              f"{r['ratio']:>7.2f} {r['drift']:>7.3f}  "
+              f"{'DRIFT' if r['flagged'] else 'ok'}")
+    rec = det.recommendation()
+    print(f"\nplan: observed/predicted = {rec['plan_ratio']:.2f} over "
+          f"{rec['runs']} runs "
+          f"({'within' if rec['plan_within_threshold'] else 'OUTSIDE'} "
+          f"threshold {args.threshold})")
+    if rec["recalibrate"]:
+        print(f"recommend recalibration of: {', '.join(rec['flagged'])}")
+        if args.recalibrate and args.profile:
+            keys = det.recalibrate(profile)
+            profile.save(args.profile)
+            print(f"recalibrated {len(keys)} entries -> {args.profile} "
+                  f"(content hash now {profile.content_hash()})")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(
+            {"rows": rows, "recommendation": rec}, indent=2))
+        print(f"report written to {args.json}")
+    return 1 if (rec["recalibrate"] and args.strict) else 0
+
+
+def trace_summary(args) -> int:
+    spans = {}
+    with open(args.trace_file) as fh:
+        for line in fh:
+            rec = json.loads(line)
+            spans.setdefault(rec["name"], []).append(rec["dur_s"])
+    print(f"{'span':<16} {'count':>7} {'total ms':>10} {'p50 ms':>9} "
+          f"{'max ms':>9}")
+    for name, durs in sorted(spans.items(),
+                             key=lambda kv: -sum(kv[1])):
+        durs.sort()
+        print(f"{name:<16} {len(durs):>7} {sum(durs)*1e3:>10.2f} "
+              f"{durs[len(durs) // 2]*1e3:>9.3f} {durs[-1]*1e3:>9.3f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="predicted-vs-observed drift table / trace summary")
+    ap.add_argument("--shape", type=_shape, default=(3, 16, 16),
+                    help="input CxHxW (default 3x16x16)")
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--runs", type=int, default=4,
+                    help="instrumented passes folded into the EWMA")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="flag ratio (entries outside [1/t, t] drift)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", default=None,
+                    help="HardwareProfile JSON pricing the plan")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the profile device fingerprint check")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="write flagged observations back to --profile")
+    ap.add_argument("--json", default=None,
+                    help="also write the report as JSON")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when recalibration is recommended")
+    ap.add_argument("--trace-file", default=None,
+                    help="summarize a span JSONL instead of measuring")
+    args = ap.parse_args(argv)
+    if args.trace_file:
+        return trace_summary(args)
+    return drift_table(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
