@@ -1,0 +1,232 @@
+"""Open-loop Poisson load benchmark: continuous batching vs tick-flush.
+
+Replays ONE arrival trace — exponential interarrivals at a configured
+rate over a mixed scenario set (two spatial buckets) — against two
+admission disciplines over identical, pre-warmed :class:`~repro.serving.
+server.PlanServer` instances:
+
+* **tick**  — the barrier-flush baseline of PR 3: producers
+  ``enqueue()``, a flusher thread calls ``flush()`` every ``tick_ms``.
+  Batch size is whatever arrived in one tick, and a request admitted
+  right after a flush waits a whole tick before anything launches.
+* **continuous** — the :class:`~repro.serving.scheduler.
+  ContinuousScheduler`: requests carry the SLO as a deadline, bucket
+  groups launch on the full/deadline/window triggers, and the elastic
+  controller resizes the worker pool under backlog.
+
+Arrivals are *open-loop* (sender sleeps to the trace's timestamps, never
+waits for completions), so both disciplines face the same offered load
+regardless of how fast they serve it — the difference shows up in the
+latency distribution, not the arrival process.  Per-request latency is
+completion minus *arrival* (queueing included), measured identically in
+both modes via future done-callbacks.
+
+Emits p50/p95/p99 latency, goodput (fraction of requests completing
+inside the SLO) and throughput per mode to
+``benchmarks/results/load.json``; the headline claim —
+``continuous_beats_tick_p99`` — is what CI's load-smoke job gates on,
+alongside a goodput floor.
+
+  PYTHONPATH=src python -m benchmarks.bench_load
+  PYTHONPATH=src python -m benchmarks.bench_load \\
+      --arrival-rate 50 --requests 200 --slo-ms 250
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: request mix: two spatial buckets under the bench policy (16 and 32)
+SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (3, 14, 14), (3, 16, 16), (3, 24, 24), (3, 30, 30))
+
+
+def make_server():
+    from repro.core.costs import AnalyticCostModel
+    from repro.serving import BucketPolicy, PlanServer, conv_tower
+
+    policy = BucketPolicy(min_hw=8, max_hw=32, max_n=4)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=4),
+                      AnalyticCostModel(), policy=policy,
+                      lru_capacity=16)
+
+
+def gen_trace(rate: float, n: int, seed: int
+              ) -> List[Tuple[float, np.ndarray]]:
+    """(arrival_s, image) pairs — the SAME trace replays in both modes,
+    so offered load is equal by construction."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    trace = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        shape = SHAPES[int(rng.integers(len(SHAPES)))]
+        trace.append((t, rng.normal(size=shape).astype(np.float32)))
+    return trace
+
+
+def _prewarm(srv, policy) -> None:
+    """Compile every (bucket, batch-bucket) the trace can hit, so cold
+    XLA compiles (seconds) never pollute millisecond-scale latency."""
+    from repro.serving import bucket_shape
+    buckets = {bucket_shape(s, policy) for s in SHAPES}
+    batches = [policy.bucket_n(n) for n in range(1, policy.max_n + 1)]
+    futs = [srv.prefetch(b, n=nb) for b in buckets for nb in set(batches)]
+    for f in futs:
+        f.result()
+
+
+def _replay(trace, submit) -> Tuple[List[float], threading.Event]:
+    """Open-loop sender: submit each request at its trace timestamp;
+    record completion latency (done - arrival) via callbacks."""
+    lat: List[Optional[float]] = [None] * len(trace)
+    done = threading.Event()
+    remaining = [len(trace)]
+    lock = threading.Lock()
+    t0 = time.perf_counter()
+
+    def finish(i: int, t_arr: float):
+        def cb(_fut):
+            lat[i] = time.perf_counter() - t_arr
+            with lock:
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    done.set()
+        return cb
+
+    for i, (at, x) in enumerate(trace):
+        now = time.perf_counter() - t0
+        if at > now:
+            time.sleep(at - now)
+        t_arr = time.perf_counter()
+        submit(x).add_done_callback(finish(i, t_arr))
+    return lat, done  # type: ignore[return-value]
+
+
+def _summary(lat: List[float], slo_s: float, wall_s: float) -> Dict:
+    a = np.asarray(lat, np.float64)
+    return {
+        "p50_ms": float(np.percentile(a, 50)) * 1e3,
+        "p95_ms": float(np.percentile(a, 95)) * 1e3,
+        "p99_ms": float(np.percentile(a, 99)) * 1e3,
+        "mean_ms": float(a.mean()) * 1e3,
+        "goodput": float((a <= slo_s).mean()),
+        "throughput_rps": len(lat) / wall_s,
+        "wall_s": wall_s,
+    }
+
+
+def run_tick(trace, slo_s: float, tick_s: float) -> Dict:
+    """Barrier-flush baseline: enqueue + a fixed-cadence flusher."""
+    srv = make_server()
+    _prewarm(srv, srv.policy)
+    stop = threading.Event()
+
+    def flusher():
+        while not stop.is_set():
+            time.sleep(tick_s)
+            srv.flush()
+        srv.flush()  # drain the tail
+
+    th = threading.Thread(target=flusher, daemon=True)
+    th.start()
+    t0 = time.perf_counter()
+    lat, done = _replay(trace, srv.enqueue)
+    done.wait(timeout=120)
+    wall = time.perf_counter() - t0
+    stop.set()
+    th.join(timeout=10)
+    out = _summary(lat, slo_s, wall)
+    s = srv.stats()
+    out["batch_calls"] = s["batch_calls"]
+    out["coalesced"] = s["coalesced"]
+    srv.close()
+    return out
+
+
+def run_continuous(trace, slo_s: float, window_s: float) -> Dict:
+    """Continuous batching with the SLO as a per-request deadline."""
+    from repro.runtime.elastic import ElasticController
+    from repro.serving import ContinuousScheduler
+
+    srv = make_server()
+    _prewarm(srv, srv.policy)
+    sched = ContinuousScheduler(
+        srv, batch_window_s=window_s, slo_s=slo_s,
+        elastic=ElasticController(min_workers=1, max_workers=4))
+    t0 = time.perf_counter()
+    lat, done = _replay(trace, sched.submit)
+    done.wait(timeout=120)
+    wall = time.perf_counter() - t0
+    out = _summary(lat, slo_s, wall)
+    s = sched.stats()
+    for k in ("sched_batches", "sched_full_launches",
+              "sched_deadline_launches", "sched_window_launches",
+              "worker_resizes", "coalesced"):
+        out[k] = s[k]
+    out["goodput_counters"] = s["goodput"]
+    sched.close()
+    srv.close()
+    return out
+
+
+def bench_load(arrival_rate: float, requests: int, slo_ms: float,
+               seed: int, tick_ms: float, window_ms: float) -> Dict:
+    trace = gen_trace(arrival_rate, requests, seed)
+    slo_s = slo_ms / 1e3
+    tick = run_tick(trace, slo_s, tick_ms / 1e3)
+    cont = run_continuous(trace, slo_s, window_ms / 1e3)
+    return {
+        "benchmark": "load",
+        "arrival_rate": arrival_rate,
+        "requests": requests,
+        "slo_ms": slo_ms,
+        "tick_ms": tick_ms,
+        "window_ms": window_ms,
+        "seed": seed,
+        "tick": tick,
+        "continuous": cont,
+        "continuous_beats_tick_p99": cont["p99_ms"] < tick["p99_ms"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arrival-rate", type=float, default=40.0,
+                    help="offered load, requests/s (Poisson)")
+    ap.add_argument("--requests", type=int, default=150)
+    ap.add_argument("--slo-ms", type=float, default=250.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tick-ms", type=float, default=50.0,
+                    help="baseline flush cadence")
+    ap.add_argument("--window-ms", type=float, default=5.0,
+                    help="continuous scheduler batching window")
+    ap.add_argument("--out", default=None,
+                    help="results path (default benchmarks/results/"
+                         "load.json)")
+    args = ap.parse_args()
+    rows = bench_load(args.arrival_rate, args.requests, args.slo_ms,
+                      args.seed, args.tick_ms, args.window_ms)
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).parent / "results" / "load.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    for mode in ("tick", "continuous"):
+        r = rows[mode]
+        print(f"{mode:>10}: p50={r['p50_ms']:.1f}ms "
+              f"p95={r['p95_ms']:.1f}ms p99={r['p99_ms']:.1f}ms "
+              f"goodput={r['goodput']:.2%} "
+              f"({r['throughput_rps']:.1f} req/s)")
+    print(f"continuous beats tick on p99: "
+          f"{rows['continuous_beats_tick_p99']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,13 @@ of the analytic roofline; uncovered buckets fall back analytically, and
 a recalibrated profile automatically invalidates previously persisted
 plans through the cost-model version key (docs/calibration.md).
 
+``--slo-ms`` attaches a deadline to every vision request: the
+continuous-batching scheduler (docs/serving.md) launches partial
+batches early when slack runs out, and goodput (the deadline-met
+fraction) prints with the scheduler stats.  ``--arrival-rate`` replays
+the request set as an open-loop Poisson arrival process instead of
+queueing everything up front.
+
 ``--dp-mesh N`` serves the vision tower mesh-sharded: bucket solves
 gain the device-placement axis and batched invocations run
 data-parallel over an N-device ``data`` mesh (fake CPU devices are
@@ -49,6 +56,14 @@ def main():
                     help="measured HardwareProfile JSON driving PBQP "
                          "selection (see repro.launch.calibrate)")
     ap.add_argument("--image-tokens", type=int, default=4)
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="vision SLO in ms: image requests carry a "
+                         "deadline and the continuous scheduler "
+                         "launches partial batches before it lapses "
+                         "(0: no deadline); goodput prints at the end")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0: all requests queued up front)")
     ap.add_argument("--dp-mesh", type=int, default=0,
                     help="serve the vision tower data-parallel over an "
                          "N-device 'data' mesh (0: single device)")
@@ -106,20 +121,26 @@ def main():
 
     loop = ServeLoop(cfg, params, max_batch=args.max_batch,
                      max_seq=args.max_seq, plan_server=plan_server,
-                     image_tokens=args.image_tokens)
+                     image_tokens=args.image_tokens,
+                     slo_s=args.slo_ms / 1e3 if args.slo_ms > 0 else None)
     rng = np.random.default_rng(args.seed)
     reqs = []
+    arrival = 0.0
     for i in range(args.requests):
         pixels = None
         if plan_server is not None and i % args.vision_every == 0:
             hw = int(rng.integers(12, 40))
             pixels = rng.normal(size=(3, hw, hw)).astype(np.float32)
+        if args.arrival_rate > 0:
+            # open-loop Poisson process: exponential interarrivals
+            arrival += float(rng.exponential(1.0 / args.arrival_rate))
         reqs.append(Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab,
                                 size=int(rng.integers(4, 24)))
             .astype(np.int32),
-            max_new_tokens=args.max_new, pixels=pixels))
+            max_new_tokens=args.max_new, pixels=pixels,
+            arrival_s=arrival))
     t0 = time.perf_counter()
     loop.run(reqs)
     dt = time.perf_counter() - t0
@@ -130,7 +151,18 @@ def main():
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens} "
               f"({r.latency_s*1e3:.0f} ms)")
     if plan_server is not None:
-        s = plan_server.stats()
+        s = loop.scheduler.stats() if loop.scheduler is not None \
+            else plan_server.stats()
+        if args.slo_ms > 0:
+            print(f"scheduler: {s['sched_batches']} batches "
+                  f"(full={s['sched_full_launches']} "
+                  f"deadline={s['sched_deadline_launches']} "
+                  f"window={s['sched_window_launches']})"
+                  f" | goodput={s['goodput']:.2%}"
+                  f" ({s['deadline_met']}/{s['deadline_met'] + s['deadline_miss']}"
+                  f" deadlines met)"
+                  f" | workers={s['sched_workers']}"
+                  f" resizes={s['worker_resizes']}")
         print("plan cache: "
               f"{s['requests']} vision requests over {s['buckets']} buckets"
               f" | solves={s['solves']} (warm={s['warm_solves']})"
@@ -153,6 +185,7 @@ def main():
             print(f"calibrated costs: {cov['table_hits']} table hits, "
                   f"{cov['fallback_hits']} analytic fallbacks "
                   f"({cov['table_rate']:.0%} measured)")
+        loop.close()
         plan_server.close()
     if args.trace:
         tracer.flush()

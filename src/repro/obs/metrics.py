@@ -184,6 +184,19 @@ class MetricsRegistry:
         return self._get("histogram", name, labels,
                          lambda: Histogram(buckets))
 
+    def find_histogram(self, name: str, **labels) -> Optional[Histogram]:
+        """Histogram lookup WITHOUT creation (None if never recorded).
+
+        Readers that merely *consult* a histogram — e.g. the scheduler
+        estimating batch latency from observed samples — must not leave
+        empty metrics behind in the exposition, so they look up through
+        here instead of the get-or-create :meth:`histogram`.
+        """
+        key = ("histogram", name, _label_key(labels))
+        with self._lock:
+            m = self._metrics.get(key)
+        return m  # type: ignore[return-value]
+
     # -----------------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:
         """Flat name(+labels) -> value/summary dict."""

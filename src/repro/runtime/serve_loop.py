@@ -16,11 +16,21 @@ bridge between the paper's primitive-selection machinery and the LM
 serving path: vision preprocessing rides the plan cache, so a hot bucket
 costs one executable call, not a PBQP solve + XLA compile.
 
-Admission is *micro-batched*: every image admitted in the same tick is
-enqueued on the server's admission queue and one ``flush()`` coalesces
-all pending same-bucket images into a single batched tower invocation
-(``PlanServer.infer_batch``) — N images admitted together cost one
-executable call, not N.
+Admission rides the *continuous-batching* scheduler
+(:class:`repro.serving.scheduler.ContinuousScheduler`): every admitted
+image is submitted as an individual request (optionally carrying the
+loop's SLO deadline) and the scheduler coalesces co-batchable images
+into in-flight bucket groups — same-tick same-bucket images still share
+ONE batched tower invocation (the scheduler's batching window sees them
+arrive together), but images can now also coalesce *across* ticks, a
+partial batch launches early when a deadline's slack runs out, and the
+worker pool resizes under load (docs/serving.md).
+
+Requests may carry an ``arrival_s`` offset, which :meth:`ServeLoop.run`
+honours as an *open-loop* arrival process: a request is invisible to
+admission until its arrival time passes, so offered load is independent
+of service rate — exactly how the load benchmark
+(benchmarks/bench_load.py) drives the serving stack.
 """
 from __future__ import annotations
 
@@ -47,17 +57,24 @@ class Request:
     eos_id: int = -1             # -1: never
     #: optional image (C, H, W) handled by the loop's PlanServer
     pixels: Optional[np.ndarray] = None
+    #: open-loop arrival offset (seconds from run() start); the loop
+    #: does not see the request before this
+    arrival_s: float = 0.0
     # outputs
     tokens: List[int] = field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0
+    #: submit -> admission wait (queueing the loop itself induced)
+    wait_s: float = 0.0
 
 
 class ServeLoop:
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  max_seq: int = 128, plan: Optional[ShardingPlan] = None,
                  rt: ModelRuntime = ModelRuntime(),
-                 plan_server=None, image_tokens: int = 4):
+                 plan_server=None, image_tokens: int = 4,
+                 scheduler=None, slo_s: Optional[float] = None,
+                 elastic=None):
         self.cfg = cfg
         self.params = params
         self.plan = plan or ShardingPlan(mesh=None)
@@ -66,6 +83,18 @@ class ServeLoop:
         self.max_seq = max_seq
         self.plan_server = plan_server
         self.image_tokens = image_tokens
+        #: vision SLO handed to every scheduler submission (None: no
+        #: deadline; requests launch on the full/window triggers only)
+        self.slo_s = slo_s
+        self.scheduler = scheduler
+        self._owns_scheduler = False
+        if scheduler is None and plan_server is not None:
+            # lazy import keeps runtime importable without the serving
+            # package's optional deps, mirroring the plan_server param
+            from ..serving.scheduler import ContinuousScheduler
+            self.scheduler = ContinuousScheduler(
+                plan_server, slo_s=slo_s, elastic=elastic)
+            self._owns_scheduler = True
         dtype = jax.tree.leaves(params)[0].dtype
         self.cache = init_cache(cfg, max_batch, max_seq, dtype)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
@@ -128,23 +157,26 @@ class ServeLoop:
                 break
             req = self.queue.pop(0)
             req._t0 = time.perf_counter()
+            req.wait_s = req._t0 - getattr(req, "_t_arrived", req._t0)
             admitted.append((slot, req))
         if not admitted:
             return
-        # Micro-batch the tick's vision work: enqueue every admitted
-        # image, then one flush -> all same-bucket images share ONE
-        # batched tower invocation instead of one call each.  The
-        # admit span parents that flush (and its queue_wait/execute
-        # children) to this admission tick in the trace.
+        # Continuous-batch the tick's vision work: every admitted image
+        # is submitted to the scheduler, which coalesces co-batchable
+        # requests into in-flight bucket groups — same-tick same-bucket
+        # images arrive within its batching window and still share ONE
+        # batched tower invocation, but coalescing is no longer bounded
+        # by the tick barrier, and SLO-carrying requests can force a
+        # partial batch out early.  The admit span ties the tick's
+        # submissions together in the trace (execution spans live on
+        # the scheduler's worker threads).
         vision: Dict[int, Any] = {}
-        if self.plan_server is not None:
+        if self.scheduler is not None:
             from ..obs.trace import get_tracer
             with get_tracer().span("admit", requests=len(admitted)):
                 for slot, req in admitted:
                     if req.pixels is not None:
-                        vision[slot] = self.plan_server.enqueue(req.pixels)
-                if vision:
-                    self.plan_server.flush()
+                        vision[slot] = self.scheduler.submit(req.pixels)
         for slot, req in admitted:
             if slot in vision:
                 self._encode_pixels(req, vision[slot].result())
@@ -187,11 +219,40 @@ class ServeLoop:
 
     def run(self, requests: List[Request], max_ticks: int = 10_000
             ) -> List[Request]:
-        for r in requests:
-            self.submit(r)
+        """Serve ``requests`` to completion (open-loop arrivals).
+
+        Requests become visible to admission only once their
+        ``arrival_s`` offset has elapsed — an open-loop arrival
+        process, so offered load does not slow down when the loop is
+        busy.  The default ``arrival_s=0`` recovers the closed-loop
+        behaviour (everything queued up front).
+        """
+        pending = sorted(requests, key=lambda r: r.arrival_s)
+        t0 = time.perf_counter()
         ticks = 0
-        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+        i = 0
+        while ((i < len(pending) or self.queue or any(self.slot_req))
+               and ticks < max_ticks):
+            now = time.perf_counter() - t0
+            while i < len(pending) and pending[i].arrival_s <= now:
+                req = pending[i]
+                req._t_arrived = time.perf_counter()
+                self.submit(req)
+                i += 1
+            if not self.queue and not any(self.slot_req):
+                # idle until the next arrival; sleeping (not ticking)
+                # keeps the wait off the tick budget
+                time.sleep(max(min(pending[i].arrival_s - now, 0.005),
+                               0.0))
+                continue
             self._admit()
             self._tick()
             ticks += 1
         return requests
+
+    def close(self) -> None:
+        """Release the scheduler if this loop created it (drains any
+        queued vision work first)."""
+        if self._owns_scheduler and self.scheduler is not None:
+            self.scheduler.close()
+            self.scheduler = None

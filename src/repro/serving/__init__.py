@@ -11,6 +11,9 @@ solve and kernel compilation — across a *stream* of request shapes:
   execute), the batched :meth:`PlanServer.infer_batch` path and the
   micro-batching admission queue, with hit/miss/latency counters in
   :mod:`.metrics`;
+* :mod:`.scheduler`  — :class:`ContinuousScheduler`: continuous
+  batching with per-request deadlines, SLO-aware partial launches and
+  elastic worker scaling (docs/serving.md);
 * :mod:`.towers`     — shape-parameterized demo nets for tests/examples.
 
 See the "Serving architecture" section of the README for the design.
@@ -23,6 +26,7 @@ from .plan_cache import (
     LRU, PlanDiskCache, plan_key, selection_from_payload,
     selection_to_payload,
 )
+from .scheduler import ContinuousScheduler
 from .server import PlanServer
 from .towers import conv_stack, conv_tower
 
@@ -32,5 +36,6 @@ __all__ = [
     "ServingCounters",
     "LRU", "PlanDiskCache", "plan_key",
     "selection_from_payload", "selection_to_payload",
+    "ContinuousScheduler",
     "PlanServer", "conv_tower", "conv_stack",
 ]

@@ -13,6 +13,15 @@ padding (never cropped), so the bucketed network dominates the request
 spatially.  A shape larger than ``max_*`` keeps its rounded value rather
 than being cropped — boundedness is a traffic assumption, correctness is
 not negotiable.
+
+The bucket is also the serving stack's *co-batching equivalence
+relation*: requests sharing a bucket shape can share one batched
+executable invocation, which is what :meth:`~repro.serving.server.
+PlanServer.infer_batch` groups by and what the continuous scheduler
+(:mod:`repro.serving.scheduler`) keys its pending queues on — so
+``max_n`` doubles as the scheduler's full-group launch threshold, and
+``bucket_n`` prices the batch a group *would* launch at when its
+deadline slack is evaluated (docs/serving.md).
 """
 from __future__ import annotations
 

@@ -38,10 +38,24 @@ COUNT_FIELDS = (
     "batch_calls", "coalesced",
     # solver / compiler work actually performed
     "solves", "warm_solves", "compiles", "mesh_compiles",
+    # continuous-batching scheduler (repro.serving.scheduler): requests
+    # submitted, batches launched, and why each batch launched — the
+    # group filled its batch bucket, the oldest request's deadline
+    # slack crossed the modeled batch latency, or the batching window
+    # expired with no other trigger
+    "sched_submits", "sched_batches",
+    "sched_full_launches", "sched_deadline_launches",
+    "sched_window_launches",
+    # per-request SLO accounting (requests that carried a deadline)
+    "deadline_met", "deadline_miss",
+    # elastic worker-pool resizes applied by the scheduler
+    "worker_resizes",
 )
 #: accumulated wall time (seconds); each also records one histogram
 #: sample per ``add`` under phase = field name minus the ``_s`` suffix
-TIME_FIELDS = ("solve_s", "compile_s", "execute_s")
+#: (``request_s`` is the scheduler's submit -> result latency, i.e.
+#: queueing + batching + execution as one end-to-end sample)
+TIME_FIELDS = ("solve_s", "compile_s", "execute_s", "request_s")
 #: histogram metric name the phase/bucket latency samples land in
 LATENCY_METRIC = "serving_latency_seconds"
 
@@ -98,6 +112,9 @@ class ServingCounters:
         d["plan_hit_rate"] = d["plan_hits"] / total if total else 0.0
         total = d["exec_hits"] + d["exec_misses"]
         d["exec_hit_rate"] = d["exec_hits"] / total if total else 0.0
+        # goodput: deadline-met fraction over deadline-carrying requests
+        total = d["deadline_met"] + d["deadline_miss"]
+        d["goodput"] = d["deadline_met"] / total if total else 1.0
         return d
 
     def phase_quantiles(self) -> Dict[str, Dict[str, float]]:

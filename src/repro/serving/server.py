@@ -26,8 +26,12 @@ Three execution entry points:
 * :meth:`PlanServer.enqueue` / :meth:`PlanServer.flush` — the
   micro-batching admission queue: producers enqueue single images and
   get a Future; ``flush()`` coalesces everything pending through
-  :meth:`infer_batch`.  The LM serve loop flushes once per admission
-  tick, so all images admitted in a tick share one tower invocation.
+  :meth:`infer_batch`.  This is the *barrier-flush* primitive; the
+  production path layers :class:`~repro.serving.scheduler.
+  ContinuousScheduler` on :meth:`infer_batch` instead — continuous
+  batching with per-request deadlines and SLO-aware partial launches
+  (docs/serving.md) — which is what the LM serve loop now admits
+  through.
 
 With a device ``mesh``, batched buckets solve the unified choice space
 (primitive × layout × device placement — ``select_pbqp(...,
@@ -264,6 +268,31 @@ class PlanServer:
         Misses are resolved on the server's worker pool so the caller's
         latency-sensitive loop never blocks on a cold bucket."""
         return self._pool.submit(self.compiled_for, shape_chw, n)
+
+    def resize_workers(self, n: int) -> None:
+        """Retarget the worker pool's concurrency (elastic scaling).
+
+        Called by the continuous-batching scheduler when its
+        :class:`~repro.runtime.elastic.ElasticController` observes a
+        load shift, so prefetch parallelism tracks the launch slots.
+        Growth takes effect on the next submission (the executor spawns
+        threads lazily up to its max); shrinking caps new spawns —
+        threads already running finish their work and go idle, which is
+        the semantics a serving pool wants (never abandon a compile
+        mid-flight).
+        """
+        n = max(1, int(n))
+        with self._lock:
+            # ThreadPoolExecutor consults _max_workers on every submit;
+            # retargeting it is the supported-in-practice resize lever
+            # (there is no public API).
+            self._pool._max_workers = n
+
+    @property
+    def worker_target(self) -> int:
+        """Current concurrency target of the worker pool."""
+        with self._lock:
+            return self._pool._max_workers
 
     # -----------------------------------------------------------------
     # output cropping

@@ -1,0 +1,278 @@
+"""ContinuousScheduler + ElasticController tests (PR 7 acceptance).
+
+The scheduler's contract: requests coalesce continuously (window
+trigger), SLO-carrying requests launch partial batches early (deadline
+trigger), full groups launch immediately (full trigger), outputs are
+bit-compatible with ``PlanServer.infer``, no submitted future is ever
+lost (drain-on-close), and the elastic policy resizes the worker pool
+deterministically from backlog pressure.
+"""
+import time
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core.costs import AnalyticCostModel
+from repro.runtime.elastic import ElasticController
+from repro.serving import (
+    BucketPolicy, ContinuousScheduler, PlanServer, conv_tower,
+)
+
+CM = AnalyticCostModel()
+POLICY = BucketPolicy(min_hw=8, max_hw=64, max_n=4)
+
+
+def _server(**kw):
+    kw.setdefault("policy", POLICY)
+    kw.setdefault("lru_capacity", 8)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=4), CM, **kw)
+
+
+def _sched(srv, **kw):
+    kw.setdefault("batch_window_s", 0.05)
+    kw.setdefault("elastic",
+                  ElasticController(min_workers=1, max_workers=3))
+    return ContinuousScheduler(srv, **kw)
+
+
+class TestTriggers:
+    def test_window_coalesces_burst_into_one_batch(self):
+        srv = _server()
+        sched = _sched(srv)
+        sched.prewarm([(3, 16, 16)], batches=(1, 2))
+        rng = np.random.default_rng(0)
+        f1 = sched.submit(rng.normal(size=(3, 14, 14)).astype(np.float32))
+        f2 = sched.submit(rng.normal(size=(3, 15, 15)).astype(np.float32))
+        f1.result(timeout=60)
+        f2.result(timeout=60)
+        s = sched.stats()
+        assert s["sched_batches"] == 1
+        assert s["sched_window_launches"] == 1
+        assert s["coalesced"] == 1          # 2 requests, 1 invocation
+        sched.close()
+        srv.close()
+
+    def test_deadline_launches_partial_batch_early(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=5.0)  # window out of play
+        sched.prewarm([(3, 16, 16)], batches=(1,))
+        x = np.zeros((3, 16, 16), np.float32)
+        t0 = time.perf_counter()
+        fut = sched.submit(x, slo_s=0.05)
+        fut.result(timeout=60)
+        dt = time.perf_counter() - t0
+        s = sched.stats()
+        assert s["sched_deadline_launches"] == 1
+        assert dt < 1.0, f"deadline trigger never fired ({dt:.2f}s)"
+        sched.close()
+        srv.close()
+
+    def test_full_group_launches_without_waiting(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=10.0)  # window out of play
+        sched.prewarm([(3, 16, 16)], batches=(POLICY.max_n,))
+        x = np.zeros((3, 16, 16), np.float32)
+        t0 = time.perf_counter()
+        futs = sched.submit_many([x] * POLICY.max_n)
+        for f in futs:
+            f.result(timeout=60)
+        dt = time.perf_counter() - t0
+        s = sched.stats()
+        assert s["sched_full_launches"] >= 1
+        assert dt < 5.0, "full group waited for the window"
+        sched.close()
+        srv.close()
+
+    def test_deadline_accounting_feeds_goodput(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=0.005)
+        sched.prewarm([(3, 16, 16)], batches=(1, 2))
+        x = np.zeros((3, 16, 16), np.float32)
+        sched.submit(x, slo_s=30.0).result(timeout=60)   # will be met
+        sched.submit(x, slo_s=1e-9).result(timeout=60)   # already lapsed
+        s = sched.stats()
+        assert s["deadline_met"] == 1
+        assert s["deadline_miss"] == 1
+        assert s["goodput"] == pytest.approx(0.5)
+        sched.close()
+        srv.close()
+
+
+class TestCorrectnessAndLifecycle:
+    def test_outputs_match_infer(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=0.005)
+        rng = np.random.default_rng(3)
+        xs = [rng.normal(size=(3, hw, hw)).astype(np.float32)
+              for hw in (12, 16, 20)]
+        refs = [srv.infer(x) for x in xs]
+        outs = [f.result(timeout=120)
+                for f in sched.submit_many(list(xs))]
+        for ref, out in zip(refs, outs):
+            assert set(out) == set(ref)
+            for k in ref:
+                np.testing.assert_allclose(out[k], ref[k],
+                                           rtol=2e-3, atol=2e-3)
+        sched.close()
+        srv.close()
+
+    def test_bad_input_rejected(self):
+        srv = _server()
+        sched = _sched(srv)
+        with pytest.raises(ValueError, match=r"\(C, H, W\)"):
+            sched.submit(np.zeros((16, 16), np.float32))
+        sched.close()
+        srv.close()
+
+    def test_close_drains_queued_work(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=30.0)  # nothing launches alone
+        sched.prewarm([(3, 16, 16)], batches=(1, 2))
+        futs = sched.submit_many(
+            [np.zeros((3, 16, 16), np.float32)] * 2)
+        sched.close(drain=True)
+        for f in futs:
+            assert f.result(timeout=1) is not None  # resolved, not hung
+        srv.close()
+
+    def test_close_without_drain_cancels(self):
+        srv = _server()
+        sched = _sched(srv, batch_window_s=30.0)
+        sched.prewarm([(3, 16, 16)], batches=(1,))
+        fut = sched.submit(np.zeros((3, 16, 16), np.float32))
+        sched.close(drain=False)
+        assert fut.cancelled()
+        with pytest.raises(CancelledError):
+            fut.result(timeout=1)
+        srv.close()
+
+    def test_submit_after_close_raises(self):
+        srv = _server()
+        sched = _sched(srv)
+        sched.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit(np.zeros((3, 16, 16), np.float32))
+        srv.close()
+
+    def test_stats_expose_scheduler_view(self):
+        srv = _server()
+        sched = _sched(srv)
+        s = sched.stats()
+        for key in ("sched_queued", "sched_inflight", "sched_workers",
+                    "sched_submits", "goodput"):
+            assert key in s
+        assert s["sched_queued"] == 0 and s["sched_inflight"] == 0
+        assert s["goodput"] == 1.0  # no deadlines seen yet
+        sched.close()
+        srv.close()
+
+
+class TestModeledLatency:
+    def test_prediction_then_observation(self):
+        """The latency model is predicted-until-measured: cost-model
+        prediction for a cold bucket, per-bucket execute p95 once the
+        bucket has real samples."""
+        from repro.serving import bucket_key
+        from repro.serving.metrics import LATENCY_METRIC
+
+        srv = _server()
+        sched = _sched(srv, min_model_samples=3)
+        bshape = (4, 16, 16)
+        cold = sched._modeled_latency(bshape, 1)
+        assert np.isfinite(cold) and cold > 0
+        assert cold == pytest.approx(
+            max(float(srv.plan_for(bshape).predicted_cost), 1e-6))
+        # feed 3 observed execute samples well away from the prediction
+        for _ in range(3):
+            srv.counters.add(_bucket=bucket_key(bshape, 1),
+                             execute_s=0.25)
+        h = srv.counters.registry.find_histogram(
+            LATENCY_METRIC, phase="execute", bucket=bucket_key(bshape, 1))
+        assert h is not None and h.count == 3
+        warm = sched._modeled_latency(bshape, 1)
+        assert warm == pytest.approx(0.25, rel=0.2)
+        sched.close()
+        srv.close()
+
+
+class TestElasticPolicy:
+    def test_scales_up_immediately_under_pressure(self):
+        ec = ElasticController(min_workers=1, max_workers=4,
+                               scale_up_backlog=2.0)
+        assert ec.workers == 1
+        g0 = ec.generation
+        assert ec.desired_workers(queued=10, inflight=1) == 2
+        assert ec.desired_workers(queued=10, inflight=2) == 3
+        assert ec.generation == g0 + 2
+
+    def test_scale_down_needs_sustained_calm(self):
+        ec = ElasticController(min_workers=1, max_workers=4, cooldown=3,
+                               scale_down_backlog=0.5)
+        for _ in range(3):
+            ec.desired_workers(queued=20, inflight=0)
+        assert ec.workers == 4
+        # two calm rounds: still 4 (cooldown is 3)
+        assert ec.desired_workers(queued=0, inflight=0) == 4
+        assert ec.desired_workers(queued=0, inflight=0) == 4
+        # third consecutive calm round shrinks by one
+        assert ec.desired_workers(queued=0, inflight=0) == 3
+        # a load blip resets the calm streak
+        ec.desired_workers(queued=0, inflight=0)
+        ec.desired_workers(queued=20, inflight=0)        # blip (scales up)
+        assert ec.desired_workers(queued=0, inflight=0) == 4
+        assert ec.workers == 4                           # streak restarted
+
+    def test_bounds_validated_and_respected(self):
+        with pytest.raises(ValueError):
+            ElasticController(min_workers=0)
+        with pytest.raises(ValueError):
+            ElasticController(min_workers=3, max_workers=2)
+        ec = ElasticController(min_workers=2, max_workers=2)
+        assert ec.desired_workers(queued=100, inflight=0) == 2
+        for _ in range(10):
+            assert ec.desired_workers(queued=0, inflight=0) == 2
+
+    def test_scheduler_mirrors_target_into_server_pool(self):
+        srv = _server(max_workers=2)
+        sched = _sched(srv, batch_window_s=0.005,
+                       elastic=ElasticController(min_workers=1,
+                                                 max_workers=3))
+        # construction applies the controller's initial target
+        assert srv.worker_target == 1
+        # a backlog burst must scale the pool up within a few rounds
+        sched.prewarm([(3, 16, 16)], batches=(1, 2, 4))
+        rng = np.random.default_rng(0)
+        futs = sched.submit_many(
+            [rng.normal(size=(3, 16, 16)).astype(np.float32)
+             for _ in range(24)])
+        for f in futs:
+            f.result(timeout=120)
+        s = sched.stats()
+        assert s["worker_resizes"] >= 1
+        assert srv.worker_target > 1
+        sched.close()
+        srv.close()
+
+
+class TestServeLoopOpenLoop:
+    def test_arrival_offsets_are_honoured(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.runtime import Request, ServeLoop
+
+        cfg = get_config("tinyllama-1.1b").scaled_down(
+            n_layers=2, d_model=64, d_ff=128, vocab=256)
+        params = init_params(cfg, jax.random.key(0), jnp.float32)
+        loop = ServeLoop(cfg, params, max_batch=2, max_seq=48)
+        reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=2, arrival_s=0.1 * i)
+                for i in range(3)]
+        t0 = time.perf_counter()
+        loop.run(reqs)
+        wall = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        assert wall >= 0.2  # the last arrival gated the run
+        loop.close()

@@ -175,3 +175,109 @@ class TestServeLoopVisionBridge:
         assert s["requests"] == 2 and s["solves"] == 1 \
             and s["compiles"] == 1
         srv.close()
+
+
+class TestNearestPlan:
+    """Warm-start source selection (PlanServer._nearest_plan)."""
+
+    def test_empty_cache_returns_none(self):
+        srv = _server()
+        assert srv._nearest_plan((4, 32, 32, 1)) is None
+        srv.close()
+
+    def test_exact_hit_is_distance_zero(self):
+        srv = _server()
+        sel = srv.plan_for((3, 16, 16))           # bucket (4, 16, 16), n=1
+        assert srv._nearest_plan((4, 16, 16, 1)) is sel
+        srv.close()
+
+    def test_picks_nearest_in_log_shape_space(self):
+        srv = _server()
+        near = srv.plan_for((3, 16, 16))          # (4, 16, 16, 1)
+        far = srv.plan_for((3, 60, 60))           # (4, 64, 64, 1)
+        assert near is not far
+        # query (4, 16, 16, 2): distance 1 to `near` (batch axis only),
+        # distance 5 to `far` (two spatial doublings x2 + batch)
+        assert srv._nearest_plan((4, 16, 16, 2)) is near
+        # and the batch axis is one more axis of the metric: a batched
+        # query near the big bucket prefers the big bucket
+        assert srv._nearest_plan((4, 64, 64, 2)) is far
+        srv.close()
+
+
+class TestConcurrencyStress:
+    def test_mixed_paths_under_eviction_lose_nothing(self):
+        """Threaded hammer across every request path while the LRU
+        churns: every issued request resolves exactly once with the
+        correct output, and the counters account for every request."""
+        import threading
+
+        srv = PlanServer(lambda s: conv_tower(s, depth=2, width=4), CM,
+                         policy=POLICY, lru_capacity=2)
+        rng = np.random.default_rng(7)
+        shapes = [(3, 12, 12), (3, 16, 16), (3, 20, 20)]  # buckets 16, 32
+        imgs = [rng.normal(size=s).astype(np.float32) for s in shapes]
+        # references (and the nb=1 warm-up) before the storm
+        refs = [srv.infer(x) for x in imgs]
+        base_requests = len(imgs)
+
+        issued = [0]
+        results = []          # (img_idx, output_dict)
+        errors = []
+        lock = threading.Lock()
+
+        def record(i, out):
+            with lock:
+                results.append((i, out))
+
+        def worker(tid):
+            trng = np.random.default_rng(100 + tid)
+            ops = ["infer", "batch", "queue", "prefetch"] * 2
+            trng.shuffle(ops)
+            try:
+                for op in ops:
+                    i = int(trng.integers(len(imgs)))
+                    j = int(trng.integers(len(imgs)))
+                    if op == "infer":
+                        with lock:
+                            issued[0] += 1
+                        record(i, srv.infer(imgs[i]))
+                    elif op == "batch":
+                        with lock:
+                            issued[0] += 2
+                        out = srv.infer_batch([imgs[i], imgs[j]])
+                        record(i, out[0])
+                        record(j, out[1])
+                    elif op == "queue":
+                        with lock:
+                            issued[0] += 1
+                        fut = srv.enqueue(imgs[i])
+                        srv.flush()  # drains everyone's pending, not just ours
+                        record(i, fut.result(timeout=120))
+                    else:
+                        srv.prefetch(shapes[i],
+                                     n=2 if i % 2 else 1).result(timeout=120)
+            except BaseException as exc:  # noqa: BLE001 — surface in main
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=300)
+        assert not errors, errors
+
+        # no lost or duplicated results: one output per issued request
+        assert len(results) == issued[0]
+        for i, out in results:
+            for k in refs[i]:
+                np.testing.assert_allclose(out[k], refs[i][k],
+                                           rtol=2e-3, atol=2e-3)
+        s = srv.stats()
+        assert s["requests"] == issued[0] + base_requests
+        # capacity 2 with >= 4 live (bucket, batch) specs must churn
+        assert s["exec_evictions"] >= 1
+        # the plan tier never evicts: recompiles reuse solved plans
+        assert s["solves"] <= 2 * 2  # 2 spatial buckets x 2 batch buckets
+        srv.close()
