@@ -1,0 +1,288 @@
+"""Full-parallelism benchmark: tp and pp as first-class PBQP choices.
+
+Four sections, one JSON document (written to benchmarks/results/):
+
+1. **mixed_vs_dp** — the headline: ``bottleneck_tower`` (a
+   weight-bandwidth-bound body behind a thin head) compiled three
+   ways for the same batch on 8 fake CPU devices: unsharded, the best
+   pure data-parallel plan (``mesh_axes={"data": 8}``), and the
+   solver's mixed plan on a ``data=2 x model=4`` mesh — which shards
+   the fat body convs tensor-parallel while the head stays dp.
+   Records predicted and measured time for all three, outputs verified
+   identical.  The CI gate asserts the mixed plan both matches and
+   measures faster than pure dp.
+2. **flip** — the fabric-speed sweep: the same solves repeated with
+   the inter-device link slowed by 2000x.  Slow links make the tp
+   all-gather and the pipeline's stage-boundary sends expensive, so
+   placements flip back toward dp/rep — the distributed twin of the
+   paper's layout-flip tables, now over the full placement alphabet
+   {rep, dp, tp, pp<stage>}.
+3. **bnb** — branch-and-bound work on the enlarged choice space:
+   solver node/prune counters for the {dp, rep} space vs the full
+   {rep, dp, tp} product, and for the pipeline space, so the cost of
+   the richer domain is measured rather than guessed.
+4. **cache_roundtrip** — a mixed tp+dp plan and a pipeline plan
+   through the JSON disk tier (serialize/parse cycle included):
+   structured placements must survive byte-identically.
+
+Run (the script forces 8 fake CPU devices before jax initialises):
+
+  PYTHONPATH=src python -m benchmarks.bench_parallelism
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import statistics
+import tempfile
+import time
+
+N_DEVICES = 8
+
+
+def _force_fake_devices() -> None:
+    from repro.launch.mesh import force_host_devices
+    force_host_devices(N_DEVICES)
+
+
+def _headline_net(batch: int):
+    from repro.serving.towers import bottleneck_tower
+    return bottleneck_tower((4, 16, 16)).with_batch(batch)
+
+
+def _pipeline_net(batch: int):
+    from repro.serving.towers import uniform_stack
+    return uniform_stack((8, 8, 8), depth=6).with_batch(batch)
+
+
+def _throughput(fn, x, params, reps: int) -> float:
+    """Median seconds per invocation (warmed)."""
+    import jax
+    for _ in range(3):
+        jax.block_until_ready(fn(x, params))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x, params))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def _kind_counts(sel) -> dict:
+    from repro.core.selection import Placement
+    counts: dict = {}
+    for ch in sel.choices.values():
+        k = Placement.parse(ch.placement).kind
+        counts[k] = counts.get(k, 0) + 1
+    return counts
+
+
+def bench_mixed_vs_dp(batch: int, reps: int, seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.plan import compile_plan
+    from repro.core.selection import select_pbqp
+    from repro.launch.mesh import make_mesh_compat, mesh_fingerprint
+
+    cm = AnalyticCostModel()
+    net = _headline_net(batch)
+    params = net.init_params(seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, 4, 16, 16)).astype(np.float32))
+
+    mesh_dp = make_mesh_compat((N_DEVICES,), ("data",))
+    mesh_2d = make_mesh_compat((2, 4), ("data", "model"))
+
+    sel_plain = select_pbqp(net, cm)
+    sel_dp = select_pbqp(net, cm, mesh_axes={"data": N_DEVICES})
+    sel_mix = select_pbqp(net, cm, mesh_axes={"data": 2, "model": 4})
+
+    cn_plain = compile_plan(sel_plain, params, batch=batch)
+    cn_dp = compile_plan(sel_dp, params, batch=batch, mesh=mesh_dp)
+    cn_mix = compile_plan(sel_mix, params, batch=batch, mesh=mesh_2d)
+
+    out_p = cn_plain(x)
+    match_dp = all(np.allclose(np.asarray(cn_dp(x)[k]),
+                               np.asarray(out_p[k]),
+                               rtol=2e-3, atol=2e-3) for k in out_p)
+    match_mix = all(np.allclose(np.asarray(cn_mix(x)[k]),
+                                np.asarray(out_p[k]),
+                                rtol=2e-3, atol=2e-3) for k in out_p)
+
+    t_plain = _throughput(cn_plain.fn, x, cn_plain.params, reps)
+    t_dp = _throughput(cn_dp.fn, x, cn_dp.params, reps)
+    t_mix = _throughput(cn_mix.fn, x, cn_mix.params, reps)
+
+    return {
+        "devices": N_DEVICES, "batch": batch,
+        "mesh_dp": mesh_fingerprint(mesh_dp),
+        "mesh_mixed": mesh_fingerprint(mesh_2d),
+        "mesh_mode_dp": cn_dp.mesh_mode,
+        "mesh_mode_mixed": cn_mix.mesh_mode,
+        "placement_kinds_dp": _kind_counts(sel_dp),
+        "placement_kinds_mixed": _kind_counts(sel_mix),
+        "tp_nodes": cn_mix.tp_nodes,
+        "dp_nodes": cn_mix.dp_nodes,
+        "outputs_match_dp": bool(match_dp),
+        "outputs_match": bool(match_mix),
+        # solver currency: per-device time of the optimum per space
+        "predicted_plain_s": sel_plain.predicted_cost,
+        "predicted_dp_s": sel_dp.predicted_cost,
+        "predicted_mixed_s": sel_mix.predicted_cost,
+        "predicted_speedup_vs_dp": sel_dp.predicted_cost /
+        max(sel_mix.predicted_cost, 1e-30),
+        # honest wall clock on this host's fake-device mesh
+        "measured_plain_s": t_plain,
+        "measured_dp_s": t_dp,
+        "measured_mixed_s": t_mix,
+        "measured_speedup": t_dp / max(t_mix, 1e-12),
+        "measured_speedup_vs_plain": t_plain / max(t_mix, 1e-12),
+    }
+
+
+def bench_flip(batch: int) -> dict:
+    """Placement tables across a fabric-speed sweep: slow links price
+    the tp all-gather and pp stage sends out of the optimum."""
+    from repro.core.costs import CPU_SPEC, AnalyticCostModel, HardwareSpec
+    from repro.core.selection import select_pbqp
+
+    def _spec(link):
+        return HardwareSpec(
+            name="cpu-swept-fabric", peak_flops=CPU_SPEC.peak_flops,
+            mem_bw=CPU_SPEC.mem_bw, link_bw=link,
+            family_eff=CPU_SPEC.family_eff,
+            family_setup=CPU_SPEC.family_setup)
+
+    fabrics = {"fast": CPU_SPEC.link_bw, "slow": CPU_SPEC.link_bw / 2000}
+    net_mix = _headline_net(batch)
+    net_pp = _pipeline_net(batch)
+    tables: dict = {"mixed": {}, "pipeline": {}}
+    costs: dict = {"mixed": {}, "pipeline": {}}
+    for name, link in fabrics.items():
+        cm = AnalyticCostModel(_spec(link))
+        sel_m = select_pbqp(net_mix, cm,
+                            mesh_axes={"data": 2, "model": 4})
+        sel_p = select_pbqp(net_pp, cm, mesh_axes={"stage": 4})
+        tables["mixed"][name] = {nid: str(ch.placement)
+                                 for nid, ch in sel_m.choices.items()}
+        tables["pipeline"][name] = {nid: str(ch.placement)
+                                    for nid, ch in sel_p.choices.items()}
+        costs["mixed"][name] = sel_m.predicted_cost
+        costs["pipeline"][name] = sel_p.predicted_cost
+    flips = {
+        fixture: [
+            {"node": nid, "fast": tab["fast"][nid],
+             "slow": tab["slow"][nid]}
+            for nid in tab["fast"] if tab["fast"][nid] != tab["slow"][nid]]
+        for fixture, tab in tables.items()}
+    return {
+        "devices": N_DEVICES, "batch": batch,
+        "fabric_link_bw": fabrics,
+        "placements": tables,
+        "predicted_costs": costs,
+        "node_flips": flips,
+        "n_flips": {k: len(v) for k, v in flips.items()},
+    }
+
+
+def bench_bnb(batch: int) -> dict:
+    """Solver work on the enlarged choice space: the counters answer
+    'what did tp and pp cost the branch-and-bound search?'."""
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.selection import select_pbqp
+
+    cm = AnalyticCostModel()
+    spaces = {
+        "layout_only": (_headline_net(batch), None),
+        "dp_rep": (_headline_net(batch), {"data": N_DEVICES}),
+        "dp_tp_rep": (_headline_net(batch), {"data": 2, "model": 4}),
+        "pipeline": (_pipeline_net(batch), {"stage": 4}),
+    }
+    rows = {}
+    for name, (net, axes) in spaces.items():
+        t0 = time.perf_counter()
+        sel = select_pbqp(net, cm, mesh_axes=axes)
+        rows[name] = {
+            "mesh_axes": axes,
+            "predicted_s": sel.predicted_cost,
+            "solve_wall_s": time.perf_counter() - t0,
+            "stats": dict(sel.solver_stats),
+        }
+    return {"devices": N_DEVICES, "batch": batch, "spaces": rows}
+
+
+def bench_cache_roundtrip(batch: int) -> dict:
+    """Structured placements through the JSON disk tier and back."""
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.selection import Placement, select_pbqp
+    from repro.serving import (PlanDiskCache, plan_key,
+                               selection_from_payload,
+                               selection_to_payload)
+
+    cm = AnalyticCostModel()
+    fixtures = {
+        "mixed": (_headline_net(batch), {"data": 2, "model": 4}),
+        "pipeline": (_pipeline_net(batch), {"stage": 4}),
+    }
+    rows = {}
+    with tempfile.TemporaryDirectory() as td:
+        cache = PlanDiskCache(pathlib.Path(td))
+        for name, (net, axes) in fixtures.items():
+            sel = select_pbqp(net, cm, mesh_axes=axes)
+            key = plan_key(net.fingerprint(), f"b{batch}-{name}",
+                           cm.version())
+            cache.put(key, selection_to_payload(sel))
+            back = selection_from_payload(
+                json.loads(json.dumps(cache.get(key))), net)
+            ok = all(
+                back.choices[nid].placement == ch.placement
+                and isinstance(back.choices[nid].placement, Placement)
+                for nid, ch in sel.choices.items())
+            ok = ok and abs(back.predicted_cost - sel.predicted_cost) \
+                <= 1e-12 + 1e-9 * abs(sel.predicted_cost)
+            rows[name] = {
+                "ok": bool(ok),
+                "placements": sorted({str(c.placement)
+                                      for c in sel.choices.values()}),
+            }
+    return {"batch": batch, "fixtures": rows,
+            "ok": all(r["ok"] for r in rows.values())}
+
+
+def main():
+    _force_fake_devices()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    choices=("mixed_vs_dp", "flip", "bnb",
+                             "cache_roundtrip"))
+    args = ap.parse_args()
+
+    sections = {
+        "mixed_vs_dp": lambda: bench_mixed_vs_dp(
+            args.batch, args.reps, args.seed),
+        "flip": lambda: bench_flip(args.batch),
+        "bnb": lambda: bench_bnb(args.batch),
+        "cache_roundtrip": lambda: bench_cache_roundtrip(args.batch),
+    }
+    result = {"benchmark": "parallelism"}
+    for name, fn in sections.items():
+        if args.only is None or args.only == name:
+            result[name] = fn()
+    doc = json.dumps(result, indent=2)
+    print(doc)
+    out = pathlib.Path(__file__).parent / "results"
+    out.mkdir(exist_ok=True)
+    name = "parallelism.json" if args.only is None \
+        else f"parallelism_{args.only}.json"
+    (out / name).write_text(doc)
+
+
+if __name__ == "__main__":
+    main()

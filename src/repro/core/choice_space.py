@@ -37,7 +37,66 @@ import numpy as np
 
 from . import pbqp
 
-__all__ = ["ChoiceNode", "ChoiceEdge", "build_pbqp", "drop_infinite"]
+__all__ = ["ChoiceNode", "ChoiceEdge", "Placement", "build_pbqp",
+           "drop_infinite"]
+
+
+class Placement(str):
+    """A device-placement choice, as a structured string.
+
+    The placement axis of the choice space covers four kinds:
+
+    ``rep``
+        replicated — every device holds the full tensor/batch.
+    ``dp``
+        data-parallel — the batch is sharded over every non-stage mesh
+        axis (``data`` x ``model`` flattened).
+    ``tp``
+        tensor-parallel — the batch is sharded over the ``data`` axis
+        and conv weights are sharded over the ``model`` axis
+        (output-channel split); the node pays the intra-node
+        all-gather that reassembles the channel dimension.
+    ``pp<stage>``
+        pipeline-parallel — the node is resident on pipeline stage
+        ``<stage>`` of the ``stage`` mesh axis; edges that cross a
+        stage boundary pay the activation send.
+
+    Subclassing :class:`str` keeps the whole pre-existing surface
+    working unchanged: ``choice.placement == "dp"`` comparisons,
+    dict/set hashing, JSON plan-cache round trips, and
+    ``dataclasses.replace(choice, placement="dp")`` in tests all see a
+    plain string.  The structure (``kind``, ``stage``) rides along as
+    attributes.
+    """
+
+    KINDS = ("rep", "dp", "tp", "pp")
+
+    def __new__(cls, kind: str, stage: int = 0):
+        if kind not in cls.KINDS:
+            raise ValueError(f"unknown placement kind {kind!r}")
+        if kind == "pp":
+            if stage < 0:
+                raise ValueError(f"negative pipeline stage {stage}")
+            s = f"pp{stage}"
+        else:
+            stage = 0
+            s = kind
+        self = super().__new__(cls, s)
+        self.kind = kind
+        self.stage = int(stage)
+        return self
+
+    @classmethod
+    def parse(cls, s: "str | Placement") -> "Placement":
+        """Recover the structured form from its canonical string
+        (idempotent on :class:`Placement` instances)."""
+        if isinstance(s, Placement):
+            return s
+        if s in ("rep", "dp", "tp"):
+            return cls(s)
+        if s.startswith("pp") and s[2:].isdigit():
+            return cls("pp", int(s[2:]))
+        raise ValueError(f"unparsable placement {s!r}")
 
 
 @dataclass

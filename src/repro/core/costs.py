@@ -51,13 +51,17 @@ __all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
            "measure_transform", "prim_cost_key", "transform_cost_key",
            "fused_cost_key", "collective_cost_key", "ring_ag_bytes",
            "all_gather_time", "reduce_scatter_time", "all_reduce_time",
-           "all_to_all_time", "collective_time", "COLLECTIVE_KINDS"]
+           "all_to_all_time", "send_time", "collective_time",
+           "COLLECTIVE_KINDS"]
 
 #: bump when the *meaning* of costs changes (units, conventions, embedding)
 #: — persisted plan caches keyed on older schemas are invalidated.
 #: 2: edges are priced min(materialized DT, fused prologue, fused
 #:    epilogue) — plans solved under materialized-only pricing are stale.
-COST_MODEL_SCHEMA = 2
+#: 3: the placement axis covers {rep, dp, tp, pp}: tp nodes carry the
+#:    channel all-gather, pp edges carry stage-boundary sends ("send"
+#:    joined the collective kinds) — {dp, rep}-era plans are stale.
+COST_MODEL_SCHEMA = 3
 
 #: analytic estimate of how much of a materialized DT round trip a fused
 #: prologue/epilogue still pays: the kernel's remapped read (or store)
@@ -479,11 +483,24 @@ def all_to_all_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
     return float(nbytes) / spec.link_bw
 
 
+def send_time(spec: HardwareSpec, nbytes: float, n: int) -> float:
+    """Point-to-point activation transfer (the pipeline stage-boundary
+    hop): the whole tensor crosses one link.  ``n`` is the number of
+    participants — a 1-wide group is a no-op transfer and must price
+    0.0 so degenerate meshes stay exactly rep-equivalent."""
+    if n <= 1:
+        return 0.0
+    if spec.link_bw <= 0:
+        return float("inf")
+    return float(nbytes) / spec.link_bw
+
+
 COLLECTIVE_KINDS = {
     "all_gather": all_gather_time,
     "reduce_scatter": reduce_scatter_time,
     "all_reduce": all_reduce_time,
     "all_to_all": all_to_all_time,
+    "send": send_time,
 }
 
 

@@ -4,13 +4,27 @@ jit'd function that walks the DAG in topological order, invoking the
 selected primitive per conv layer and the explicit layout-conversion
 chains the legalizer inserted on illegal edges.
 
-With ``mesh=`` the generator emits a *mesh-sharded* executable: every
-node's device placement (the ``Choice.placement`` axis solved by
-``select_pbqp(..., mesh_axes=...)``) is realized as a ``NamedSharding``
-constraint over the mesh's ``data`` axis — GSPMD inserts exactly the
-resharding collectives the PBQP edges priced — and an all-``dp`` plan
-takes a ``shard_map`` fast path (one per-shard program per device, no
-partitioner round trip).  Runs on real pods and on fake CPU devices
+With ``mesh=`` the generator emits a *mesh-sharded* executable
+realizing every node's solved device placement (the
+``Choice.placement`` axis of ``select_pbqp(..., mesh_axes=...)``),
+one lowering per placement family:
+
+* **dp / rep only** — ``dp`` nodes run batch-sharded over the mesh's
+  batch axes (``data`` x ``model``, flattened), ``rep`` replicated.
+  All-``dp`` plans take a ``shard_map`` fast path; mixed plans compile
+  with one ``NamedSharding`` constraint per node so GSPMD inserts
+  exactly the resharding collectives the PBQP edges priced.
+* **any tp node** — an explicit-collective ``shard_map`` walker:
+  ``tp`` convs run with their output-channel weight slab sharded over
+  the ``model`` axis and an intra-group channel ``all_gather`` after
+  the call; form changes between dp/tp/rep values are emitted as the
+  same gathers and slices the edge costs priced.
+* **pp plan** — contiguous stage runs lower onto
+  :func:`~repro.runtime.pipeline_parallel.pipeline_apply`
+  (the GPipe fill-drain schedule over the ``stage`` axis), with stage
+  boundaries wired in logical CHW exactly as the solver priced them.
+
+Runs on real pods and on fake CPU devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) alike; see
 docs/distributed.md.
 """
@@ -29,7 +43,7 @@ from ..obs.trace import get_tracer
 from .graph import Net
 from .layouts import LAYOUT_BY_NAME
 from .primitives import convert_layout
-from .selection import SelectionResult
+from .selection import Placement, SelectionResult, pp_microbatches
 
 __all__ = ["compile_plan", "CompiledNet", "measure", "compile_count",
            "mesh_shape_dict"]
@@ -67,11 +81,16 @@ class CompiledNet:
     fused_edges: int = 0
     #: mesh the executable is sharded over (None: single device)
     mesh: Optional[Any] = None
-    #: nodes realized batch-sharded over the mesh's data axis
+    #: nodes realized batch-sharded over the mesh's batch axes
     dp_nodes: int = 0
     #: "shard_map" (all-dp fast path) | "gspmd" (per-node constraints)
-    #: | "" (no mesh)
+    #: | "tp_shard_map" (explicit-collective tp walker) | "pipeline"
+    #: (GPipe stage schedule) | "" (no mesh)
     mesh_mode: str = ""
+    #: nodes realized weight-sharded over the mesh's model axis
+    tp_nodes: int = 0
+    #: nodes realized as pipeline stages over the mesh's stage axis
+    pp_nodes: int = 0
     #: per-conv-node maker callables (fusion-resolved wire layouts) —
     #: kept so obs.drift.InstrumentedNet can rebuild the same walk with
     #: per-node timing.  None only on hand-constructed instances.
@@ -131,19 +150,52 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         raise ValueError("mesh-sharded executables are batched: pass "
                          "batch >= 2 (a single image cannot be sharded "
                          "over the data axis)")
-    dp_nodes = 0
+    net = sel.net
+    dp_nodes = tp_nodes = pp_nodes = 0
     d_mesh = 1
+    batch_axes: tuple = ()
     if mesh is not None:
         mesh_shape = mesh_shape_dict(mesh)
-        d_mesh = int(mesh_shape.get("data", 1))
-        dp_nodes = sum(1 for ch in sel.choices.values()
-                       if ch.placement == "dp")
-        if dp_nodes and ("data" not in mesh_shape or batch % d_mesh):
+        # dp shards the batch over ALL non-stage axes (data x model),
+        # mirroring the solver's pricing (selection._mesh_dims)
+        batch_axes = tuple(a for a in ("data", "model")
+                           if a in mesh_shape)
+        for a in batch_axes:
+            d_mesh *= int(mesh_shape[a])
+        kinds = {nid: Placement.parse(ch.placement).kind
+                 for nid, ch in sel.choices.items()}
+        dp_nodes = sum(1 for k in kinds.values() if k == "dp")
+        tp_nodes = sum(1 for k in kinds.values() if k == "tp")
+        pp_nodes = sum(1 for k in kinds.values() if k == "pp")
+        if dp_nodes and (d_mesh <= 1 or batch % d_mesh):
             raise ValueError(
                 f"plan has {dp_nodes} dp nodes but mesh {mesh_shape} "
-                f"cannot shard batch {batch} over its 'data' axis")
+                f"cannot shard batch {batch} over its batch axes "
+                f"{batch_axes}")
+        if tp_nodes:
+            d_tp = int(mesh_shape.get("model", 1))
+            d_data = int(mesh_shape.get("data", 1))
+            if d_tp <= 1:
+                raise ValueError(
+                    f"plan has {tp_nodes} tp nodes but mesh "
+                    f"{mesh_shape} has no 'model' axis to shard "
+                    f"weights over")
+            if batch % d_data:
+                raise ValueError(
+                    f"tp plans keep the batch data-sharded: batch "
+                    f"{batch} does not divide over the 'data' axis "
+                    f"of {mesh_shape}")
+        if pp_nodes:
+            if "stage" not in mesh_shape:
+                raise ValueError(
+                    f"plan has {pp_nodes} pp nodes but mesh "
+                    f"{mesh_shape} has no 'stage' axis")
+            if pp_nodes != len(net.order):
+                raise ValueError(
+                    "pipeline plans are all-or-nothing: "
+                    f"{pp_nodes}/{len(net.order)} nodes carry a pp "
+                    "placement")
     t0 = time.perf_counter()
-    net = sel.net
 
     # fusion pass: effective wire layouts per conv node.  Kind "in"
     # means the consumer reads the producer's declared l_out; kind
@@ -169,6 +221,28 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         ch = sel.choices[nid]
         if node.kind == "conv":
             p = raw_params[nid]
+            if mesh is not None and kinds[nid] == "tp":
+                # tp conv: slice the raw output-channel slab into d_tp
+                # shards, pack each at the shard scenario, and stack —
+                # the executor shards the stacked leading axis over the
+                # mesh's 'model' axis so each device packs 1/d_tp of
+                # the weights.  Fusion is never offered on tp edges,
+                # so the maker wires the primitive's own l_in/l_out.
+                if node.scn.m % d_tp:
+                    raise ValueError(
+                        f"tp node {nid}: m={node.scn.m} does not "
+                        f"divide over d_tp={d_tp}")
+                msh = node.scn.m // d_tp
+                scn_tp = node.scn.with_(m=msh)
+                shards = [ch.primitive.prepare(
+                              scn_tp, p["w"][i * msh:(i + 1) * msh],
+                              p["b"][i * msh:(i + 1) * msh])
+                          for i in range(d_tp)]
+                packed[nid] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *shards)
+                makers[nid] = ch.primitive.make_fused(
+                    scn_tp, l_in=ch.l_in, l_out=ch.l_out)
+                continue
             packed[nid] = ch.primitive.prepare(node.scn, p["w"], p["b"])
             makers[nid] = ch.primitive.make_fused(
                 node.scn, l_in=eff_in.get(nid, ch.l_in),
@@ -185,13 +259,22 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
         (lambda v: jax.lax.optimization_barrier(v))
 
     if mesh is not None:
-        fn, mode = _build_mesh_fn(sel, net, makers, mesh, d_mesh,
-                                  dp_nodes, jit)
+        if pp_nodes:
+            fn = _build_pipeline_fn(sel, net, makers, mesh, batch, jit)
+            mode = "pipeline"
+        elif tp_nodes:
+            fn = _build_tp_fn(sel, net, makers, packed, mesh, batch,
+                              jit)
+            mode = "tp_shard_map"
+        else:
+            fn, mode = _build_mesh_fn(sel, net, makers, mesh,
+                                      batch_axes, d_mesh, dp_nodes, jit)
         cnet = CompiledNet(sel, fn, packed,
                            build_s=time.perf_counter() - t0, batch=batch,
                            fused_edges=len(fusions), mesh=mesh,
                            dp_nodes=dp_nodes, mesh_mode=mode,
-                           makers=makers)
+                           makers=makers, tp_nodes=tp_nodes,
+                           pp_nodes=pp_nodes)
     else:
         run = _image_walker(sel, net, makers, barrier)
         if batch > 1:
@@ -204,7 +287,8 @@ def compile_plan(sel: SelectionResult, raw_params: Dict[str, Dict],
     get_tracer().emit("compile", t0, time.perf_counter(),
                       nodes=len(net.order), batch=batch,
                       fused_edges=cnet.fused_edges,
-                      mesh_mode=cnet.mesh_mode)
+                      mesh_mode=cnet.mesh_mode, dp_nodes=cnet.dp_nodes,
+                      tp_nodes=cnet.tp_nodes, pp_nodes=cnet.pp_nodes)
     return cnet
 
 
@@ -244,14 +328,18 @@ def _image_walker(sel: SelectionResult, net: Net,
 
 
 def _build_mesh_fn(sel: SelectionResult, net: Net, makers: Dict[str,
-                   Callable], mesh, d_mesh: int, dp_nodes: int,
-                   jit: bool):
-    """Emit the mesh-sharded executable for a placement-solved plan.
+                   Callable], mesh, batch_axes: tuple, d_mesh: int,
+                   dp_nodes: int, jit: bool):
+    """Emit the mesh-sharded executable for a {dp, rep} plan.
 
-    Two modes (both barrier-free, like every batched executable):
+    ``dp`` shards the batch over *all* the mesh's batch axes
+    (``batch_axes`` — ``data`` and, when present, ``model`` — exactly
+    the flattening the solver priced), so a pure-dp plan costs and runs
+    the same on an ``(8,)`` and a ``(2, 4)`` mesh.  Two modes (both
+    barrier-free, like every batched executable):
 
     * ``shard_map`` — every node is ``dp``: split the batch once over
-      the ``data`` axis and run the vmapped per-shard program
+      the batch axes and run the vmapped per-shard program
       (:func:`_image_walker`, the same walk the single-device
       executable runs) on each device.  No partitioner in the loop;
       the pure data-parallel serving fast path.
@@ -266,17 +354,18 @@ def _build_mesh_fn(sel: SelectionResult, net: Net, makers: Dict[str,
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 
+    dp_spec = P(batch_axes) if batch_axes else P()
     if dp_nodes == len(net.order) and d_mesh > 1:
         from jax.experimental.shard_map import shard_map
         inner = jax.vmap(_image_walker(sel, net, makers),
                          in_axes=(0, None))
-        fn = shard_map(inner, mesh=mesh, in_specs=(P("data"), P()),
-                       out_specs=P("data"))
+        fn = shard_map(inner, mesh=mesh, in_specs=(dp_spec, P()),
+                       out_specs=dp_spec)
         return (jax.jit(fn) if jit else fn), "shard_map"
 
     def spec_of(nid: str) -> "NamedSharding":
         pl = sel.choices[nid].placement
-        return NamedSharding(mesh, P("data") if pl == "dp" else P())
+        return NamedSharding(mesh, dp_spec if pl == "dp" else P())
 
     def run_batched(x, params):
         vals: Dict[str, Any] = {}
@@ -312,6 +401,247 @@ def _build_mesh_fn(sel: SelectionResult, net: Net, makers: Dict[str,
                 for nid in net.outputs()}
 
     return (jax.jit(run_batched) if jit else run_batched), "gspmd"
+
+
+def _build_tp_fn(sel: SelectionResult, net: Net,
+                 makers: Dict[str, Callable], packed: Dict[str, Any],
+                 mesh, batch: int, jit: bool):
+    """Explicit-collective ``shard_map`` walker for plans with tp nodes.
+
+    Every value inside the walker carries one of three *forms* — how its
+    leading batch axis is laid out across the mesh:
+
+    * ``dp``  — ``batch / (d_data * d_tp)`` rows per device (sharded
+      over all batch axes);
+    * ``ds``  — ``batch / d_data`` rows per device (sharded over
+      ``data`` only, replicated across ``model``) — the working form of
+      tp nodes, whose parallelism lives in the weight shards;
+    * ``rep`` — the full batch everywhere.
+
+    Form changes are emitted as exactly the collectives the solver's
+    edge costs priced (``dp -> rep``/``dp -> ds``/``ds -> rep``:
+    tiled all-gathers; the reverse directions: local slices).  A tp
+    conv runs its maker on the device's weight shard (1/d_tp of the
+    output channels), converts to logical CHW, all-gathers the channel
+    axis across ``model``, and converts back — the intra-group
+    collective the node's setup cost carried.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh_shape = mesh_shape_dict(mesh)
+    d_data = int(mesh_shape.get("data", 1))
+    d_tp = int(mesh_shape["model"])
+    batch_axes = tuple(a for a in ("data", "model") if a in mesh_shape)
+
+    kind_of = {nid: Placement.parse(sel.choices[nid].placement).kind
+               for nid in net.order}
+    FORM = {"dp": "dp", "tp": "ds", "rep": "rep"}
+    form_of = {nid: FORM[kind_of[nid]] for nid in net.order}
+    rows = {"dp": batch // (d_data * d_tp), "ds": batch // d_data,
+            "rep": batch}
+
+    def _reform(v, src, dst):
+        if src == dst or rows[src] == rows[dst]:
+            return v
+        if src == "dp" and dst == "rep":
+            return jax.lax.all_gather(v, batch_axes, axis=0, tiled=True)
+        if src == "dp" and dst == "ds":
+            return jax.lax.all_gather(v, "model", axis=0, tiled=True)
+        if src == "ds" and dst == "rep":
+            return jax.lax.all_gather(v, "data", axis=0, tiled=True)
+        # remaining directions drop rows: purely local slices
+        i = jax.lax.axis_index("data") if d_data > 1 else 0
+        j = jax.lax.axis_index("model")
+        if src == "rep" and dst == "dp":
+            start = (i * d_tp + j) * rows["dp"]
+        elif src == "rep" and dst == "ds":
+            start = i * rows["ds"]
+        elif src == "ds" and dst == "dp":
+            start = j * rows["dp"]
+        else:
+            raise AssertionError(f"unreachable reform {src}->{dst}")
+        return jax.lax.dynamic_slice_in_dim(v, start, rows[dst], axis=0)
+
+    def _convert(v, chain):
+        if chain:
+            for a, b in zip(chain, chain[1:]):
+                v = jax.vmap(
+                    lambda t, a=a, b=b: convert_layout(t, a, b))(v)
+        return v
+
+    def _bring(v, src, dst, chain):
+        # convert layouts on whichever side holds fewer rows — the
+        # same min-rows discount the edge's transform cost applied
+        if rows[dst] <= rows[src]:
+            return _convert(_reform(v, src, dst), chain)
+        return _reform(_convert(v, chain), src, dst)
+
+    in_forms = {form_of[nid] for nid in net.order
+                if net.nodes[nid].kind == "input"}
+    x_form = in_forms.pop() if len(in_forms) == 1 else "rep"
+
+    def walker(x, params):
+        vals: Dict[str, Any] = {}
+        for nid in net.order:
+            node = net.nodes[nid]
+            ch = sel.choices[nid]
+            form = form_of[nid]
+            if node.kind == "input":
+                vals[nid] = _reform(x, x_form, form)
+                continue
+            ins = [_bring(vals[src], form_of[src], form,
+                          sel.conversions.get((src, nid)))
+                   for src in node.inputs]
+            if node.kind == "conv":
+                if kind_of[nid] == "tp":
+                    # local leading axis of the stacked shard slab is
+                    # size 1 under P("model"): [0] is this device's cut
+                    p_local = jax.tree.map(lambda a: a[0], params[nid])
+                    y = jax.vmap(makers[nid], in_axes=(0, None))(
+                        ins[0], p_local)
+                    lo = ch.l_out
+                    y = jax.vmap(
+                        lambda t: convert_layout(t, lo, "CHW"))(y)
+                    y = jax.lax.all_gather(y, "model", axis=1,
+                                           tiled=True)
+                    vals[nid] = jax.vmap(
+                        lambda t: convert_layout(t, "CHW", lo))(y)
+                else:
+                    vals[nid] = jax.vmap(makers[nid], in_axes=(0, None))(
+                        ins[0], params[nid])
+            else:
+                layout = LAYOUT_BY_NAME[ch.l_in]
+                p = params.get(nid)
+                vals[nid] = jax.vmap(
+                    lambda *xs, op=node.op, lay=layout, p=p:
+                    op.fn(list(xs), lay, p))(*ins)
+        return {nid: jax.vmap(
+                    lambda t, lo=sel.choices[nid].l_out:
+                    convert_layout(t, lo, "CHW"))(vals[nid])
+                for nid in net.outputs()}
+
+    def spec(form):
+        if form == "dp":
+            return P(batch_axes)
+        if form == "ds" and d_data > 1:
+            return P("data")
+        return P()
+
+    p_specs = {nid: (P("model") if (net.nodes[nid].kind == "conv"
+                                    and kind_of[nid] == "tp") else P())
+               for nid in packed}
+    fn = shard_map(
+        walker, mesh=mesh,
+        in_specs=(spec(x_form), p_specs),
+        out_specs={nid: spec(form_of[nid]) for nid in net.outputs()},
+        check_rep=False)
+    return jax.jit(fn) if jit else fn
+
+
+def _build_pipeline_fn(sel: SelectionResult, net: Net,
+                       makers: Dict[str, Callable], mesh, batch: int,
+                       jit: bool):
+    """Lower a pp-placed plan onto the GPipe fill-drain schedule.
+
+    The solver only offers pp placements on :func:`~repro.core.
+    selection.pp_chain` nets — a linear, shape-preserving chain — and
+    its infinite backward-hop edge costs guarantee stages are monotone
+    along the chain.  Each mesh stage therefore owns one contiguous run
+    of nodes; this builder turns each run into a branch of a
+    ``lax.switch`` on ``axis_index("stage")`` and streams
+    ``pp_microbatches(batch, S)`` microbatches through
+    :func:`~repro.runtime.pipeline_parallel.pipeline_apply`.
+
+    Stage boundaries are wired in logical CHW: the legalizer recorded
+    each cross-stage edge's conversion chain *through* CHW, so the
+    producing branch applies the ``l_out -> CHW`` prefix and the
+    consuming branch the ``CHW -> l_in`` suffix — the carry that
+    ``ppermute`` rotates between stages is always the CHW activation
+    the edge cost priced.
+    """
+    from ..runtime.pipeline_parallel import pipeline_apply
+
+    mesh_shape = mesh_shape_dict(mesh)
+    s = int(mesh_shape["stage"])
+    n_micro = pp_microbatches(batch, s)
+    mb = batch // n_micro
+    order = net.order
+    stage_of = {nid: Placement.parse(sel.choices[nid].placement).stage
+                for nid in order}
+
+    def _convert(v, hops):
+        for a, b in zip(hops, hops[1:]):
+            v = jax.vmap(lambda t, a=a, b=b: convert_layout(t, a, b))(v)
+        return v
+
+    def make_branch(s_idx):
+        """One stage's program: (params dict, (mb, C, H, W) CHW carry)
+        -> (mb, C, H, W) CHW carry.  Stages that own no nodes (more
+        stages than layers) are identity relays."""
+        def br(p, v):
+            for pos, nid in enumerate(order):
+                if stage_of[nid] != s_idx:
+                    continue
+                node = net.nodes[nid]
+                ch = sel.choices[nid]
+                if node.kind != "input":
+                    prev = order[pos - 1]
+                    chain = sel.conversions.get((prev, nid))
+                    if chain:
+                        hops = chain
+                        if stage_of[prev] != s_idx:
+                            # cross-stage edge: the wire arrived in
+                            # CHW; apply only the CHW -> l_in suffix
+                            hops = chain[chain.index("CHW"):]
+                        v = _convert(v, hops)
+                    if node.kind == "conv":
+                        v = jax.vmap(makers[nid], in_axes=(0, None))(
+                            v, p[nid])
+                    else:
+                        layout = LAYOUT_BY_NAME[ch.l_in]
+                        q = p.get(nid)
+                        v = jax.vmap(
+                            lambda t, op=node.op, lay=layout, q=q:
+                            op.fn([t], lay, q))(v)
+                # exit wire: if the chain leaves this stage after nid,
+                # park the carry in CHW for the boundary transfer
+                nxt = order[pos + 1] if pos + 1 < len(order) else None
+                if nxt is None or stage_of[nxt] != s_idx:
+                    nchain = (sel.conversions.get((nid, nxt))
+                              if nxt is not None else None)
+                    if nchain:
+                        v = _convert(
+                            v, nchain[:nchain.index("CHW") + 1])
+                    elif ch.l_out != "CHW":
+                        v = jax.vmap(
+                            lambda t, lo=ch.l_out:
+                            convert_layout(t, lo, "CHW"))(v)
+            return v
+        return br
+
+    branches = [make_branch(i) for i in range(s)]
+    out_nid = net.outputs()[0]
+    c, h, w = net.nodes[order[0]].out_shape
+
+    def run(x, params):
+        xm = x.reshape(n_micro, mb, c, h, w)
+        # pipeline_apply shards stage_params' leading axis over the
+        # stage axis; per-stage params are heterogeneous pytrees, so
+        # ship the whole dict to every stage (leading axis = S copies)
+        # and let each branch pick out its own nodes' entries
+        sp = jax.tree.map(
+            lambda a: jnp.stack([a] * s), params)
+
+        def stage_fn(p, xmi):
+            return jax.lax.switch(
+                jax.lax.axis_index("stage"),
+                [lambda t, b=b, p=p: b(p, t) for b in branches], xmi)
+
+        y = pipeline_apply(mesh, stage_fn, sp, xm, n_micro=n_micro)
+        return {out_nid: y.reshape(batch, c, h, w)}
+
+    return jax.jit(run) if jit else run
 
 
 def measure(cnet: CompiledNet, x_chw: np.ndarray, *, reps: int = 5,

@@ -18,19 +18,39 @@ the explicit shortest chain of conversion layers — the cost of which the
 optimum already accounts for (the paper's key point: pricing conversions
 *after* selection is what makes greedy/local strategies sub-optimal).
 
-**Device placement axis.**  With ``mesh_axes={"data": D}`` the choice
-space gains a second dimension: every node's domain is primitives (or
-layouts) × placements {``rep``: whole batch replicated on every device,
-``dp``: batch sharded D ways over the mesh's ``data`` axis}.  Node
-costs price the per-device invocation (``Scenario.n/D`` for ``dp``);
-edges whose endpoints disagree on placement pay the resharding
-collective (``dp -> rep``: an all-gather of the whole batched tensor —
-the distributed analogue of a layout transform); ``dp`` choices on
+**Device placement axis.**  With ``mesh_axes`` (e.g. ``{"data": 2,
+"model": 4, "stage": 2}``) the choice space gains a second dimension:
+every node's domain crosses primitives (or layouts) with the
+structured :class:`~repro.core.choice_space.Placement` domain
+{``rep``, ``dp``, ``tp``, ``pp<stage>``}:
+
+* ``rep`` — whole batch replicated on every device.
+* ``dp`` — batch sharded over every non-stage axis (``data`` ×
+  ``model`` flattened, width D_dp); node costs price the per-device
+  shard (``Scenario.n/D_dp``).
+* ``tp`` — batch sharded over ``data`` AND conv weights sharded over
+  ``model`` (output channels, ``Scenario.m/D_tp``); the node
+  additionally pays the intra-node ring all-gather that reassembles
+  the channel dimension (op nodes carry ``tp`` as the matching
+  data-sharded/model-replicated form at zero extra cost, so runs of
+  tp layers wire up for free).
+* ``pp<s>`` — the node is resident on pipeline stage ``s``; compute
+  is discounted by the GPipe fill-drain overlap factor
+  ``(M + S - 1)/(S M)``, edges crossing a stage boundary pay the
+  activation send, and backward hops price infinite — the monotone
+  stage constraint, encoded so :func:`_legalize` never sees one.
+
+Edges whose endpoints disagree on placement pay the resharding
+collective (e.g. ``dp -> rep``: an all-gather of the whole batched
+tensor — the distributed analogue of a layout transform); sharded
 output nodes pay the final delivery gather.  The solver therefore
 trades collective time against replicated compute per layer, exactly
 as it trades transform time against primitive speed.
-:func:`~repro.core.plan.compile_plan` realizes placements as
-``NamedSharding`` constraints on a mesh (docs/distributed.md).
+:func:`~repro.core.plan.compile_plan` realizes placements on a mesh:
+dp/rep as ``NamedSharding`` constraints, tp as explicit shard_map
+collectives over the weight axis, contiguous pp stage runs on
+:func:`~repro.runtime.pipeline_parallel.pipeline_apply`
+(docs/distributed.md).
 
 docs/solver.md works a small instance through this embedding end to
 end; any :class:`~repro.core.costs.CostModel` can price it, including
@@ -45,7 +65,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import pbqp
-from .choice_space import ChoiceEdge, ChoiceNode, build_pbqp
+from .choice_space import ChoiceEdge, ChoiceNode, Placement, build_pbqp
 from .costs import CostModel
 from .graph import Net, Node
 from .layouts import DTGraph, transform_feasible
@@ -54,7 +74,8 @@ from .scenario import Scenario
 
 __all__ = ["SelectionResult", "select_pbqp", "select_fixed",
            "select_sum2d", "select_local_optimal", "select_family_best",
-           "Choice", "warm_assignment", "placements_for"]
+           "Choice", "Placement", "PlacementPricing", "warm_assignment",
+           "placements_for", "pp_chain", "pp_microbatches"]
 
 
 @dataclass(frozen=True)
@@ -140,18 +161,269 @@ def _net_batch(net: Net) -> int:
     return max((n.scn.n for n in net.conv_nodes()), default=1)
 
 
+def _mesh_dims(mesh_axes: Optional[Dict[str, int]]
+               ) -> Tuple[int, int, int]:
+    """``(d_data, d_tp, s_pp)`` of a ``mesh_axes`` dict; absent axes
+    are 1-wide.  ``data`` shards batches, ``model`` shards weights,
+    ``stage`` holds pipeline stages."""
+    if not mesh_axes:
+        return 1, 1, 1
+    return (int(mesh_axes.get("data", 1)),
+            int(mesh_axes.get("model", 1)),
+            int(mesh_axes.get("stage", 1)))
+
+
+def pp_microbatches(nb: int, s: int) -> int:
+    """Microbatch count for a batch of ``nb`` over ``s`` pipeline
+    stages: the largest divisor of ``nb`` not exceeding ``2s`` — enough
+    microbatches to keep the fill-drain bubble small, few enough that
+    per-microbatch dispatch overhead stays bounded.  Pure function of
+    (nb, s): pricing and :func:`~repro.core.plan.compile_plan` must
+    derive it identically."""
+    target = min(nb, max(2 * s, 1))
+    for m in range(target, 0, -1):
+        if nb % m == 0:
+            return m
+    return 1
+
+
+def pp_chain(net: Net) -> Optional[List[str]]:
+    """The net's node ids in order iff it is pipelineable: a single
+    linear chain (every node consumes exactly the previous node), a
+    single output (the last node), and every node shape-preserving —
+    the fixed carry shape :func:`~repro.runtime.pipeline_parallel.
+    pipeline_apply` rotates between stages.  Returns None otherwise;
+    pp placements are only offered on pipelineable nets."""
+    order = net.order
+    if not order:
+        return None
+    in_shape = net.nodes[order[0]].out_shape
+    prev: Optional[str] = None
+    for i, nid in enumerate(order):
+        node = net.nodes[nid]
+        if i == 0:
+            if node.kind != "input":
+                return None
+        elif list(node.inputs) != [prev]:
+            return None
+        if tuple(node.out_shape) != tuple(in_shape):
+            return None
+        prev = nid
+    if net.outputs() != [order[-1]]:
+        return None
+    return list(order)
+
+
 def placements_for(net: Net,
                    mesh_axes: Optional[Dict[str, int]]) -> List[str]:
-    """Placement domain for a net on a mesh: ``["rep"]`` (no mesh, a
-    degenerate data axis, or a batch the axis cannot divide) or
-    ``["dp", "rep"]`` — dp first, so cost *ties* (zero-cost op nodes,
-    free edges) resolve to the sharded choice: replicated execution at
-    equal priced time still burns D× the compute."""
-    d = int(mesh_axes.get("data", 1)) if mesh_axes else 1
+    """Generic placement domain for a net on a mesh.  Sharded kinds
+    first and ``rep`` last, so cost *ties* (zero-cost op nodes, free
+    edges) resolve to the sharded choice: replicated execution at equal
+    priced time still burns D× the compute.  Kinds are offered only
+    when feasible: ``dp`` needs the flattened data×model width to
+    divide the batch, ``tp`` needs a >1 ``model`` axis and a
+    data-divisible batch (per-primitive weight divisibility is filtered
+    per node), ``pp`` needs a >1 ``stage`` axis and a pipelineable net
+    (:func:`pp_chain`)."""
+    d_data, d_tp, s_pp = _mesh_dims(mesh_axes)
     nb = _net_batch(net)
-    if d > 1 and nb >= d and nb % d == 0:
-        return ["dp", "rep"]
-    return ["rep"]
+    d_dp = d_data * d_tp
+    out: List[str] = []
+    if d_dp > 1 and nb >= d_dp and nb % d_dp == 0:
+        out.append(Placement("dp"))
+    if d_tp > 1 and nb >= d_data and nb % d_data == 0:
+        out.append(Placement("tp"))
+    if s_pp > 1 and pp_chain(net) is not None:
+        out.extend(Placement("pp", s) for s in range(s_pp))
+    out.append(Placement("rep"))
+    return out
+
+
+class PlacementPricing:
+    """Placement-axis pricing, stated once.
+
+    Both the PBQP builder (:func:`_build`) and the observability
+    itemizer (:func:`repro.obs.drift.plan_predictions`) derive every
+    placement cost term from this class, so the drift detector's
+    predicted ledger is exactly the objective the solver minimized.
+
+    Terms:
+
+    * ``conv_cost`` — per-device compute of a primitive under a
+      placement, plus the placement's intra-node extras (tp channel
+      all-gather, output delivery gather, pp balance prior).
+    * ``transform_images`` — how many images an edge's layout
+      transform actually touches (the sharded side of a mixed edge;
+      the overlap-discounted batch inside a pipeline).
+    * ``edge_collective`` — the resharding collective between unlike
+      placements, the pp stage-boundary send, and the infinite
+      entries that encode pipeline monotonicity.
+    """
+
+    #: stage-balance prior weight (seconds per stage of imbalance).
+    #: Monotone chains make every stage split cost-identical under the
+    #: additive objective, so this epsilon tie-breaks toward the
+    #: balanced split the fill-drain discount assumes.  It must exceed
+    #: the branch-and-bound prune tolerance (1e-9 relative) to survive
+    #: the solve, and stays ~1000x below real node costs (~µs) so it
+    #: never decides anything but ties.
+    PP_EPS = 1e-8
+
+    def __init__(self, net: Net, cost: CostModel,
+                 mesh_axes: Optional[Dict[str, int]]):
+        self.net = net
+        self.cost = cost
+        self.nb = _net_batch(net)
+        self.d_data, self.d_tp, self.s_pp = _mesh_dims(mesh_axes)
+        self.d_dp = self.d_data * self.d_tp
+        self.outputs = set(net.outputs())
+        self.base = [Placement.parse(p)
+                     for p in placements_for(net, mesh_axes)]
+        self.n_micro = pp_microbatches(self.nb, self.s_pp)
+        self.ppf = ((self.n_micro + self.s_pp - 1)
+                    / (self.s_pp * self.n_micro)) if self.s_pp > 1 else 1.0
+        self.pos = {nid: i for i, nid in enumerate(net.order)}
+
+    # ---------------- node domains ----------------
+    def node_placements(self, node: Node) -> List[Placement]:
+        """Per-node filter of the generic domain: the input node spans
+        from stage 0, output nodes to stage S-1 (so a pipelined plan
+        covers the whole mesh), and inputs never carry tp (data-sharded
+        entry is dp's job; a reshard edge prices the difference)."""
+        out = []
+        for pl in self.base:
+            if pl.kind == "pp":
+                if node.kind == "input" and pl.stage != 0:
+                    continue
+                if node.id in self.outputs and pl.stage != self.s_pp - 1:
+                    continue
+            if pl.kind == "tp" and node.kind == "input":
+                continue
+            out.append(pl)
+        return out
+
+    def tp_feasible(self, node: Node, prim: Primitive) -> bool:
+        """tp shards ``prim``'s output channels D_tp ways: the shard
+        scenario must divide evenly, stay supported, and be
+        CHW-convertible on both sides of the channel all-gather."""
+        scn = node.scn
+        if self.d_tp <= 1 or scn.m % self.d_tp != 0:
+            return False
+        scn_tp = scn.with_(m=scn.m // self.d_tp)
+        if not prim.supports(scn_tp):
+            return False
+        return transform_feasible(prim.l_out, "CHW",
+                                  scn_tp.out_shape_chw) and \
+            transform_feasible("CHW", prim.l_out, scn.out_shape_chw)
+
+    # ---------------- node cost terms ----------------
+    def conv_cost(self, node: Node, prim: Primitive, pl: Placement,
+                  c_rep: float) -> Tuple[float, float]:
+        """``(compute, extra)`` seconds for one conv choice: per-device
+        compute under the placement, and the placement's collective /
+        prior terms (tp channel gather, delivery, pp balance)."""
+        k = pl.kind
+        if k == "dp":
+            compute = self.cost.primitive_cost(
+                prim, node.scn.with_(n=self.nb // self.d_dp))
+        elif k == "tp":
+            scn_tp = node.scn.with_(n=self.nb // self.d_data,
+                                    m=node.scn.m // self.d_tp)
+            compute = self.cost.primitive_cost(prim, scn_tp)
+        elif k == "pp":
+            compute = c_rep * self.ppf
+        else:
+            compute = c_rep
+        return compute, self.node_extra(node, pl)
+
+    def node_extra(self, node: Node, pl: Placement) -> float:
+        """Non-compute node terms: the tp channel all-gather, the
+        output delivery gather, and the pp balance prior."""
+        extra = self.balance_eps(node, pl)
+        img = 4.0 * float(np.prod(node.out_shape))
+        if pl.kind == "tp" and node.kind == "conv":
+            # reassemble the channel shards within each data group
+            extra += self.cost.collective_cost(
+                "all_gather", img * (self.nb // self.d_data), self.d_tp)
+        extra += self.delivery(node, pl)
+        return extra
+
+    def delivery(self, node: Node, pl: Placement) -> float:
+        """Final all-gather a sharded *output* node pays so the caller
+        sees the full batch (rep outputs are already whole)."""
+        if node.id not in self.outputs:
+            return 0.0
+        nbytes = 4.0 * float(np.prod(node.out_shape)) * self.nb
+        if pl.kind == "dp":
+            return self.cost.collective_cost("all_gather", nbytes,
+                                             self.d_dp)
+        if pl.kind == "tp":
+            return self.cost.collective_cost("all_gather", nbytes,
+                                             self.d_data)
+        if pl.kind == "pp":
+            # pipeline_apply's final psum broadcast of the last stage
+            return self.cost.collective_cost("all_gather", nbytes,
+                                             self.s_pp)
+        return 0.0
+
+    def balance_eps(self, node: Node, pl: Placement) -> float:
+        if pl.kind != "pp":
+            return 0.0
+        n = max(len(self.net.order), 1)
+        ideal = min(self.s_pp - 1, self.pos[node.id] * self.s_pp // n)
+        return self.PP_EPS * abs(pl.stage - ideal)
+
+    # ---------------- edge terms ----------------
+    def rows(self, pl: Placement) -> int:
+        """Images materialized per device under a placement."""
+        if pl.kind == "dp":
+            return self.nb // self.d_dp
+        if pl.kind == "tp":
+            return self.nb // self.d_data
+        return self.nb
+
+    def transform_images(self, pu: Placement, pv: Placement) -> float:
+        """Images an edge's layout transform touches: the sharded side
+        of a mixed edge (GSPMD transforms before gathering / after
+        slicing), the overlap-discounted whole batch inside a
+        pipeline."""
+        if pu.kind == "pp" or pv.kind == "pp":
+            return self.nb * self.ppf
+        return float(min(self.rows(pu), self.rows(pv)))
+
+    def edge_collective(self, pu: Placement, pv: Placement,
+                        img_bytes: float) -> float:
+        """Resharding / stage-boundary collective seconds for one edge.
+        ``inf`` encodes the illegal transitions: entering or leaving
+        the pipeline mid-net, and backward stage hops (the monotone
+        stage constraint)."""
+        ku, kv = pu.kind, pv.kind
+        if (ku == "pp") != (kv == "pp"):
+            return float("inf")
+        if ku == "pp":
+            if pv.stage < pu.stage:
+                return float("inf")
+            if pv.stage == pu.stage:
+                return 0.0
+            # each boundary ships the whole activation batch once
+            # (as n_micro microbatch sends; linear in bytes)
+            return (pv.stage - pu.stage) * self.cost.collective_cost(
+                "send", img_bytes * self.nb, 2)
+        if ku == kv:
+            return 0.0
+        if ku == "dp" and kv == "rep":
+            return self.cost.collective_cost(
+                "all_gather", img_bytes * self.nb, self.d_dp)
+        if ku == "dp" and kv == "tp":
+            # gather the model-axis batch shards within each data group
+            return self.cost.collective_cost(
+                "all_gather", img_bytes * (self.nb // self.d_data),
+                self.d_tp)
+        if ku == "tp" and kv == "rep":
+            return self.cost.collective_cost(
+                "all_gather", img_bytes * self.nb, self.d_data)
+        # rep->dp, rep->tp, tp->dp: a local slice, free
+        return 0.0
 
 
 def _build(net: Net, cost: CostModel, *,
@@ -170,35 +442,27 @@ def _build(net: Net, cost: CostModel, *,
     at their fused price and can pick primitive pairs a materialized-only
     model would reject (the tentpole of the fusion subsystem).
 
-    ``mesh_axes`` (e.g. ``{"data": 8}``) enables the device-placement
-    axis: domains cross with {rep, dp}, ``dp`` node costs price the
-    per-device shard (``Scenario.n/D``), placement-mismatched edges pay
-    the resharding collective, and ``dp`` output nodes pay the delivery
-    all-gather.  The whole construction goes through the shared
+    ``mesh_axes`` (e.g. ``{"data": 2, "model": 4, "stage": 2}``)
+    enables the device-placement axis: domains cross with the
+    feasibility-filtered {rep, dp, tp, pp<stage>} domain and every
+    placement cost term comes from :class:`PlacementPricing` — the same
+    object :func:`repro.obs.drift.plan_predictions` itemizes from, so
+    the observed ledger always matches the solved objective.  The whole
+    construction goes through the shared
     :func:`repro.core.choice_space.build_pbqp` bridge — the same one
     :mod:`repro.core.sharding_select` builds its collective-priced
     instances with.
     """
     dt = cost.dt_graph()
-    nb = _net_batch(net)
-    placements = placements_for(net, mesh_axes)
-    d_mesh = int(mesh_axes.get("data", 1)) if mesh_axes else 1
-    outputs = set(net.outputs())
-
-    def delivery(node: Node, pl: str) -> float:
-        """Final all-gather a dp *output* node pays so the caller sees
-        the full batch (rep outputs are already whole on every device)."""
-        if pl != "dp" or node.id not in outputs:
-            return 0.0
-        nbytes = 4 * float(np.prod(node.out_shape)) * nb
-        return cost.collective_cost("all_gather", nbytes, d_mesh)
+    pm = PlacementPricing(net, cost, mesh_axes)
 
     nodes: List[ChoiceNode] = []
     for nid in net.order:
         node = net.nodes[nid]
+        pls = pm.node_placements(node)
         if node.kind == "input":
-            choices = [Choice(None, "CHW", "CHW", pl) for pl in placements]
-            costs = [0.0] * len(choices)
+            choices = [Choice(None, "CHW", "CHW", pl) for pl in pls]
+            costs = [pm.node_extra(node, pl) for pl in pls]
         elif node.kind == "conv":
             if fixed and nid in fixed:
                 p = fixed[nid]
@@ -208,24 +472,25 @@ def _build(net: Net, cost: CostModel, *,
                 entries = _conv_domain(node, cost, families)
             choices, costs = [], []
             for p, c_rep in entries:
-                for pl in placements:
+                for pl in pls:
+                    if pl.kind == "tp" and not pm.tp_feasible(node, p):
+                        continue
+                    compute, extra = pm.conv_cost(node, p, pl, c_rep)
                     choices.append(Choice(p, p.l_in, p.l_out, pl))
-                    c = c_rep if pl == "rep" else cost.primitive_cost(
-                        p, node.scn.with_(n=nb // d_mesh))
-                    costs.append(c + delivery(node, pl))
+                    costs.append(compute + extra)
         else:  # op
             choices = [Choice(None, l, l, pl) for l in node.op.layouts
-                       for pl in placements]
-            costs = [delivery(node, ch.placement) for ch in choices]
+                       for pl in pls]
+            costs = [pm.node_extra(node, Placement.parse(ch.placement))
+                     for ch in choices]
         nodes.append(ChoiceNode(nid, choices, costs))
 
     # Transform costs are priced per image by the DT graph and scale
-    # with the images each device actually transforms: the whole
-    # minibatch nb when both endpoints are replicated, the nb/D shard
-    # when either endpoint is batch-sharded (GSPMD runs the transform
-    # on the sharded side of a mixed edge).  A dp -> rep transition
-    # additionally pays the all-gather of the whole batched tensor —
-    # the resharding collective is this axis's "layout transformation".
+    # with the images each device actually transforms
+    # (PlacementPricing.transform_images); placement-mismatched edges
+    # additionally pay the resharding collective — the distributed
+    # "layout transformation" — and pp stage boundaries pay the
+    # activation send through the CHW boundary wire.
     deg = _out_degree(net)
     edges: List[ChoiceEdge] = []
     for (src, dst) in net.edges():
@@ -238,18 +503,26 @@ def _build(net: Net, cost: CostModel, *,
         def transition(cu: Choice, cv: Choice, *, dtcosts=dtcosts,
                        idx=idx, sn=sn, dn=dn, single=single,
                        shape=shape, img_bytes=img_bytes) -> float:
-            per_img = dtcosts[idx[cu.l_out], idx[cv.l_in]]
-            if fuse and cu.placement == cv.placement:
-                for c, _ in _fused_options(cost, sn, dn, cu, cv,
-                                           single, shape):
-                    if c < per_img:
-                        per_img = c
-            sharded = "dp" in (cu.placement, cv.placement)
-            t = per_img * (nb // d_mesh if sharded else nb)
-            if cu.placement == "dp" and cv.placement == "rep":
-                t += cost.collective_cost("all_gather",
-                                          img_bytes * nb, d_mesh)
-            return t
+            pu = Placement.parse(cu.placement)
+            pv = Placement.parse(cv.placement)
+            coll = pm.edge_collective(pu, pv, img_bytes)
+            if not np.isfinite(coll):
+                return coll
+            if pu.kind == "pp" and pv.kind == "pp" and \
+                    pu.stage != pv.stage:
+                # stage boundaries wire CHW activations between
+                # devices: price the via-CHW conversion route
+                per_img = dtcosts[idx[cu.l_out], idx["CHW"]] + \
+                    dtcosts[idx["CHW"], idx[cv.l_in]]
+            else:
+                per_img = dtcosts[idx[cu.l_out], idx[cv.l_in]]
+                if fuse and cu.placement == cv.placement \
+                        and pu.kind != "tp":
+                    for c, _ in _fused_options(cost, sn, dn, cu, cv,
+                                               single, shape):
+                        if c < per_img:
+                            per_img = c
+            return per_img * pm.transform_images(pu, pv) + coll
 
         edges.append(ChoiceEdge(src, dst, transition))
 
@@ -267,23 +540,47 @@ def _legalize(net: Net, dt: DTGraph, choices: Dict[str, Choice], *,
     The realization replays exactly the pricing :func:`_build` fed the
     solver — ``min(materialized, fused options)``, materialized
     preferred on ties, fused options only offered when both endpoints
-    share a device placement (exactly as the edge matrices were priced)
-    — so the executed plan's transform cost is the one the optimum
-    accounted for.  With ``fuse=False`` (the paper's system), every
-    mismatched edge materializes.
+    share a device placement and neither is tp (exactly as the edge
+    matrices were priced; shard-level blocked layouts make fused
+    feasibility diverge from the full-shape check, so tp edges always
+    materialize) — so the executed plan's transform cost is the one the
+    optimum accounted for.  Edges that cross a pipeline stage boundary
+    wire CHW activations between devices: their chain is the glued
+    shortest path through CHW (recorded even when the endpoint layouts
+    agree), which the pipeline executor splits at CHW into the
+    producer stage's exit hops and the consumer stage's entry hops.
+    With ``fuse=False`` (the paper's system), every mismatched edge
+    materializes.
     """
     conversions: Dict[Tuple[str, str], List[str]] = {}
     fusions: Dict[Tuple[str, str], str] = {}
     deg = _out_degree(net)
     for (src, dst) in net.edges():
-        lo = choices[src].l_out
-        li = choices[dst].l_in
+        cu, cv = choices[src], choices[dst]
+        pu = Placement.parse(cu.placement)
+        pv = Placement.parse(cv.placement)
+        lo = cu.l_out
+        li = cv.l_in
+        if pu.kind == "pp" and pv.kind == "pp" and pu.stage != pv.stage:
+            shape = net.nodes[src].out_shape
+            p1 = dt.shortest_chain(lo, "CHW", shape) \
+                if lo != "CHW" else ["CHW"]
+            p2 = dt.shortest_chain("CHW", li, shape) \
+                if li != "CHW" else ["CHW"]
+            if p1 is None or p2 is None:
+                raise RuntimeError(
+                    f"illegal stage boundary {src}->{dst}: no DT path "
+                    f"through CHW ({lo}->{li})")
+            chain = list(p1) + list(p2)[1:]
+            if len(chain) >= 2:
+                conversions[(src, dst)] = chain
+            continue
         if lo == li:
             continue
         shape = net.nodes[src].out_shape
         kind = "dt"
         if fuse and cost is not None and \
-                choices[src].placement == choices[dst].placement:
+                cu.placement == cv.placement and pu.kind != "tp":
             costs, idx = dt.cost_matrix(shape)
             options = [(costs[idx[lo], idx[li]], "dt")]
             options += _fused_options(cost, net.nodes[src], net.nodes[dst],

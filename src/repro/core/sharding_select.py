@@ -42,7 +42,7 @@ from . import pbqp
 from .choice_space import ChoiceEdge, ChoiceNode, build_pbqp, drop_infinite
 from .costs import (
     TPU_V5E_SPEC, HardwareSpec, all_gather_time, all_reduce_time,
-    all_to_all_time, reduce_scatter_time,
+    all_to_all_time, reduce_scatter_time, send_time,
 )
 
 __all__ = ["select_rules", "candidate_report", "ShardingChoice"]
@@ -95,12 +95,16 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
         is the achievable-rate proxy, MXU efficiency included)."""
         return bwd * flops / (max(ways, 1) * spec.peak_flops)
 
-    def xfer(nbytes: float) -> float:
-        """Naive (non-ring) fabric transfer: the one-exchange
-        collectives below that don't follow the ring model.  A
-        fabric-less spec (``link_bw == 0``) prices them infinite, like
-        the shared ring helpers do — selection then replicates."""
-        return nbytes / spec.link_bw if spec.link_bw > 0 else np.inf
+    def xfer(nbytes: float, n: int) -> float:
+        """Naive (non-ring) fabric transfer over an ``n``-wide group:
+        the one-exchange collectives below that don't follow the ring
+        model.  Routed through the shared guarded helper so a 1-wide
+        group prices 0.0 — exactly rep-equivalent — and a fabric-less
+        spec (``link_bw == 0``) prices infinite; selection then
+        replicates.  (Regression: this once divided by ``link_bw``
+        unconditionally, so a degenerate tp=1 mesh still paid fabric
+        time and could flip plans away from the rep optimum.)"""
+        return send_time(spec, nbytes, n)
 
     nodes: List[ChoiceNode] = []
     domains: Dict[str, List[ShardingChoice]] = {}
@@ -118,7 +122,7 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
         # (naive, not ring: the partitioner reassembles the one-hot
         # gather output in a single exchange)
         emb.append((ShardingChoice("embed:vocab", (("vocab", "model"),)),
-                    xfer(2 * act)))
+                    xfer(2 * act, tp)))
     if d % tp == 0:
         emb.append((ShardingChoice("embed:dmodel",
                                    (("vocab", None),)),  # d sharded in rule
@@ -137,7 +141,7 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
         if h_ssm % tp == 0:
             attn.append((ShardingChoice(
                 "mixer:ssm_heads", (("ssm_heads", "model"),)),
-                mm_time(f_ssm, tp) + nl * xfer(2 * act)))
+                mm_time(f_ssm, tp) + nl * xfer(2 * act, tp)))
         attn.append((ShardingChoice("mixer:rep", (("ssm_heads", None),)),
                      mm_time(f_ssm, 1)))
     else:
@@ -232,7 +236,8 @@ def select_rules(cfg, shape, mesh_shape: Dict[str, int], *,
                               ("batch", None))),
                 cfg.n_layers * xfer(_bytes(shape.global_batch,
                                            cfg.n_heads, hd + 2,
-                                           dtype_bytes=4))))
+                                           dtype_bytes=4),
+                                    _mesh_size(mesh_shape, dp_ax))))
         cache.append((ShardingChoice(
             "cache:replicated", (("kv_seq", None),)),
             kv_bytes / spec.mem_bw))  # every chip reads the whole cache

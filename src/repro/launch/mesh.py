@@ -11,7 +11,59 @@ import jax
 from ..core.plan import mesh_shape_dict  # re-export: single definition
 
 __all__ = ["make_mesh_compat", "make_production_mesh", "make_cpu_mesh",
-           "mesh_shape_dict", "mesh_fingerprint", "force_host_devices"]
+           "mesh_shape_dict", "mesh_fingerprint", "force_host_devices",
+           "parse_mesh_spec"]
+
+#: CLI parallelism names -> mesh axis names.  The CLI speaks the
+#: paper's vocabulary (dp/tp/stage); the mesh speaks jax's
+#: (data/model/stage).
+_MESH_AXIS_ALIASES = {"dp": "data", "data": "data",
+                      "tp": "model", "model": "model",
+                      "pp": "stage", "stage": "stage"}
+
+
+def parse_mesh_spec(spec: str):
+    """Parse ``"dp=2,tp=2,stage=2"`` into ``(shape, axis_names)``.
+
+    Accepts both CLI aliases (dp/tp/pp) and raw axis names
+    (data/model/stage), in any order; size-1 axes are dropped (a
+    1-wide group is just replication — the solver prices it
+    identically, see ``core.costs.send_time``).  Axis order is
+    canonicalized to (data, model, stage) so equivalent specs
+    fingerprint identically.
+    """
+    sizes = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(f"mesh spec entry {part!r} is not "
+                             f"<axis>=<size> (spec: {spec!r})")
+        name, _, val = part.partition("=")
+        axis = _MESH_AXIS_ALIASES.get(name.strip().lower())
+        if axis is None:
+            raise ValueError(
+                f"unknown mesh axis {name.strip()!r} — use "
+                f"dp/tp/stage (spec: {spec!r})")
+        try:
+            size = int(val)
+        except ValueError:
+            raise ValueError(f"mesh axis {name.strip()!r} has non-"
+                             f"integer size {val!r}") from None
+        if size < 1:
+            raise ValueError(f"mesh axis {name.strip()!r} has size "
+                             f"{size} < 1")
+        if axis in sizes:
+            raise ValueError(f"mesh axis {axis!r} given twice in "
+                             f"{spec!r}")
+        sizes[axis] = size
+    canon = [(a, sizes[a]) for a in ("data", "model", "stage")
+             if sizes.get(a, 1) > 1]
+    if not canon:
+        raise ValueError(f"mesh spec {spec!r} names no axis wider "
+                         f"than 1 device")
+    return tuple(s for _, s in canon), tuple(a for a, _ in canon)
 
 
 def force_host_devices(n: int) -> None:

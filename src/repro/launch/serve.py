@@ -22,10 +22,14 @@ fraction) prints with the scheduler stats.  ``--arrival-rate`` replays
 the request set as an open-loop Poisson arrival process instead of
 queueing everything up front.
 
-``--dp-mesh N`` serves the vision tower mesh-sharded: bucket solves
-gain the device-placement axis and batched invocations run
-data-parallel over an N-device ``data`` mesh (fake CPU devices are
-forced when the host has fewer — docs/distributed.md).
+``--mesh dp=2,tp=2,stage=2`` serves the vision tower mesh-sharded:
+bucket solves gain the device-placement axis over the named topology
+(dp on the ``data`` axis, tensor-parallel weight sharding on
+``model``, pipeline stages on ``stage`` — any subset, size-1 axes
+dropped) and batched invocations run sharded over the resulting mesh
+(fake CPU devices are forced when the host has fewer —
+docs/distributed.md).  ``--dp-mesh N`` is the back-compat shorthand
+for ``--mesh dp=N``.
 
 Observability (docs/observability.md): ``--trace PATH`` writes one
 JSON line per span (admit/flush/queue_wait/infer_batch/plan/
@@ -64,9 +68,14 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrival rate in req/s "
                          "(0: all requests queued up front)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve the vision tower sharded over a device "
+                         "mesh, e.g. 'dp=2,tp=2' or 'stage=4' (axes: "
+                         "dp/tp/stage; fake CPU devices forced as "
+                         "needed)")
     ap.add_argument("--dp-mesh", type=int, default=0,
-                    help="serve the vision tower data-parallel over an "
-                         "N-device 'data' mesh (0: single device)")
+                    help="back-compat shorthand for --mesh dp=N "
+                         "(0: single device)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write request-scoped trace spans as JSONL")
     ap.add_argument("--metrics-dump", action="store_true",
@@ -79,13 +88,23 @@ def main():
     if args.profile and args.vision_every <= 0:
         ap.error("--profile prices the vision plan path; it needs "
                  "--vision-every > 0 to have any effect")
-    if args.dp_mesh > 1 and args.vision_every <= 0:
-        ap.error("--dp-mesh shards the vision plan path; it needs "
-                 "--vision-every > 0 to have any effect")
+    if args.mesh and args.dp_mesh > 1:
+        ap.error("--dp-mesh is the shorthand for --mesh dp=N; pass "
+                 "one or the other")
     if args.dp_mesh > 1:
+        args.mesh = f"dp={args.dp_mesh}"
+    mesh_spec = None
+    if args.mesh:
+        if args.vision_every <= 0:
+            ap.error("--mesh shards the vision plan path; it needs "
+                     "--vision-every > 0 to have any effect")
+        from .mesh import force_host_devices, parse_mesh_spec
+        mesh_spec = parse_mesh_spec(args.mesh)
+        n_dev = 1
+        for s in mesh_spec[0]:
+            n_dev *= s
         # must happen before jax initialises its backends
-        from .mesh import force_host_devices
-        force_host_devices(args.dp_mesh)
+        force_host_devices(n_dev)
 
     import jax
     import jax.numpy as jnp
@@ -110,9 +129,9 @@ def main():
                 HardwareProfile.load(args.profile), fallback=cost_model,
                 policy=policy)
         mesh = None
-        if args.dp_mesh > 1:
+        if mesh_spec is not None:
             from .mesh import make_mesh_compat
-            mesh = make_mesh_compat((args.dp_mesh,), ("data",))
+            mesh = make_mesh_compat(*mesh_spec)
         plan_server = PlanServer(
             lambda s: conv_tower(s, depth=2, width=8),
             cost_model,

@@ -47,7 +47,7 @@ from ..core.costs import CostModel, prim_cost_key, transform_cost_key
 from ..core.layouts import LAYOUT_BY_NAME
 from ..core.plan import CompiledNet
 from ..core.primitives import convert_layout
-from ..core.selection import SelectionResult
+from ..core.selection import Placement, PlacementPricing, SelectionResult
 from ..serving.bucketing import BucketPolicy, bucket_scenario
 
 __all__ = ["InstrumentedNet", "plan_predictions", "DriftEntry",
@@ -61,34 +61,60 @@ def _net_batch(sel: SelectionResult) -> int:
 # ----------------------------------------------------------------------
 # predicted costs, per node and per edge — the objective, itemized
 # ----------------------------------------------------------------------
-def plan_predictions(sel: SelectionResult, cost: CostModel
+def plan_predictions(sel: SelectionResult, cost: CostModel,
+                     mesh_axes: Optional[Dict[str, int]] = None
                      ) -> Dict[str, Dict[Tuple, float]]:
     """Itemize the solver's objective for one plan.
 
-    Returns ``{"node": {nid: s}, "edge": {(src, dst): s}}`` — node
-    entries are the chosen primitive's cost at the node's scenario
-    (whole batched invocation, ``scn.n`` included, exactly what
-    ``selection._build`` put in the cost vector); edge entries are the
-    realized conversion chain (per-image hop costs x minibatch) or the
-    fused transform.  Only mesh-less (all-``rep``) plans are supported —
-    placement-solved plans add collective terms this itemization does
-    not model.
+    Returns ``{"node": {nid: s}, "edge": {(src, dst): s},
+    "collective": {...}}`` — node entries are the chosen primitive's
+    compute at the node's (batched, placement-sharded) scenario,
+    exactly what ``selection._build`` put in the cost vector; edge
+    entries are the realized conversion chain (per-image hop costs x
+    the images the transform touches) or the fused transform.
+
+    For a placement-solved plan pass the ``mesh_axes`` it was solved
+    for: the collective terms are then itemized under ``"collective"``
+    — ``("node", nid)`` for intra-node terms (the tp channel
+    all-gather, the output delivery gather, the pp balance prior) and
+    ``("edge", src, dst)`` for resharding / stage-boundary transfers —
+    all derived from the same :class:`~repro.core.selection.
+    PlacementPricing` the solver priced with.  Without ``mesh_axes``
+    only mesh-less (all-``rep``) plans are supported.
     """
-    if any(ch.placement != "rep" for ch in sel.choices.values()):
+    placed = any(ch.placement != "rep" for ch in sel.choices.values())
+    if placed and mesh_axes is None:
         raise ValueError("plan_predictions models mesh-less plans only "
-                         "(device placements add collective terms)")
+                         "unless mesh_axes= names the topology the "
+                         "plan was solved for (device placements add "
+                         "collective terms)")
     nb = _net_batch(sel)
     net = sel.net
+    pm = PlacementPricing(net, cost, mesh_axes) if placed else None
+    pl_of = {nid: Placement.parse(ch.placement)
+             for nid, ch in sel.choices.items()}
+
     nodes: Dict[Tuple, float] = {}
     for node in net.conv_nodes():
         prim = sel.choices[node.id].primitive
-        nodes[node.id] = float(cost.primitive_cost(prim, node.scn))
+        c_rep = float(cost.primitive_cost(prim, node.scn))
+        if pm is None:
+            nodes[node.id] = c_rep
+        else:
+            compute, _ = pm.conv_cost(node, prim, pl_of[node.id], c_rep)
+            nodes[node.id] = float(compute)
+
+    def scale(src: str, dst: str) -> float:
+        if pm is None:
+            return float(nb)
+        return float(pm.transform_images(pl_of[src], pl_of[dst]))
+
     edges: Dict[Tuple, float] = {}
     for (src, dst), chain in sel.conversions.items():
         shape = net.nodes[src].out_shape
         per_img = sum(cost.transform_cost(a, b, shape, "float32")
                       for a, b in zip(chain, chain[1:]))
-        edges[(src, dst)] = float(per_img) * nb
+        edges[(src, dst)] = float(per_img) * scale(src, dst)
     for (src, dst), kind in sel.fusions.items():
         cu, cv = sel.choices[src], sel.choices[dst]
         if kind == "in":
@@ -97,8 +123,21 @@ def plan_predictions(sel: SelectionResult, cost: CostModel
         else:
             per_img = cost.fused_out_cost(cu.primitive,
                                           net.nodes[src].scn, cv.l_in)
-        edges[(src, dst)] = float(per_img) * nb
-    return {"node": nodes, "edge": edges}
+        edges[(src, dst)] = float(per_img) * scale(src, dst)
+
+    coll: Dict[Tuple, float] = {}
+    if pm is not None:
+        for nid in net.order:
+            extra = pm.node_extra(net.nodes[nid], pl_of[nid])
+            if extra:
+                coll[("node", nid)] = float(extra)
+        for dst in net.order:
+            for src in net.nodes[dst].inputs:
+                img = 4.0 * float(np.prod(net.nodes[src].out_shape))
+                c = pm.edge_collective(pl_of[src], pl_of[dst], img)
+                if c:
+                    coll[("edge", src, dst)] = float(c)
+    return {"node": nodes, "edge": edges, "collective": coll}
 
 
 # ----------------------------------------------------------------------
@@ -228,6 +267,9 @@ class DriftEntry:
     layout: str               # "l_in->l_out" wire layouts
     bucket: str               # calibration bucket key
     predicted_s: float
+    #: device placement of the node ("rep"/"dp"/"tp"/"pp<stage>"), or
+    #: "src->dst" placements for an edge
+    placement: str = "rep"
     ewma_observed_s: float = 0.0
     drift: float = 0.0        # EWMA of log(observed / predicted)
     n: int = 0
@@ -297,6 +339,7 @@ class DriftDetector:
                     "node", nid, ch.primitive.name,
                     f"{ch.l_in}->{ch.l_out}", b.key(),
                     predicted_s=pred["node"][nid],
+                    placement=str(ch.placement),
                     profile_key=prim_cost_key(ch.primitive.name, b))
                 self.entries[key] = e
             e.predicted_s = pred["node"][nid]
@@ -325,6 +368,8 @@ class DriftDetector:
                     "->".join(chain) if chain else "fused",
                     "x".join(map(str, net.nodes[src].out_shape)),
                     predicted_s=pred["edge"][(src, dst)],
+                    placement=f"{sel.choices[src].placement}->"
+                              f"{sel.choices[dst].placement}",
                     profile_key=pkey, per_image_div=nb)
                 self.entries[key] = e
             e.predicted_s = pred["edge"][(src, dst)]
@@ -359,6 +404,7 @@ class DriftDetector:
             rows.append({
                 "kind": e.kind, "node": e.nid, "primitive": e.primitive,
                 "layout": e.layout, "bucket": e.bucket,
+                "placement": e.placement,
                 "predicted_ms": e.predicted_s * 1e3,
                 "observed_ms": e.ewma_observed_s * 1e3,
                 "ratio": e.ratio(), "drift": e.drift, "n": e.n,

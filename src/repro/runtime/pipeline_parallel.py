@@ -25,7 +25,17 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["pipeline_apply"]
+__all__ = ["pipeline_apply", "pipeline_ticks"]
+
+
+def pipeline_ticks(s: int, n_micro: int) -> int:
+    """Fill-drain tick count of the GPipe schedule: ``n_micro + s - 1``
+    (the bubble term the solver's pp node costs scale by — see
+    ``selection.PlacementPricing``)."""
+    if s < 1 or n_micro < 1:
+        raise ValueError(f"need s >= 1 and n_micro >= 1, got "
+                         f"s={s} n_micro={n_micro}")
+    return n_micro + s - 1
 
 
 def pipeline_apply(mesh: Mesh, stage_fn: Callable, stage_params,
@@ -37,7 +47,7 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, stage_params,
     x: (n_micro, micro_b, ...) microbatched input (replicated).
     """
     s = mesh.shape[axis]
-    t_total = n_micro + s - 1
+    t_total = pipeline_ticks(s, n_micro)
 
     def per_stage(params, xs):
         stage = jax.lax.axis_index(axis)

@@ -28,7 +28,8 @@ from .plan_cache import (
 )
 from .scheduler import ContinuousScheduler
 from .server import PlanServer
-from .towers import conv_stack, conv_tower
+from .towers import (bottleneck_tower, conv_stack, conv_tower,
+                     uniform_stack)
 
 __all__ = [
     "BucketPolicy", "bucket_key", "bucket_shape", "bucket_scenario",
@@ -37,5 +38,6 @@ __all__ = [
     "LRU", "PlanDiskCache", "plan_key",
     "selection_from_payload", "selection_to_payload",
     "ContinuousScheduler",
-    "PlanServer", "conv_tower", "conv_stack",
+    "PlanServer", "conv_tower", "conv_stack", "bottleneck_tower",
+    "uniform_stack",
 ]

@@ -29,7 +29,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from ..core.graph import Net
 from ..core.ioutil import atomic_write_text
 from ..core.primitives import registry
-from ..core.selection import Choice, SelectionResult
+from ..core.selection import Choice, Placement, SelectionResult
 
 __all__ = ["PLAN_SCHEMA", "plan_key", "selection_to_payload",
            "selection_from_payload", "PlanDiskCache", "LRU"]
@@ -39,7 +39,10 @@ __all__ = ["PLAN_SCHEMA", "plan_key", "selection_to_payload",
 #:    plans predate fused-edge pricing and must re-solve
 #: 3: per-node device placements joined the choices (the unified
 #:    choice-space mesh axis); v2 plans predate placement solving
-PLAN_SCHEMA = 3
+#: 4: placements grew structure — tp and pp<stage> joined {dp, rep}
+#:    and round-trip as their canonical strings; v3 plans were solved
+#:    over the two-kind domain and must re-solve
+PLAN_SCHEMA = 4
 
 
 def plan_key(net_fingerprint: str, bucket_key: str,
@@ -79,7 +82,10 @@ def selection_from_payload(payload: Dict[str, Any],
     choices: Dict[str, Choice] = {}
     for nid, (pname, l_in, l_out, placement) in payload["choices"].items():
         prim = by_name[pname] if pname is not None else None
-        choices[nid] = Choice(prim, l_in, l_out, str(placement))
+        # placements persist as canonical strings ("rep", "dp", "tp",
+        # "pp<stage>"); parse restores the structured form
+        choices[nid] = Choice(prim, l_in, l_out,
+                              Placement.parse(str(placement)))
     conversions: Dict[Tuple[str, str], List[str]] = {
         (src, dst): list(chain)
         for src, dst, chain in payload["conversions"]}

@@ -35,11 +35,13 @@ Three execution entry points:
 
 With a device ``mesh``, batched buckets solve the unified choice space
 (primitive × layout × device placement — ``select_pbqp(...,
-mesh_axes=)``), dp-carrying plans compile mesh-sharded
+mesh_axes=)``) over the full placement domain the topology admits
+({rep, dp} plus tp on a ``model`` axis and pipeline stages on a
+``stage`` axis), sharded plans compile mesh-sharded
 (``compile_plan(..., mesh=)``), the mesh topology fingerprint joins
 every cache key (a plan solved for one topology is never served to
-another), and :meth:`infer_batch` runs each bucket group data-parallel
-across the mesh's ``data`` axis.  See docs/distributed.md.
+another), and :meth:`infer_batch` runs each bucket group sharded
+across the mesh.  See docs/distributed.md.
 
 Misses can be taken off the caller's thread with :meth:`PlanServer.
 prefetch` (async solve+compile).  Cache bookkeeping (and the
@@ -111,9 +113,10 @@ class PlanServer:
         self.cost = cost_model
         self.fuse = fuse
         #: device mesh for batched executables: batch-bucket solves gain
-        #: the placement axis over the mesh's "data" axis, and
-        #: dp-carrying plans compile mesh-sharded (``infer_batch`` then
-        #: runs each bucket group data-parallel across the mesh)
+        #: the placement axis over the mesh's axes (dp on the batch
+        #: axes, tp on "model", pp stages on "stage"), and sharded
+        #: plans compile mesh-sharded (``infer_batch`` then runs each
+        #: bucket group sharded across the mesh)
         self.mesh = mesh
         self._mesh_axes = mesh_shape_dict(mesh) if mesh is not None \
             else None
@@ -235,10 +238,11 @@ class PlanServer:
             t0 = time.perf_counter()
             # XLA compile + warm-up outside the lock: hot buckets must
             # not stall behind a cold bucket compiling.  Mesh-sharded
-            # compilation only when the plan actually carries dp nodes
-            # (an all-rep plan on a mesh is just the plain executable).
+            # compilation only when the plan actually carries sharded
+            # (dp/tp/pp) nodes — an all-rep plan on a mesh is just the
+            # plain executable.
             mesh = self.mesh if nb > 1 and any(
-                ch.placement == "dp" for ch in sel.choices.values()) \
+                ch.placement != "rep" for ch in sel.choices.values()) \
                 else None
             cnet = compile_plan(sel, params, jit=self.jit, batch=nb,
                                 mesh=mesh)

@@ -17,7 +17,8 @@ from typing import Tuple
 
 from ..core.graph import Net, fc, global_avgpool, maxpool, relu
 
-__all__ = ["conv_tower", "conv_stack"]
+__all__ = ["conv_tower", "conv_stack", "uniform_stack",
+           "bottleneck_tower"]
 
 
 def conv_tower(shape_chw: Tuple[int, int, int], *, depth: int = 3,
@@ -66,4 +67,58 @@ def conv_stack(shape_chw: Tuple[int, int, int], *, depth: int = 2,
         m = width << i
         x = net.conv(f"conv{i}", x, k=k, m=m, pad=k // 2)
         x = net.op(f"relu{i}", [x], relu())
+    return net
+
+
+def uniform_stack(shape_chw: Tuple[int, int, int], *, depth: int = 4,
+                  k: int = 3) -> Net:
+    """A *shape-preserving* conv/relu chain: every layer maps
+    ``(C, H, W) -> (C, H, W)`` (``m == c``, stride 1, "same" pad).
+
+    This is the pipelineable fixture: a single linear chain whose
+    activations all share one shape, which is exactly what
+    :func:`~repro.core.selection.pp_chain` demands — the pipeline
+    executor rotates a fixed-shape carry between stages.  The pp
+    placement axis is only ever *offered* on nets like this one.
+    """
+    c, h, w = shape_chw
+    net = Net(f"uniform{depth}c{c}")
+    x = net.input("data", (c, h, w))
+    for i in range(depth):
+        x = net.conv(f"conv{i}", x, k=k, m=c, pad=k // 2)
+        x = net.op(f"relu{i}", [x], relu())
+    return net
+
+
+def bottleneck_tower(shape_chw: Tuple[int, int, int], *,
+                     head_depth: int = 3, head_width: int = 8,
+                     body_depth: int = 2, body_width: int = 512,
+                     k: int = 3) -> Net:
+    """A tower built to exceed one device's arithmetic-intensity sweet
+    spot: a thin widening head shrinks the spatial extent to 1x1, then
+    fat ``body_width``-channel convs run at 1x1 spatial — each body
+    layer streams a ``body_width^2 k^2`` weight tensor over almost no
+    activations, so it is *weight-bandwidth* bound.  dp replicates
+    those weights on every device and gains nothing; tp shards them
+    ``D_tp`` ways and cuts the per-device traffic by the same factor —
+    the mixed tp+dp-beats-pure-dp headline fixture of
+    ``benchmarks/bench_parallelism.py``.
+    """
+    c, h, w = shape_chw
+    net = Net(f"bottleneck{head_depth}x{body_depth}w{body_width}")
+    x = net.input("data", (c, h, w))
+    for i in range(head_depth):
+        m = head_width << i
+        x = net.conv(f"head{i}", x, k=k, m=m, pad=k // 2)
+        x = net.op(f"hrelu{i}", [x], relu())
+        _, ch, cw = net.nodes[x].out_shape
+        if min(ch, cw) >= 2:
+            x = net.op(f"hpool{i}", [x], maxpool(2, 2))
+    # crush whatever spatial extent remains to 1x1
+    _, ch, cw = net.nodes[x].out_shape
+    if min(ch, cw) >= 2:
+        x = net.op("crush", [x], maxpool(min(ch, cw), min(ch, cw)))
+    for i in range(body_depth):
+        x = net.conv(f"body{i}", x, k=k, m=body_width, pad=k // 2)
+        x = net.op(f"brelu{i}", [x], relu())
     return net

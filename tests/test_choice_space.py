@@ -163,3 +163,140 @@ class TestMeshCompileValidation:
         sel = select_pbqp(net, AnalyticCostModel(),
                           mesh_axes={"data": 4})
         assert all(c.placement == "rep" for c in sel.choices.values())
+
+
+class TestPlacement:
+    """The structured placement domain: {rep, dp, tp, pp<stage>}."""
+
+    def test_canonical_strings_and_structure(self):
+        from repro.core.choice_space import Placement
+
+        assert Placement("rep") == "rep"
+        assert Placement("dp") == "dp"
+        assert Placement("tp") == "tp"
+        assert Placement("pp", 3) == "pp3"
+        p = Placement("pp", 2)
+        assert p.kind == "pp" and p.stage == 2
+        assert Placement("dp").kind == "dp" and Placement("dp").stage == 0
+        # str subclass: hashing and dict keys interop with plain strings
+        assert hash(Placement("dp")) == hash("dp")
+        assert {"dp": 1}[Placement("dp")] == 1
+
+    def test_parse_round_trips(self):
+        from repro.core.choice_space import Placement
+
+        for s in ("rep", "dp", "tp", "pp0", "pp7"):
+            p = Placement.parse(s)
+            assert p == s
+            assert Placement.parse(p) is p  # idempotent on instances
+            assert Placement.parse(str(p)) == p
+
+    def test_invalid_placements_raise(self):
+        import pytest
+        from repro.core.choice_space import Placement
+
+        with pytest.raises(ValueError):
+            Placement("mp")
+        with pytest.raises(ValueError):
+            Placement("pp", -1)
+        for bad in ("", "pp", "ppx", "dp2", "sharded"):
+            with pytest.raises(ValueError):
+                Placement.parse(bad)
+
+
+class TestWorldSizeOneCollectives:
+    """Regression (satellite of the parallelism PR): every ring-model
+    collective must cost exactly 0.0 for a 1-wide group — a tp/dp group
+    of one device IS replication, and any nonzero (or divide-by-zero
+    inf) term would make the solver and the 1-wide mesh disagree."""
+
+    def test_all_collective_kinds_free_at_world_size_one(self):
+        from repro.core.costs import (COLLECTIVE_KINDS, CPU_SPEC,
+                                      collective_time)
+
+        for kind in COLLECTIVE_KINDS:
+            assert collective_time(CPU_SPEC, kind, 1e9, 1) == 0.0, kind
+
+    def test_free_even_with_zero_link_bandwidth(self):
+        """n=1 must short-circuit BEFORE touching link_bw: a host spec
+        with no interconnect still prices 1-wide groups (and prices
+        2-wide ones infinite, not NaN)."""
+        import dataclasses
+
+        from repro.core.costs import (COLLECTIVE_KINDS, CPU_SPEC,
+                                      collective_time)
+
+        spec = dataclasses.replace(CPU_SPEC, link_bw=0.0)
+        for kind in COLLECTIVE_KINDS:
+            assert collective_time(spec, kind, 1e6, 1) == 0.0, kind
+            assert collective_time(spec, kind, 1e6, 2) == float("inf"), \
+                kind
+
+    def test_one_wide_mesh_prices_identically_to_meshless(self):
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import placements_for, select_pbqp
+        from repro.serving.towers import conv_stack
+
+        net = conv_stack((4, 16, 16), depth=2, width=8).with_batch(4)
+        assert placements_for(net, {"data": 1, "model": 1}) == ["rep"]
+        cm = AnalyticCostModel()
+        sel1 = select_pbqp(net, cm, mesh_axes={"data": 1, "model": 1})
+        sel0 = select_pbqp(net, cm)
+        assert sel1.predicted_cost == sel0.predicted_cost
+        assert all(c.placement == "rep" for c in sel1.choices.values())
+
+
+class TestStageMonotonicity:
+    """pp edge pricing: stages may only move forward along the chain,
+    and pipeline membership is all-or-nothing."""
+
+    def test_edge_collective_encodes_the_constraints(self):
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import Placement, PlacementPricing
+        from repro.serving.towers import uniform_stack
+
+        net = uniform_stack((8, 8, 8), depth=4).with_batch(8)
+        cm = AnalyticCostModel()
+        pm = PlacementPricing(net, cm, {"stage": 4})
+        img = 4.0 * 8 * 8 * 8
+        pp = lambda s: Placement("pp", s)
+        # backward hops and pipeline islands are infinite
+        assert pm.edge_collective(pp(2), pp(1), img) == float("inf")
+        assert pm.edge_collective(pp(0), Placement("rep"), img) \
+            == float("inf")
+        assert pm.edge_collective(Placement("rep"), pp(0), img) \
+            == float("inf")
+        # same stage is free; forward hops price per boundary crossed
+        assert pm.edge_collective(pp(1), pp(1), img) == 0.0
+        one = pm.edge_collective(pp(0), pp(1), img)
+        assert one > 0.0
+        assert pm.edge_collective(pp(0), pp(3), img) \
+            == pytest.approx(3 * one)
+
+    def test_solved_pipeline_is_monotone_and_covers_the_mesh(self):
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import Placement, select_pbqp
+        from repro.serving.towers import uniform_stack
+
+        net = uniform_stack((8, 8, 8), depth=6).with_batch(8)
+        sel = select_pbqp(net, AnalyticCostModel(),
+                          mesh_axes={"stage": 4})
+        pls = [Placement.parse(sel.choices[n].placement)
+               for n in net.order]
+        assert all(p.kind == "pp" for p in pls)
+        stages = [p.stage for p in pls]
+        assert stages == sorted(stages), "backward stage hop"
+        assert stages[0] == 0 and stages[-1] == 3, \
+            "pipeline must span the whole stage axis"
+
+    def test_non_pipelineable_nets_get_no_pp(self):
+        """conv_tower pools change shapes mid-chain: pp_chain rejects
+        it, so the stage axis adds nothing to its domain."""
+        from repro.core.selection import pp_chain, placements_for
+        from repro.serving.towers import conv_tower, uniform_stack
+
+        tower = conv_tower((4, 32, 32), depth=3, width=8).with_batch(8)
+        assert pp_chain(tower) is None
+        assert placements_for(tower, {"stage": 4}) == ["rep"]
+        chain = uniform_stack((4, 8, 8), depth=2).with_batch(8)
+        assert pp_chain(chain) == chain.order

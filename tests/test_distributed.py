@@ -116,6 +116,61 @@ class TestPipelineParallel:
         assert "OK" in out
 
 
+    def test_pipeline_ticks_formula(self):
+        """Fill-drain schedule length: T = n_micro + S - 1."""
+        from repro.runtime.pipeline_parallel import pipeline_ticks
+        assert pipeline_ticks(1, 1) == 1
+        assert pipeline_ticks(4, 8) == 11
+        assert pipeline_ticks(2, 1) == 2
+        with pytest.raises(ValueError):
+            pipeline_ticks(0, 4)
+        with pytest.raises(ValueError):
+            pipeline_ticks(4, 0)
+
+    def test_degenerate_single_stage(self):
+        """S=1: the pipeline IS the stage function (one tick per
+        microbatch, no boundary transfers)."""
+        out = run_with_devices("""
+            import jax.numpy as jnp, numpy as np
+            from repro.runtime import pipeline_apply
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((1,), ('stage',))
+            rng = np.random.default_rng(0)
+            w = jnp.asarray(rng.normal(size=(1, 8, 8)) * 0.3, jnp.float32)
+            x = jnp.asarray(rng.normal(size=(4, 2, 8)), jnp.float32)
+            y = pipeline_apply(mesh, lambda p, xm: jnp.tanh(xm @ p['w']),
+                               {'w': w}, x, n_micro=4)
+            ref = jnp.tanh(x @ w[0])
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 1e-6, err
+            print('OK', err)
+        """, n_devices=1)
+        assert "OK" in out
+
+    def test_degenerate_single_microbatch(self):
+        """n_micro=1: pure fill-drain bubble (T = S ticks), still
+        correct."""
+        out = run_with_devices("""
+            import jax.numpy as jnp, numpy as np
+            from repro.runtime import pipeline_apply
+            from repro.launch.mesh import make_mesh_compat
+            S = 4
+            mesh = make_mesh_compat((S,), ('stage',))
+            rng = np.random.default_rng(1)
+            w = jnp.asarray(rng.normal(size=(S, 8, 8)) * 0.3, jnp.float32)
+            x = jnp.asarray(rng.normal(size=(1, 3, 8)), jnp.float32)
+            y = pipeline_apply(mesh, lambda p, xm: jnp.tanh(xm @ p['w']),
+                               {'w': w}, x, n_micro=1)
+            ref = x
+            for s in range(S):
+                ref = jnp.tanh(ref @ w[s])
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 1e-5, err
+            print('OK', err)
+        """, n_devices=4)
+        assert "OK" in out
+
+
 class TestCompression:
     def test_quantized_psum_close_to_exact(self):
         out = run_with_devices("""
@@ -268,6 +323,114 @@ class TestShardedPlan:
                     np.testing.assert_allclose(out1[0][k], out2[0][k],
                                                rtol=2e-3, atol=2e-3)
                 srv2.close()
+            print('OK')
+        """)
+        assert "OK" in out
+
+
+class TestFullParallelismPlans:
+    """The enlarged placement space {rep, dp, tp, pp} end to end:
+    solve -> compile -> execute, verified output-identical to the
+    unsharded executable (docs/distributed.md)."""
+
+    def test_mixed_tp_dp_plan_matches_unsharded(self):
+        out = run_with_devices("""
+            import numpy as np
+            from repro.core.costs import AnalyticCostModel
+            from repro.core.plan import compile_plan
+            from repro.core.selection import Placement, select_pbqp
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving.towers import bottleneck_tower
+
+            mesh = make_mesh_compat((2, 4), ('data', 'model'))
+            net = bottleneck_tower((4, 16, 16)).with_batch(8)
+            cm = AnalyticCostModel()
+            sel = select_pbqp(net, cm,
+                              mesh_axes={'data': 2, 'model': 4})
+            kinds = {Placement.parse(c.placement).kind
+                     for c in sel.choices.values()}
+            # the fat 1x1-spatial body is weight-bandwidth bound: the
+            # solver must shard its weights (tp), not its batch
+            assert 'tp' in kinds and 'dp' in kinds, kinds
+            params = net.init_params(0)
+            x = np.random.default_rng(0).normal(
+                size=(8, 4, 16, 16)).astype(np.float32)
+            cn = compile_plan(sel, params, batch=8, mesh=mesh)
+            assert cn.mesh_mode == 'tp_shard_map', cn.mesh_mode
+            assert cn.tp_nodes > 0 and cn.dp_nodes > 0
+            cn0 = compile_plan(select_pbqp(net, cm), params, batch=8)
+            out, out0 = cn(x), cn0(x)
+            assert set(out) == set(out0)
+            for k in out:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(out0[k]),
+                    rtol=2e-3, atol=2e-3)
+            print('OK', sorted(kinds))
+        """)
+        assert "OK" in out
+
+    def test_solved_pipeline_matches_unsharded(self):
+        out = run_with_devices("""
+            import numpy as np
+            from repro.core.costs import AnalyticCostModel
+            from repro.core.plan import compile_plan
+            from repro.core.selection import Placement, select_pbqp
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving.towers import uniform_stack
+
+            mesh = make_mesh_compat((4,), ('stage',))
+            net = uniform_stack((8, 8, 8), depth=6).with_batch(8)
+            cm = AnalyticCostModel()
+            sel = select_pbqp(net, cm, mesh_axes={'stage': 4})
+            assert all(Placement.parse(c.placement).kind == 'pp'
+                       for c in sel.choices.values())
+            params = net.init_params(0)
+            x = np.random.default_rng(0).normal(
+                size=(8, 8, 8, 8)).astype(np.float32)
+            cn = compile_plan(sel, params, batch=8, mesh=mesh)
+            assert cn.mesh_mode == 'pipeline', cn.mesh_mode
+            assert cn.pp_nodes == len(net.order)
+            cn0 = compile_plan(select_pbqp(net, cm), params, batch=8)
+            out, out0 = cn(x), cn0(x)
+            for k in out:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(out0[k]),
+                    rtol=2e-3, atol=2e-3)
+            print('OK')
+        """, n_devices=4)
+        assert "OK" in out
+
+    def test_pure_dp_flattens_over_both_batch_axes(self):
+        """A pure-dp plan prices and runs identically on an (8,) and a
+        (2, 4) mesh — dp shards over ALL non-stage axes."""
+        out = run_with_devices("""
+            import numpy as np
+            from repro.core.costs import AnalyticCostModel
+            from repro.core.plan import compile_plan
+            from repro.core.selection import select_pbqp
+            from repro.launch.mesh import make_mesh_compat
+            from repro.serving.towers import conv_stack
+
+            cm = AnalyticCostModel()
+            net = conv_stack((4, 32, 32), depth=3, width=8).with_batch(8)
+            sel_24 = select_pbqp(net, cm,
+                                 mesh_axes={'data': 2, 'model': 4})
+            sel_8 = select_pbqp(net, cm, mesh_axes={'data': 8})
+            assert sel_24.predicted_cost == sel_8.predicted_cost
+            assert all(c.placement == 'dp'
+                       for c in sel_24.choices.values())
+            mesh = make_mesh_compat((2, 4), ('data', 'model'))
+            params = net.init_params(0)
+            x = np.random.default_rng(0).normal(
+                size=(8, 4, 32, 32)).astype(np.float32)
+            cn = compile_plan(sel_24, params, batch=8, mesh=mesh)
+            assert cn.mesh_mode == 'shard_map', cn.mesh_mode
+            cn0 = compile_plan(select_pbqp(net, cm), params, batch=8)
+            out, out0 = cn(x), cn0(x)
+            for k in out:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(out0[k]),
+                    rtol=2e-3, atol=2e-3)
             print('OK')
         """)
         assert "OK" in out

@@ -469,7 +469,7 @@ class TestDriftDetector:
         assert det_ok.recalibrate(profile) == []
         assert profile.content_hash() == h1
 
-    def test_rejects_mesh_plans(self):
+    def test_rejects_mesh_plans_without_mesh_axes(self):
         from repro.obs.drift import plan_predictions
 
         net, sel = self._plan()
@@ -478,6 +478,41 @@ class TestDriftDetector:
                            "placement", "dp")
         with pytest.raises(ValueError, match="mesh-less"):
             plan_predictions(sel, CM)
+
+    @pytest.mark.parametrize("mesh_axes", [
+        {"data": 2, "model": 4}, {"stage": 4}])
+    def test_itemizes_placed_plans_with_mesh_axes(self, mesh_axes):
+        """With mesh_axes, a placement-solved plan itemizes into node
+        compute + edge transforms + collective terms that sum back to
+        the solver's objective exactly — the placement ledger comes
+        from the same PlacementPricing the solver priced with."""
+        from repro.obs.drift import plan_predictions
+        from repro.serving.towers import bottleneck_tower, uniform_stack
+
+        if "stage" in mesh_axes:
+            net = uniform_stack((8, 8, 8), depth=6).with_batch(8)
+        else:
+            net = bottleneck_tower((4, 16, 16)).with_batch(8)
+        sel = select_pbqp(net, CM, mesh_axes=mesh_axes)
+        assert any(c.placement != "rep" for c in sel.choices.values())
+        pred = plan_predictions(sel, CM, mesh_axes=mesh_axes)
+        assert pred["collective"], "placed plan must itemize collectives"
+        total = (sum(pred["node"].values()) +
+                 sum(pred["edge"].values()) +
+                 sum(pred["collective"].values()))
+        assert total == pytest.approx(sel.predicted_cost, rel=1e-9)
+
+    def test_report_rows_carry_placement(self):
+        from repro.obs.drift import DriftDetector, plan_predictions
+
+        net, sel = self._plan()
+        det = DriftDetector(CM, threshold=2.0)
+        det.observe(sel, self._synthetic(
+            plan_predictions(sel, CM), 1.0))
+        rows = det.report()
+        assert rows
+        assert all(r["placement"] == "rep" for r in rows
+                   if r["kind"] == "node")
 
 
 class TestDriftEndToEnd:

@@ -120,21 +120,57 @@ def check_warm_matches_cold(pb: PBQP, rng: np.random.Generator) -> None:
     assert exact_seed.stats["WARM_DIST"] == 0
 
 
-def check_selection_legal(shape, depth: int, width: int) -> None:
+def check_selection_legal(shape, depth: int, width: int,
+                          mesh_axes=None, batch: int = 1) -> None:
     """select_pbqp output is realizable: every layout-mismatched edge
-    carries a conversion chain (or fused realization)."""
+    carries a conversion chain (or fused realization).  With
+    ``mesh_axes`` the placement axis joins the domain: pipeline stage
+    boundaries are exempt from the no-conversion-on-matching-layouts
+    rule (they wire through logical CHW regardless of the endpoint
+    layouts), stage assignments must be monotone, and sharded kinds
+    must be ones the mesh offers."""
     from repro.core.costs import AnalyticCostModel
-    from repro.core.selection import select_pbqp
-    from repro.serving import conv_tower
+    from repro.core.selection import (Placement, placements_for,
+                                      select_pbqp)
+    from repro.serving.towers import conv_tower, uniform_stack
 
-    net = conv_tower(shape, depth=depth, width=width)
-    sel = select_pbqp(net, AnalyticCostModel(), exact=True)
+    if mesh_axes and "stage" in mesh_axes:
+        # the stage axis only matters on a pipelineable net
+        net = uniform_stack(shape, depth=depth)
+    else:
+        net = conv_tower(shape, depth=depth, width=width)
+    if batch > 1:
+        net = net.with_batch(batch)
+    sel = select_pbqp(net, AnalyticCostModel(), exact=True,
+                      mesh_axes=mesh_axes)
     assert sel.optimal
     assert np.isfinite(sel.predicted_cost)
     assert set(sel.choices) == set(net.order)
+    offered = set(placements_for(net, mesh_axes))
+    pl = {nid: Placement.parse(sel.choices[nid].placement)
+          for nid in net.order}
+    for nid in net.order:
+        assert str(pl[nid]) in offered or pl[nid].kind != "pp", pl[nid]
+        if pl[nid].kind != "pp":
+            assert str(pl[nid]) in offered, pl[nid]
     for (src, dst) in net.edges():
         lo = sel.choices[src].l_out
         li = sel.choices[dst].l_in
+        pu, pv = pl[src], pl[dst]
+        # pipeline membership is all-or-nothing and stage-monotone
+        assert (pu.kind == "pp") == (pv.kind == "pp")
+        if pu.kind == "pp":
+            assert pv.stage >= pu.stage, f"backward hop {src}->{dst}"
+            if pv.stage != pu.stage:
+                # stage boundary: wired through CHW; a conversion
+                # chain, when present, must pass through it
+                chain = sel.conversions.get((src, dst))
+                if lo == "CHW" and li == "CHW":
+                    assert chain is None or "CHW" in chain
+                else:
+                    assert chain is not None and "CHW" in chain, \
+                        f"stage boundary {src}->{dst} not CHW-wired"
+                continue
         if lo == li:
             assert (src, dst) not in sel.conversions
         else:
@@ -161,12 +197,27 @@ class TestSolverProperties:
         check_warm_matches_cold(pb, np.random.default_rng(seed))
 
 
+#: placement domains the property sweep draws from — every mesh kind
+#: the solver offers, plus the meshless baseline
+_MESH_DRAWS = (None, {"data": 2}, {"data": 4}, {"data": 2, "model": 2},
+               {"model": 4}, {"stage": 2}, {"stage": 3})
+
+
 class TestSelectionProperties:
     @settings(max_examples=15, deadline=None)
     @given(st.integers(2, 8), st.integers(10, 28), st.integers(10, 28),
            st.integers(1, 4), st.integers(2, 8))
     def test_plans_legal_under_legalize(self, c, h, w, depth, width):
         check_selection_legal((c, h, w), depth, width)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 8), st.integers(10, 28), st.integers(10, 28),
+           st.integers(1, 4), st.integers(2, 8),
+           st.sampled_from(_MESH_DRAWS), st.sampled_from((1, 4, 8)))
+    def test_plans_legal_with_placements(self, c, h, w, depth, width,
+                                         axes, batch):
+        check_selection_legal((c, h, w), depth, width,
+                              mesh_axes=axes, batch=batch)
 
 
 # ----------------------------------------------------------------------
@@ -192,3 +243,15 @@ class TestSeededSmoke:
                  int(rng.integers(10, 29))),
                 depth=int(rng.integers(1, 5)),
                 width=int(rng.integers(2, 9)))
+
+    def test_selection_legal_with_placements_seeded(self):
+        rng = np.random.default_rng(7)
+        for _ in range(4):
+            axes = _MESH_DRAWS[int(rng.integers(len(_MESH_DRAWS)))]
+            check_selection_legal(
+                (int(rng.integers(2, 9)), int(rng.integers(10, 29)),
+                 int(rng.integers(10, 29))),
+                depth=int(rng.integers(1, 5)),
+                width=int(rng.integers(2, 9)),
+                mesh_axes=axes,
+                batch=int(rng.choice((1, 4, 8))))

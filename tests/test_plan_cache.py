@@ -44,6 +44,40 @@ class TestSerialization:
         payload = selection_to_payload(sel)
         json.dumps(payload)  # must be pure-JSON serializable
 
+    @pytest.mark.parametrize("mesh_axes,want_kinds", [
+        ({"data": 2, "model": 4}, {"dp", "tp"}),
+        ({"stage": 4}, {"pp"}),
+    ])
+    def test_structured_placements_round_trip(self, tmp_path, mesh_axes,
+                                              want_kinds):
+        """tp and pp<stage> placements survive the JSON disk tier as
+        their canonical strings and come back as structured Placement
+        instances (the PR's headline cache-round-trip criterion)."""
+        from repro.core.selection import Placement
+        from repro.serving.towers import bottleneck_tower, uniform_stack
+
+        if "stage" in mesh_axes:
+            net = uniform_stack((8, 8, 8), depth=6).with_batch(8)
+        else:
+            net = bottleneck_tower((4, 16, 16)).with_batch(8)
+        sel = select_pbqp(net, CM, mesh_axes=mesh_axes)
+        kinds = {Placement.parse(c.placement).kind
+                 for c in sel.choices.values()}
+        assert want_kinds <= kinds, kinds
+        cache = PlanDiskCache(tmp_path)
+        key = plan_key(net.fingerprint(), "b8", CM.version())
+        cache.put(key, selection_to_payload(sel))
+        # the disk tier is real JSON: force a serialize/parse cycle
+        back = selection_from_payload(
+            json.loads(json.dumps(cache.get(key))), net)
+        assert back.predicted_cost == pytest.approx(sel.predicted_cost)
+        for nid, ch in sel.choices.items():
+            b = back.choices[nid]
+            assert b.placement == ch.placement
+            assert isinstance(b.placement, Placement)
+            assert Placement.parse(b.placement).stage == \
+                Placement.parse(ch.placement).stage
+
     def test_unknown_primitive_rejected(self):
         net, sel = _small_selection()
         payload = selection_to_payload(sel)

@@ -201,3 +201,56 @@ class TestSelectionWarmStart:
                             warm_start=prev0)
         assert warm2.predicted_cost == pytest.approx(fresh.predicted_cost)
         assert warm2.optimal
+
+    def test_enlarged_placement_space_same_optimum(self):
+        """A {dp, rep}-era optimum (solved on a data-only mesh) seeds
+        the solve over the enlarged {dp, tp, pp, rep} domain and still
+        reaches the identical optimum — warm starts are pure
+        acceleration, never a constraint, even when the domain the seed
+        was solved over is a strict subset of the new one."""
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import Placement, select_pbqp
+        from repro.serving.towers import bottleneck_tower
+
+        cm = AnalyticCostModel()
+        net = bottleneck_tower((4, 16, 16)).with_batch(8)
+        # seed: the old two-kind world (dp over 8 flattened devices)
+        prev = select_pbqp(net, cm, exact=True, mesh_axes={"data": 8})
+        assert {Placement.parse(c.placement).kind
+                for c in prev.choices.values()} <= {"dp", "rep"}
+        axes = {"data": 2, "model": 4}
+        fresh = select_pbqp(net, cm, exact=True, mesh_axes=axes)
+        warm = select_pbqp(net, cm, exact=True, mesh_axes=axes,
+                           warm_start=prev)
+        assert warm.optimal and fresh.optimal
+        assert warm.predicted_cost == pytest.approx(fresh.predicted_cost)
+        assert warm.solver_stats.get("WARM") == 1
+        # the enlarged space genuinely changes the answer: the warm
+        # solve must follow it to tp, not stick with the dp seed
+        kinds = {Placement.parse(c.placement).kind
+                 for c in warm.choices.values()}
+        assert "tp" in kinds, kinds
+        assert {n: (c.primitive.name if c.primitive else None,
+                    str(c.placement))
+                for n, c in warm.choices.items()} == \
+               {n: (c.primitive.name if c.primitive else None,
+                    str(c.placement))
+                for n, c in fresh.choices.items()}
+
+    def test_pipeline_space_warm_start(self):
+        """Same property on the stage axis: a meshless seed warm-starts
+        a pipeline solve to the fresh optimum."""
+        from repro.core.costs import AnalyticCostModel
+        from repro.core.selection import Placement, select_pbqp
+        from repro.serving.towers import uniform_stack
+
+        cm = AnalyticCostModel()
+        net = uniform_stack((8, 8, 8), depth=6).with_batch(8)
+        prev = select_pbqp(net, cm, exact=True)
+        fresh = select_pbqp(net, cm, exact=True, mesh_axes={"stage": 4})
+        warm = select_pbqp(net, cm, exact=True, mesh_axes={"stage": 4},
+                           warm_start=prev)
+        assert warm.optimal and fresh.optimal
+        assert warm.predicted_cost == pytest.approx(fresh.predicted_cost)
+        assert all(Placement.parse(c.placement).kind == "pp"
+                   for c in warm.choices.values())
