@@ -1,0 +1,379 @@
+"""Chaos benchmark: the PR 7 Poisson trace under a scheduled fault storm.
+
+Four sections, each a falsifiable reliability claim (docs/reliability.md):
+
+* **storm** — replay ONE open-loop Poisson arrival trace (the
+  bench_load machinery) twice: fault-free, then under a deterministic
+  :class:`~repro.reliability.FaultInjector` plan that corrupts plan-
+  cache files, fails compiles, NaN-poisons kernel invocations, shrinks
+  a solve budget, and kills a worker slot mid-dispatch.  Gates:
+
+  - ``zero_wrong_outputs`` — every request that completes under the
+    storm is output-identical (allclose) to its fault-free twin.  A
+    chaos layer that serves wrong answers fast is worse than one that
+    fails loudly; this is the non-negotiable gate.
+  - ``availability`` ≥ 99% — faults degrade (retry, requeue,
+    quarantine + re-solve), they don't refuse.
+  - ``recovery_s`` bounded — after the storm drains, every bucket
+    serves again within the recovery budget (including any quarantine
+    re-solve + recompile it still owes).
+
+* **quarantine** — the circuit-breaker lifecycle end to end on a
+  persistent cache: healthy plan on disk -> injected kernel NaN on its
+  optimal primitive -> breaker trips, cache key rotates, warm-started
+  re-solve *excludes* the primitive, the request still answers
+  correctly -> release -> the rotation token vanishes and the bucket
+  recovers its original plan as a disk *hit* (no re-solve).
+
+* **anytime** — the solve deadline on the PR 8 parallelism tower
+  (``bottleneck_tower`` over a dp×tp mesh): a deadline-armed solve must
+  price within 1.1× of exact.  Reductions solve the tower outright, so
+  the binding-deadline case is exercised on dense random PBQP instances
+  (the B&B-heavy shape tests/test_warm_start.py uses) with the deadline
+  pre-expired — the pure best-so-far completion, the worst anytime can
+  do — gated at mean ≤ 1.1× exact across seeds.
+
+Results land in ``benchmarks/results/chaos.json`` with a ``gates``
+section CI's chaos-smoke job asserts on:
+
+  PYTHONPATH=src python -m benchmarks.bench_chaos
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.bench_load import SHAPES, gen_trace
+
+#: the storm: every fault site fires at a scheduled, deterministic tick
+#: (docs/reliability.md has the taxonomy; windows are [start, start+count))
+STORM_PLAN = ",".join([
+    "plan_cache:corrupt@0+2",   # 2 prewarm disk reads hit torn files
+    "compile:raise@0+2",        # first compile fails twice, retries win
+    "solve:raise@0+1",          # one solve fails: greedy-rung demotion
+    "kernel:nan@6+1",           # NaN-poison two invocations mid-storm:
+    "kernel:nan@14+1",          # breaker trips, banned re-solve, retry
+    "worker:raise@3+1",         # one worker slot dies, group requeues
+])
+
+ANYTIME_SEEDS = (0, 1, 2, 3, 4)
+
+
+def _make_server(cache_dir=None, fault_plan: Optional[str] = None,
+                 seed: int = 0):
+    from repro.core.costs import AnalyticCostModel
+    from repro.reliability import FaultInjector, parse_fault_plan
+    from repro.serving import BucketPolicy, PlanServer, conv_tower
+
+    injector = FaultInjector(parse_fault_plan(fault_plan), seed=seed) \
+        if fault_plan else None
+    policy = BucketPolicy(min_hw=8, max_hw=32, max_n=4)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=4),
+                      AnalyticCostModel(), policy=policy,
+                      lru_capacity=16, cache_dir=cache_dir,
+                      fault_injector=injector,
+                      compile_backoff_s=0.005)
+
+
+def _prewarm(srv) -> None:
+    from repro.serving import bucket_shape
+    buckets = {bucket_shape(s, srv.policy) for s in SHAPES}
+    batches = {srv.policy.bucket_n(n)
+               for n in range(1, srv.policy.max_n + 1)}
+    for f in [srv.prefetch(b, n=nb) for b in buckets for nb in batches]:
+        f.result()
+
+
+def _replay_collect(trace, submit, timeout: float = 180.0
+                    ) -> List[Optional[Dict[str, np.ndarray]]]:
+    """Open-loop replay that keeps each request's *outputs* (None on
+    failure) — the storm's correctness gate compares them elementwise
+    against the fault-free run's."""
+    futs: List[Optional[object]] = [None] * len(trace)
+    done = threading.Event()
+    remaining = [len(trace)]
+    lock = threading.Lock()
+
+    def arm(fut):
+        def cb(_f):
+            with lock:
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    done.set()
+        fut.add_done_callback(cb)
+        return fut
+
+    t0 = time.perf_counter()
+    for i, (at, x) in enumerate(trace):
+        now = time.perf_counter() - t0
+        if at > now:
+            time.sleep(at - now)
+        try:
+            futs[i] = arm(submit(x))
+        except Exception:
+            futs[i] = None  # shed/refused at admission
+            with lock:
+                remaining[0] -= 1
+                if remaining[0] == 0:
+                    done.set()
+    done.wait(timeout=timeout)
+    outs: List[Optional[Dict[str, np.ndarray]]] = []
+    for f in futs:
+        if f is None:
+            outs.append(None)
+            continue
+        try:
+            outs.append(f.result(timeout=1.0))
+        except Exception:
+            outs.append(None)
+    return outs
+
+
+def _run_trace(trace, cache_dir, fault_plan: Optional[str]
+               ) -> Tuple[List[Optional[Dict]], Dict]:
+    from repro.serving import ContinuousScheduler
+    srv = _make_server(cache_dir=cache_dir, fault_plan=fault_plan)
+    _prewarm(srv)
+    sched = ContinuousScheduler(srv, batch_window_s=0.005)
+    outs = _replay_collect(trace, sched.submit)
+    # recovery probe: after the storm drains, every bucket must serve
+    # again — including any quarantine re-solve + recompile still owed
+    t0 = time.perf_counter()
+    probes_ok = True
+    rng = np.random.default_rng(7)
+    for shape in SHAPES:
+        try:
+            probe = srv.infer(
+                rng.normal(size=shape).astype(np.float32))
+            probes_ok &= all(np.isfinite(v).all()
+                             for v in probe.values())
+        except Exception:
+            probes_ok = False
+    recovery_s = time.perf_counter() - t0
+    stats = sched.stats()
+    stats["recovery_s"] = recovery_s
+    stats["recovery_probes_ok"] = probes_ok
+    sched.close()
+    srv.close()
+    return outs, stats
+
+
+def storm_section(rate: float, requests: int, seed: int) -> Dict:
+    trace = gen_trace(rate, requests, seed)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        # populate the disk tier first so the storm's prewarm actually
+        # READS plans — that is where the corrupt-file faults land
+        seed_srv = _make_server(cache_dir=cache_dir)
+        _prewarm(seed_srv)
+        seed_srv.close()
+        base_outs, base_stats = _run_trace(trace, cache_dir, None)
+        storm_outs, storm_stats = _run_trace(trace, cache_dir,
+                                             STORM_PLAN)
+
+    completed = sum(o is not None for o in storm_outs)
+    availability = completed / len(trace)
+    wrong = 0
+    for b, s in zip(base_outs, storm_outs):
+        if s is None or b is None:
+            continue
+        for nid in b:
+            if not np.allclose(b[nid], s[nid], rtol=1e-3, atol=1e-5):
+                wrong += 1
+                break
+    counters = {k: storm_stats[k] for k in (
+        "plan_cache_corrupt", "compile_retries", "compile_fallbacks",
+        "kernel_failures", "quarantines", "worker_deaths",
+        "worker_requeues", "ladder_exact", "ladder_anytime",
+        "ladder_greedy", "ladder_reference", "shed_requests")}
+    return {
+        "requests": len(trace),
+        "completed": completed,
+        "availability": availability,
+        "wrong_outputs": wrong,
+        "faults_fired": {k: v for k, v in counters.items() if v},
+        "recovery_s": storm_stats["recovery_s"],
+        "recovery_probes_ok": storm_stats["recovery_probes_ok"],
+        "baseline_completed": sum(o is not None for o in base_outs),
+        "quarantined_after": storm_stats["quarantined"],
+    }
+
+
+def quarantine_section() -> Dict:
+    """Trip -> banned re-solve -> correct answer -> release -> disk-hit
+    recovery, on one bucket with a persistent cache."""
+    x = np.random.default_rng(3).normal(size=(3, 16, 16)) \
+        .astype(np.float32)
+    with tempfile.TemporaryDirectory() as cache_dir:
+        srv = _make_server(cache_dir=cache_dir)
+        healthy = srv.infer(x)
+        sel0 = srv.plan_for(x.shape)
+        prims0 = sorted({c.primitive.name
+                         for c in sel0.choices.values() if c.primitive})
+        srv.close()
+
+        target = prims0[0]
+        srv = _make_server(cache_dir=cache_dir,
+                           fault_plan=f"kernel:nan@0+1~{target}")
+        out = srv.infer(x)
+        s = srv.stats()
+        sel1 = srv.plan_for(x.shape)
+        prims1 = sorted({c.primitive.name
+                         for c in sel1.choices.values() if c.primitive})
+        correct = all(np.allclose(healthy[k], out[k],
+                                  rtol=1e-3, atol=1e-5) for k in healthy)
+        tripped = s["quarantines"] >= 1
+        banned_excluded = target not in prims1
+
+        hits_before = srv.stats()["plan_disk_hits"]
+        released = srv.release_quarantine(target, x.shape)
+        sel2 = srv.plan_for(x.shape)
+        prims2 = sorted({c.primitive.name
+                         for c in sel2.choices.values() if c.primitive})
+        disk_recovered = \
+            srv.stats()["plan_disk_hits"] == hits_before + 1
+        srv.close()
+    ok = (correct and tripped and banned_excluded and released
+          and prims2 == prims0 and disk_recovered)
+    return {
+        "target": target,
+        "healthy_prims": prims0,
+        "quarantined_prims": prims1,
+        "recovered_prims": prims2,
+        "output_correct_during_quarantine": correct,
+        "tripped": tripped,
+        "banned_excluded": banned_excluded,
+        "released": released,
+        "recovered_via_disk_hit": disk_recovered,
+        "cycle_ok": ok,
+    }
+
+
+def anytime_section() -> Dict:
+    """Deadline-armed solves: the tower (reductions finish it — the
+    deadline must not perturb the optimum) and dense B&B-heavy
+    instances with the deadline pre-expired (worst-case anytime)."""
+    from repro.core.costs import AnalyticCostModel
+    from repro.core.pbqp import PBQP, solve
+    from repro.core.selection import select_pbqp
+    from repro.serving.towers import bottleneck_tower
+
+    cm = AnalyticCostModel()
+    net = bottleneck_tower((4, 16, 16)).with_batch(16)
+    axes = {"data": 2, "model": 4}
+    t0 = time.perf_counter()
+    exact = select_pbqp(net, cm, mesh_axes=axes)
+    exact_s = time.perf_counter() - t0
+    capped = select_pbqp(net, cm, mesh_axes=axes,
+                         deadline_s=max(exact_s * 0.25, 0.01))
+    tower_ratio = capped.predicted_cost / exact.predicted_cost
+
+    def dense(seed: int, n: int = 9, k: int = 4) -> PBQP:
+        rng = np.random.default_rng(seed)
+        pb = PBQP()
+        for i in range(n):
+            pb.add_node(i, rng.uniform(1, 100, size=k))
+        for i in range(n):
+            for j in range(i + 1, n):
+                pb.add_edge(i, j, rng.uniform(0, 50, size=(k, k)))
+        return pb
+
+    ratios = []
+    deadline_fired = 0
+    for seed in ANYTIME_SEEDS:
+        pb = dense(seed)
+        ex = solve(pb, exact=True)
+        # deadline_s=0: already expired at entry — branch-and-bound is
+        # skipped entirely and the RN heuristic completes best-so-far;
+        # deterministic (no wall-clock race) and the worst anytime case
+        an = solve(pb, exact=True, deadline_s=0.0)
+        assert not an.optimal
+        deadline_fired += int(an.stats.get("DEADLINE", 0))
+        ratios.append(an.cost / ex.cost)
+    return {
+        "tower_exact_cost": exact.predicted_cost,
+        "tower_deadline_cost": capped.predicted_cost,
+        "tower_ratio": tower_ratio,
+        "tower_exact_s": exact_s,
+        "dense_ratios": ratios,
+        "dense_mean_ratio": float(np.mean(ratios)),
+        "dense_max_ratio": float(np.max(ratios)),
+        "deadline_fired": deadline_fired,
+    }
+
+
+def bench_chaos(rate: float, requests: int, seed: int) -> Dict:
+    storm = storm_section(rate, requests, seed)
+    quar = quarantine_section()
+    anyt = anytime_section()
+    gates = {
+        "zero_wrong_outputs": storm["wrong_outputs"] == 0,
+        "availability": storm["availability"],
+        "availability_ok": storm["availability"] >= 0.99,
+        "recovery_s": storm["recovery_s"],
+        "recovery_ok": storm["recovery_s"] < 60.0
+        and storm["recovery_probes_ok"],
+        "faults_exercised": storm["faults_fired"].get(
+            "kernel_failures", 0) >= 1
+        and storm["faults_fired"].get("worker_deaths", 0) >= 1
+        and storm["faults_fired"].get("plan_cache_corrupt", 0) >= 1
+        and storm["faults_fired"].get("ladder_greedy", 0) >= 1,
+        "quarantine_cycle_ok": quar["cycle_ok"],
+        "anytime_tower_ok": anyt["tower_ratio"] <= 1.1,
+        "anytime_dense_ok": anyt["dense_mean_ratio"] <= 1.1
+        and anyt["deadline_fired"] == len(ANYTIME_SEEDS),
+    }
+    gates["all"] = all(v for k, v in gates.items()
+                       if isinstance(v, (bool, np.bool_)))
+    return {
+        "benchmark": "chaos",
+        "rate": rate,
+        "requests": requests,
+        "seed": seed,
+        "storm_plan": STORM_PLAN,
+        "storm": storm,
+        "quarantine": quar,
+        "anytime": anyt,
+        "gates": gates,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arrival-rate", type=float, default=60.0)
+    ap.add_argument("--requests", type=int, default=80)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = bench_chaos(args.arrival_rate, args.requests, args.seed)
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).parent / "results" / "chaos.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2, default=str))
+    st = rows["storm"]
+    print(f"storm: {st['completed']}/{st['requests']} completed "
+          f"(availability {st['availability']:.2%}), "
+          f"{st['wrong_outputs']} wrong outputs, "
+          f"recovery {st['recovery_s']:.2f}s")
+    print(f"  faults fired: {st['faults_fired']}")
+    q = rows["quarantine"]
+    print(f"quarantine: {q['target']} tripped -> re-solve "
+          f"{'excluded it' if q['banned_excluded'] else 'FAILED'}, "
+          f"release -> "
+          f"{'disk-hit recovery' if q['recovered_via_disk_hit'] else 'NO recovery'}")
+    a = rows["anytime"]
+    print(f"anytime: tower ratio {a['tower_ratio']:.3f}, dense mean "
+          f"{a['dense_mean_ratio']:.3f} (max {a['dense_max_ratio']:.3f})"
+          f" over {len(ANYTIME_SEEDS)} seeds")
+    print(f"gates: {rows['gates']}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

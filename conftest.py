@@ -1,13 +1,52 @@
 """Pytest bootstrap: make `repro` (src layout) and `benchmarks`
-importable regardless of how pytest is invoked.
+importable regardless of how pytest is invoked, and fail any test that
+leaks a live scheduler/server thread.
 
 NOTE: deliberately does NOT set XLA_FLAGS — tests must see the real
 single-device CPU; only repro/launch/dryrun.py forces 512 devices.
 """
 import pathlib
 import sys
+import threading
+import time
+
+import pytest
 
 ROOT = pathlib.Path(__file__).resolve().parent
 for p in (str(ROOT), str(ROOT / "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+#: thread-name prefixes owned by the serving stack — every one of these
+#: is joined by a close()/shutdown() the owning test must call
+_OWNED_THREAD_PREFIXES = ("sched-dispatch", "sched-batch", "planserver")
+
+
+def _serving_threads():
+    return [t for t in threading.enumerate()
+            if t.is_alive()
+            and t.name.startswith(_OWNED_THREAD_PREFIXES)]
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks():
+    """Fail the test (not just warn) if it leaks a dispatcher/worker.
+
+    A leaked ContinuousScheduler dispatcher or PlanServer pool thread
+    outlives its test, pins its executables in memory, and can deadlock
+    a later test's close() — exactly the resource bug the reliability
+    layer exists to prevent in production, so the suite holds itself to
+    the same standard.  Grace period: pool threads finish their current
+    item after shutdown() returns only when close() was actually
+    called, so a short poll-join separates "shutting down" from
+    "leaked".
+    """
+    yield
+    deadline = time.monotonic() + 5.0
+    leaked = _serving_threads()
+    while leaked and time.monotonic() < deadline:
+        time.sleep(0.05)
+        leaked = _serving_threads()
+    assert not leaked, (
+        "test leaked live serving threads (missing close()?): "
+        + ", ".join(t.name for t in leaked))

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
@@ -182,12 +183,16 @@ class PBQP:
         return float(total)
 
     # ------------------------------------------------------------------
-    def solve(self, exact: bool = True, bb_budget: int = 200_000) -> Solution:
-        return solve(self, exact=exact, bb_budget=bb_budget)
+    def solve(self, exact: bool = True, bb_budget: int = 200_000,
+              deadline_s: Optional[float] = None) -> Solution:
+        return solve(self, exact=exact, bb_budget=bb_budget,
+                     deadline_s=deadline_s)
 
     def solve_warm(self, warm: Dict[Hashable, int], *, exact: bool = True,
-                   bb_budget: int = 200_000) -> Solution:
-        return solve_warm(self, warm, exact=exact, bb_budget=bb_budget)
+                   bb_budget: int = 200_000,
+                   deadline_s: Optional[float] = None) -> Solution:
+        return solve_warm(self, warm, exact=exact, bb_budget=bb_budget,
+                          deadline_s=deadline_s)
 
 
 # ----------------------------------------------------------------------
@@ -235,7 +240,8 @@ class _Graph:
 
 
 def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000,
-          upper_bound: Optional[float] = None) -> Solution:
+          upper_bound: Optional[float] = None,
+          deadline_s: Optional[float] = None) -> Solution:
     """Solve a PBQP instance.
 
     exact=True attempts an exact solve: RI/RII reductions are always
@@ -250,6 +256,16 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000,
     optimality preserving: the branch containing an optimum has a lower
     bound <= optimum <= upper_bound and thus survives.
 
+    ``deadline_s`` makes the solve *anytime*: a wall-clock allowance
+    (relative seconds) checked at every branch-and-bound entry.  When it
+    expires, the search stops where it is and the RN heuristic completes
+    the remaining component — a valid full assignment comes back no
+    matter how hard the instance is, flagged ``optimal=False`` with
+    ``stats["DEADLINE"] = 1``.  Exhausting ``bb_budget`` degrades the
+    same way; neither ever raises.  This is the serving fallback
+    ladder's "heuristic solve under a deadline" rung
+    (docs/reliability.md).
+
     Emits a ``pbqp.solve`` trace span (repro.obs.trace) carrying the
     instance size and the B&B work actually done: ``bb`` nodes entered,
     ``prunes`` sub-problems cut by the bound test.
@@ -257,18 +273,22 @@ def solve(pb: PBQP, exact: bool = True, bb_budget: int = 200_000,
     with get_tracer().span("pbqp.solve", nodes=len(pb._costs),
                            edges=len(pb._edges),
                            warm=upper_bound is not None) as sp:
-        sol = _solve_impl(pb, exact, bb_budget, upper_bound)
+        sol = _solve_impl(pb, exact, bb_budget, upper_bound, deadline_s)
         sp.set(cost=sol.cost, optimal=sol.optimal,
                bb=sol.stats.get("BB", 0),
-               prunes=sol.stats.get("PRUNE", 0))
+               prunes=sol.stats.get("PRUNE", 0),
+               deadline=sol.stats.get("DEADLINE", 0))
         return sol
 
 
 def _solve_impl(pb: PBQP, exact: bool, bb_budget: int,
-                upper_bound: Optional[float]) -> Solution:
+                upper_bound: Optional[float],
+                deadline_s: Optional[float] = None) -> Solution:
     g = _Graph(pb)
     g.prune_trivial_edges()
     stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0, "PRUNE": 0}
+    t_end = (time.perf_counter() + deadline_s) \
+        if deadline_s is not None else None
     # backtrack stack: callables applied in reverse to extend assignment
     trail: List[Callable[[Dict[Hashable, int]], None]] = []
     optimal = True
@@ -305,13 +325,18 @@ def _solve_impl(pb: PBQP, exact: bool, bb_budget: int,
 
     while g.costs:
         # All remaining nodes have degree >= 3.
-        if exact and budget[0] > 0:
-            ok = _branch_and_bound(g, trail, stats, budget, upper_bound)
+        if exact and budget[0] > 0 and not _expired(t_end):
+            ok = _branch_and_bound(g, trail, stats, budget, upper_bound,
+                                   t_end)
             if not ok:
                 optimal = False
+                if _expired(t_end):
+                    stats["DEADLINE"] = 1
                 _rn(g, trail, stats)
         else:
             optimal = False
+            if _expired(t_end):
+                stats["DEADLINE"] = 1
             _rn(g, trail, stats)
         reduce_all()
 
@@ -328,7 +353,8 @@ def _solve_impl(pb: PBQP, exact: bool, bb_budget: int,
 
 
 def solve_warm(pb: PBQP, warm: Optional[Dict[Hashable, int]], *,
-               exact: bool = True, bb_budget: int = 200_000) -> Solution:
+               exact: bool = True, bb_budget: int = 200_000,
+               deadline_s: Optional[float] = None) -> Solution:
     """Incremental re-solve seeded by a previous solution.
 
     ``warm`` is a (possibly stale) full assignment — typically the optimum
@@ -357,7 +383,8 @@ def solve_warm(pb: PBQP, warm: Optional[Dict[Hashable, int]], *,
                 cand = pb.evaluate(warm)
                 if np.isfinite(cand):
                     ub = cand
-        sol = solve(pb, exact=exact, bb_budget=bb_budget, upper_bound=ub)
+        sol = solve(pb, exact=exact, bb_budget=bb_budget, upper_bound=ub,
+                    deadline_s=deadline_s)
         sol.stats["WARM"] = int(ub is not None)
         sol.stats["WARM_DIST"] = (
             sum(1 for u, i in sol.assignment.items() if warm[u] != i)
@@ -437,6 +464,11 @@ def _rn(g: _Graph, trail, stats) -> None:
     trail.append(lambda asg, u=u, i=i: asg.__setitem__(u, i))
 
 
+def _expired(t_end: Optional[float]) -> bool:
+    """Has the anytime wall-clock deadline passed?  (None: never.)"""
+    return t_end is not None and time.perf_counter() >= t_end
+
+
 def _lower_bound(g: _Graph) -> float:
     """Cheap admissible lower bound: node minima + half edge minima."""
     lb = g.base
@@ -450,20 +482,22 @@ def _lower_bound(g: _Graph) -> float:
 
 
 def _branch_and_bound(g: _Graph, trail, stats, budget,
-                      ub: Optional[float] = None) -> bool:
+                      ub: Optional[float] = None,
+                      t_end: Optional[float] = None) -> bool:
     """Exactly resolve ONE degree->=3 node by enumerating its domain.
 
     For each choice we recursively solve the reduced sub-problem (full
-    solver recursion on a copy).  Returns False if the budget is exhausted
-    (caller falls back to RN).  ``ub`` is an optional achievable global
-    upper bound (warm start); sub-problems with lower bound > ub are
-    pruned without losing any optimum.
+    solver recursion on a copy).  Returns False if the budget or the
+    wall-clock deadline (``t_end``, absolute perf_counter seconds) is
+    exhausted (caller falls back to RN).  ``ub`` is an optional
+    achievable global upper bound (warm start); sub-problems with lower
+    bound > ub are pruned without losing any optimum.
     """
     # Pick the highest-degree node with the smallest domain: cheap to
     # enumerate, high simplification payoff.
     u = min(g.costs, key=lambda n: (g.costs[n].size, -g.degree(n)))
     k = g.costs[u].size
-    if budget[0] < k:
+    if budget[0] < k or _expired(t_end):
         return False
     budget[0] -= k
     stats["BB"] += 1
@@ -492,7 +526,7 @@ def _branch_and_bound(g: _Graph, trail, stats, budget,
         sub_trail: List[Callable] = []
         sub_stats = {"R0": 0, "RI": 0, "RII": 0, "RN": 0, "BB": 0,
                      "PRUNE": 0}
-        ok = _solve_rec(sub, sub_trail, sub_stats, budget, ub)
+        ok = _solve_rec(sub, sub_trail, sub_stats, budget, ub, t_end)
         if not ok:
             return False
         if sub.base < best_cost:
@@ -529,7 +563,8 @@ def _branch_and_bound(g: _Graph, trail, stats, budget,
 
 
 def _solve_rec(g: _Graph, trail, stats, budget,
-               ub: Optional[float] = None) -> bool:
+               ub: Optional[float] = None,
+               t_end: Optional[float] = None) -> bool:
     """Run reductions + B&B to completion on g (used inside B&B)."""
     def reduce_all():
         work = [u for u in g.costs if g.degree(u) <= 2]
@@ -556,9 +591,9 @@ def _solve_rec(g: _Graph, trail, stats, budget,
 
     reduce_all()
     while g.costs:
-        if budget[0] <= 0:
+        if budget[0] <= 0 or _expired(t_end):
             return False
-        if not _branch_and_bound(g, trail, stats, budget, ub):
+        if not _branch_and_bound(g, trail, stats, budget, ub, t_end):
             return False
         reduce_all()
     return True

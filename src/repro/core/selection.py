@@ -60,7 +60,7 @@ the measured tables of :class:`repro.calibrate.CalibratedCostModel`
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import AbstractSet, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -108,11 +108,27 @@ class SelectionResult:
 
 def _conv_domain(node: Node, cost: CostModel,
                  families: Optional[Sequence[str]] = None,
-                 require_finite: bool = True):
+                 require_finite: bool = True,
+                 banned: Optional[AbstractSet[str]] = None):
+    """Candidate (primitive, cost) entries for one conv node.
+
+    ``banned`` prices the named primitives infinite — the circuit
+    breaker's quarantine lever (docs/reliability.md): an infinite entry
+    is dropped by the finite filter exactly like an unpriceable one, so
+    the solver routes around a quarantined kernel.  If quarantine would
+    empty the domain the ban is ignored (a degraded plan beats no plan).
+    """
     prims = primitives_for(node.scn, families=families)
-    entries = [(p, cost.primitive_cost(p, node.scn)) for p in prims]
+    entries = [(p, np.inf if banned and p.name in banned
+                else cost.primitive_cost(p, node.scn)) for p in prims]
     if require_finite:
         finite = [(p, c) for (p, c) in entries if np.isfinite(c)]
+        if not finite and banned:
+            # every survivor is quarantined: lift the ban rather than
+            # hand the solver an all-infinite (infeasible) node
+            entries = [(p, cost.primitive_cost(p, node.scn))
+                       for p in prims]
+            finite = [(p, c) for (p, c) in entries if np.isfinite(c)]
         entries = finite or entries
     if not entries:
         raise ValueError(f"no primitive supports {node.scn}")
@@ -430,7 +446,8 @@ def _build(net: Net, cost: CostModel, *,
            fixed: Optional[Dict[str, Primitive]] = None,
            families: Optional[Sequence[str]] = None,
            fuse: bool = False,
-           mesh_axes: Optional[Dict[str, int]] = None):
+           mesh_axes: Optional[Dict[str, int]] = None,
+           banned: Optional[AbstractSet[str]] = None):
     """Build the PBQP instance; returns (problem, domains).
 
     ``fixed`` pins given conv nodes to a single primitive (domain size 1)
@@ -469,7 +486,7 @@ def _build(net: Net, cost: CostModel, *,
                 c = cost.primitive_cost(p, node.scn)
                 entries = [(p, c if np.isfinite(c) else 1e6)]
             else:
-                entries = _conv_domain(node, cost, families)
+                entries = _conv_domain(node, cost, families, banned=banned)
             choices, costs = [], []
             for p, c_rep in entries:
                 for pl in pls:
@@ -644,8 +661,10 @@ def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
                 families: Optional[Sequence[str]] = None,
                 warm_start: Optional["SelectionResult"] = None,
                 fuse: bool = False,
-                mesh_axes: Optional[Dict[str, int]] = None
-                ) -> SelectionResult:
+                mesh_axes: Optional[Dict[str, int]] = None,
+                banned: Optional[AbstractSet[str]] = None,
+                deadline_s: Optional[float] = None,
+                bb_budget: int = 200_000) -> SelectionResult:
     """The paper's approach: globally optimal primitive selection.
 
     ``warm_start`` seeds the branch-and-bound incumbent with a previous
@@ -662,14 +681,23 @@ def select_pbqp(net: Net, cost: CostModel, *, exact: bool = True,
     ``mesh_axes`` (e.g. ``mesh_shape_dict(mesh)``) additionally solves
     the device-placement axis over the mesh's ``data`` axis; realize the
     result with ``compile_plan(..., mesh=mesh, batch=nb)``.
+
+    ``banned`` prices the named primitives infinite (circuit-breaker
+    quarantine — see :func:`_conv_domain`); ``deadline_s`` turns the
+    solve *anytime* — past the wall-clock allowance branch-and-bound
+    stops and the RN heuristic completes the assignment
+    (``solver_stats["DEADLINE"]`` records the degradation); ``bb_budget``
+    caps branch-and-bound node expansions the same way.
     """
     pb, domains, dt = _build(net, cost, families=families, fuse=fuse,
-                             mesh_axes=mesh_axes)
+                             mesh_axes=mesh_axes, banned=banned)
     if warm_start is not None:
         warm = warm_assignment(warm_start, domains)
-        sol = pbqp.solve_warm(pb, warm, exact=exact)
+        sol = pbqp.solve_warm(pb, warm, exact=exact, bb_budget=bb_budget,
+                              deadline_s=deadline_s)
     else:
-        sol = pbqp.solve(pb, exact=exact)
+        sol = pbqp.solve(pb, exact=exact, bb_budget=bb_budget,
+                         deadline_s=deadline_s)
     choices = {nid: domains[nid][sol.assignment[nid]] for nid in net.order}
     conversions, fusions = _legalize(net, dt, choices, cost=cost, fuse=fuse)
     return SelectionResult(net, choices, conversions, sol.cost, sol.optimal,
@@ -702,13 +730,20 @@ def select_sum2d(net: Net, cost: CostModel) -> SelectionResult:
 
 
 def select_local_optimal(net: Net, cost: CostModel,
-                         canonical: str = "CHW") -> SelectionResult:
+                         canonical: str = "CHW",
+                         banned: Optional[AbstractSet[str]] = None
+                         ) -> SelectionResult:
     """The paper's 'local optimal': canonical layout everywhere, fastest
-    primitive that natively consumes and produces that layout."""
+    primitive that natively consumes and produces that layout.
+
+    ``banned`` excludes quarantined primitives from the per-node pick —
+    the greedy rung of the serving fallback ladder must not re-select
+    the kernel whose crash demoted the request to it."""
     pick = {}
     for node in net.conv_nodes():
         cands = [p for p in primitives_for(node.scn)
-                 if p.l_in == canonical and p.l_out == canonical]
+                 if p.l_in == canonical and p.l_out == canonical
+                 and not (banned and p.name in banned)]
         costs = [(cost.primitive_cost(p, node.scn), p) for p in cands]
         costs = [(c, p) for c, p in costs if np.isfinite(c)]
         if not costs:

@@ -81,6 +81,27 @@ def main():
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the Prometheus text exposition of the "
                          "plan server's metrics registry at the end")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the plan server's stats snapshot as "
+                         "JSON (feed to tools/obs_report.py "
+                         "--metrics-file for the degradation table)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="chaos fault plan (docs/reliability.md): a "
+                         "JSON file of fault specs or an inline DSL "
+                         "like 'kernel:nan@5+3~winograd,compile:"
+                         "raise@0+2'; faults fire deterministically "
+                         "and degradations are counted, not fatal")
+    ap.add_argument("--solve-deadline-ms", type=float, default=0.0,
+                    help="wall-clock budget per PBQP solve: branch-and-"
+                         "bound becomes anytime and returns its best "
+                         "incumbent at the deadline (0: exact, no "
+                         "deadline)")
+    ap.add_argument("--shed", action="store_true",
+                    help="deadline-aware load shedding: reject vision "
+                         "requests at admission when the modeled "
+                         "backlog makes their SLO unmeetable (shed "
+                         "images run unbatched instead; needs "
+                         "--slo-ms)")
     args = ap.parse_args()
     if args.trace:
         from ..obs.trace import configure
@@ -132,16 +153,33 @@ def main():
         if mesh_spec is not None:
             from .mesh import make_mesh_compat
             mesh = make_mesh_compat(*mesh_spec)
+        injector = None
+        if args.fault_plan:
+            from ..reliability import FaultInjector, parse_fault_plan
+            injector = FaultInjector(parse_fault_plan(args.fault_plan),
+                                     seed=args.seed)
         plan_server = PlanServer(
             lambda s: conv_tower(s, depth=2, width=8),
             cost_model,
             policy=policy, mesh=mesh,
-            cache_dir=args.plan_cache_dir, lru_capacity=4)
+            cache_dir=args.plan_cache_dir, lru_capacity=4,
+            fault_injector=injector,
+            solve_deadline_s=args.solve_deadline_ms / 1e3
+            if args.solve_deadline_ms > 0 else None)
 
+    slo_s = args.slo_ms / 1e3 if args.slo_ms > 0 else None
+    scheduler = None
+    if args.shed:
+        if plan_server is None or slo_s is None:
+            ap.error("--shed needs --vision-every > 0 and --slo-ms > 0 "
+                     "(shedding is deadline-aware admission control)")
+        from ..serving.scheduler import ContinuousScheduler
+        scheduler = ContinuousScheduler(plan_server, slo_s=slo_s,
+                                        shed=True)
     loop = ServeLoop(cfg, params, max_batch=args.max_batch,
                      max_seq=args.max_seq, plan_server=plan_server,
                      image_tokens=args.image_tokens,
-                     slo_s=args.slo_ms / 1e3 if args.slo_ms > 0 else None)
+                     scheduler=scheduler, slo_s=slo_s)
     rng = np.random.default_rng(args.seed)
     reqs = []
     arrival = 0.0
@@ -197,6 +235,27 @@ def main():
             print(f"  {phase}: n={q['count']} "
                   f"p50={q['p50']*1e3:.2f}ms p95={q['p95']*1e3:.2f}ms "
                   f"p99={q['p99']*1e3:.2f}ms")
+        if s["ladder_demotions"] or s["quarantines"] or \
+                s["shed_requests"] or s["plan_cache_corrupt"] or \
+                s["worker_deaths"]:
+            print("degradations: "
+                  f"ladder exact={s['ladder_exact']} "
+                  f"anytime={s['ladder_anytime']} "
+                  f"greedy={s['ladder_greedy']} "
+                  f"reference={s['ladder_reference']}"
+                  f" | quarantines={s['quarantines']}"
+                  f" (active: {', '.join(s['quarantined']) or 'none'})"
+                  f" | shed={s['shed_requests']}"
+                  f" corrupt plans={s['plan_cache_corrupt']}"
+                  f" worker deaths={s['worker_deaths']}"
+                  f" (requeued {s['worker_requeues']})"
+                  f" | kernel failures={s['kernel_failures']}"
+                  f" compile retries={s['compile_retries']}")
+        if args.metrics_json:
+            import json
+            with open(args.metrics_json, "w") as fh:
+                json.dump(s, fh, indent=1, default=str)
+            print(f"metrics snapshot written to {args.metrics_json}")
         if args.metrics_dump:
             print(plan_server.metrics_text(), end="")
         if args.profile:
@@ -205,6 +264,8 @@ def main():
                   f"{cov['fallback_hits']} analytic fallbacks "
                   f"({cov['table_rate']:.0%} measured)")
         loop.close()
+        if scheduler is not None:
+            scheduler.close()
         plan_server.close()
     if args.trace:
         tracer.flush()

@@ -172,11 +172,27 @@ class ServeLoop:
         # the scheduler's worker threads).
         vision: Dict[int, Any] = {}
         if self.scheduler is not None:
+            from concurrent.futures import Future as _Future
+
             from ..obs.trace import get_tracer
+            from ..reliability import ShedError
             with get_tracer().span("admit", requests=len(admitted)):
                 for slot, req in admitted:
                     if req.pixels is not None:
-                        vision[slot] = self.scheduler.submit(req.pixels)
+                        try:
+                            vision[slot] = self.scheduler.submit(
+                                req.pixels)
+                        except ShedError:
+                            # shed at admission (scheduler built with
+                            # shed=True and the modeled backlog makes
+                            # the SLO unmeetable): this loop cannot
+                            # drop a request, so the typed "no" routes
+                            # the image around the overloaded batcher
+                            # onto the direct unbatched path instead
+                            fut: _Future = _Future()
+                            fut.set_result(
+                                self.plan_server.infer(req.pixels))
+                            vision[slot] = fut
         for slot, req in admitted:
             if slot in vision:
                 self._encode_pixels(req, vision[slot].result())

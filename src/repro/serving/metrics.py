@@ -50,6 +50,26 @@ COUNT_FIELDS = (
     "deadline_met", "deadline_miss",
     # elastic worker-pool resizes applied by the scheduler
     "worker_resizes",
+    # --- reliability layer (repro.reliability, docs/reliability.md) ---
+    # corrupt/truncated/stale-schema plan-cache files detected (and
+    # deleted) on read; each one re-solves
+    "plan_cache_corrupt",
+    # fallback-ladder rung served per plan selection: exact PBQP,
+    # anytime (deadline/budget-degraded solve), greedy local-optimal,
+    # or the solver-free reference plan
+    "ladder_exact", "ladder_anytime", "ladder_greedy", "ladder_reference",
+    # compile attempts retried after a transient failure, and plans
+    # demoted down the ladder because every retry failed
+    "compile_retries", "compile_fallbacks",
+    # guarded-execution failures (crash or non-finite outputs), and
+    # (primitive, bucket) circuit-breaker trips they caused
+    "kernel_failures", "quarantines",
+    # admission control: requests rejected because the modeled backlog
+    # made their deadline unmeetable (scheduler shed=True)
+    "shed_requests",
+    # scheduler worker slots that died mid-dispatch, and the requests
+    # re-queued (once each) to survive them
+    "worker_deaths", "worker_requeues",
 )
 #: accumulated wall time (seconds); each also records one histogram
 #: sample per ``add`` under phase = field name minus the ``_s`` suffix
@@ -115,6 +135,9 @@ class ServingCounters:
         # goodput: deadline-met fraction over deadline-carrying requests
         total = d["deadline_met"] + d["deadline_miss"]
         d["goodput"] = d["deadline_met"] / total if total else 1.0
+        # degradations: selections served from any rung below exact
+        d["ladder_demotions"] = (d["ladder_anytime"] + d["ladder_greedy"]
+                                 + d["ladder_reference"])
         return d
 
     def phase_quantiles(self) -> Dict[str, Dict[str, float]]:

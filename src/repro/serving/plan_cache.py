@@ -22,9 +22,10 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import pathlib
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core.graph import Net
 from ..core.ioutil import atomic_write_text
@@ -103,30 +104,75 @@ def selection_from_payload(payload: Dict[str, Any],
 
 
 # ----------------------------------------------------------------------
-class PlanDiskCache:
-    """One JSON file per plan under ``root``; atomic writes."""
+_log = logging.getLogger(__name__)
 
-    def __init__(self, root) -> None:
+
+class PlanDiskCache:
+    """One JSON file per plan under ``root``; atomic writes.
+
+    A truncated/corrupt file or a stale-schema payload is a *miss*, not
+    an error: the bad file is logged, deleted, counted in ``corrupt``
+    (and surfaced via ``on_corrupt`` into the server's
+    ``plan_cache_corrupt`` counter), and the caller re-solves — a torn
+    write or a bit flip must never take down the request path.
+
+    ``fault_injector`` (site ``plan_cache``, kind ``corrupt``) truncates
+    the real file on disk just before the read, so chaos tests exercise
+    exactly this recovery path, not a simulation of it.
+    """
+
+    def __init__(self, root, *,
+                 on_corrupt: Optional[Callable[[str], None]] = None,
+                 fault_injector=None) -> None:
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        self.corrupt = 0
+        self.on_corrupt = on_corrupt
+        self.fault_injector = fault_injector
 
     def _path(self, key: str) -> pathlib.Path:
         return self.root / f"plan_{key}.json"
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         p = self._path(key)
+        if self.fault_injector is not None and p.exists():
+            spec = self.fault_injector.check("plan_cache", key=key)
+            if spec is not None and spec.kind == "corrupt":
+                try:
+                    raw = p.read_text()
+                    p.write_text(raw[: len(raw) // 2])
+                except OSError:
+                    pass
         if not p.exists():
             self.misses += 1
             return None
         try:
             payload = json.loads(p.read_text())
-        except (OSError, json.JSONDecodeError):
-            self.misses += 1
-            return None
+        except (OSError, json.JSONDecodeError) as exc:
+            return self.discard(key, f"unreadable JSON ({exc})")
+        if not isinstance(payload, dict) \
+                or payload.get("schema") != PLAN_SCHEMA:
+            got = payload.get("schema") if isinstance(payload, dict) \
+                else type(payload).__name__
+            return self.discard(key, f"schema {got!r} != {PLAN_SCHEMA}")
         self.hits += 1
         return payload
+
+    def discard(self, key: str, why: str) -> None:
+        """Treat the entry as corrupt: log, delete, count, miss."""
+        _log.warning("plan cache entry %s corrupt (%s): deleting, "
+                     "will re-solve", key, why)
+        try:
+            self._path(key).unlink()
+        except OSError:
+            pass
+        self.corrupt += 1
+        self.misses += 1
+        if self.on_corrupt is not None:
+            self.on_corrupt(key)
+        return None
 
     def put(self, key: str, payload: Dict[str, Any]) -> None:
         """Atomic write, safe under concurrent writers of the same key
@@ -167,6 +213,12 @@ class LRU:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.evictions += 1
+
+    def pop(self, key):
+        """Drop an entry without touching the hit/miss counters (the
+        quarantine eviction path: a poisoned executable must not linger
+        until capacity pressure finds it)."""
+        return self._d.pop(key, None)
 
     def __contains__(self, key) -> bool:
         return key in self._d

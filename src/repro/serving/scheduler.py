@@ -57,6 +57,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..reliability.errors import ShedError
 from .bucketing import bucket_key, bucket_shape
 from .metrics import LATENCY_METRIC
 
@@ -79,6 +80,9 @@ class _Pending:
     fut: Future
     t_submit: float
     deadline: Optional[float]  # absolute perf_counter seconds, or None
+    #: times this request was re-queued after its worker slot died
+    #: (bounded at 1: a request that kills two workers is the poison)
+    requeues: int = 0
 
 
 class ContinuousScheduler:
@@ -106,11 +110,24 @@ class ContinuousScheduler:
     min_model_samples:
         Observed ``execute`` samples a bucket needs before its
         histogram p95 replaces the cost model's prediction.
+    shed:
+        Deadline-aware load shedding (docs/reliability.md): a submit
+        whose deadline the *modeled* backlog already makes unmeetable
+        is rejected at admission with :class:`~repro.reliability.
+        ShedError` instead of queued to certainly miss — an early typed
+        "no" the client can retry elsewhere beats a late wrong "yes".
+        Off by default (every request is admitted, deadline misses are
+        counted, the PR 7 behavior).
+    shed_safety:
+        Multiplier on the modeled completion estimate the shed check
+        compares against the deadline; > 1 sheds earlier (hedging model
+        optimism), < 1 admits more marginal requests.
     """
 
     def __init__(self, server, *, batch_window_s: float = 0.02,
                  slo_s: Optional[float] = None, safety: float = 1.5,
-                 elastic=None, min_model_samples: int = 3) -> None:
+                 elastic=None, min_model_samples: int = 3,
+                 shed: bool = False, shed_safety: float = 1.0) -> None:
         if batch_window_s <= 0:
             raise ValueError(f"batch_window_s must be > 0, "
                              f"got {batch_window_s}")
@@ -125,6 +142,11 @@ class ContinuousScheduler:
         self.default_slo_s = slo_s
         self.safety = float(safety)
         self.min_model_samples = int(min_model_samples)
+        self.shed = bool(shed)
+        self.shed_safety = float(shed_safety)
+        #: the server's chaos hook drives the scheduler's worker site
+        #: too — one fault plan covers the whole serve stack
+        self.fault_injector = getattr(server, "fault_injector", None)
         self.elastic = elastic
         self._queues: "OrderedDict[Shape, Deque[_Pending]]" = OrderedDict()
         self._cond = Condition()
@@ -164,11 +186,36 @@ class ContinuousScheduler:
         with self._cond:
             if self._closed:
                 raise RuntimeError("ContinuousScheduler is closed")
+            if self.shed and deadline is not None:
+                eta = self._shed_eta_locked(bshape)
+                if now + eta > deadline:
+                    self.server.counters.add(shed_requests=1)
+                    raise ShedError(eta, deadline - now)
             self._queues.setdefault(bshape, deque()).append(
                 _Pending(x, fut, now, deadline))
             self.server.counters.add(sched_submits=1)
             self._cond.notify_all()
         return fut
+
+    def _shed_eta_locked(self, bshape: Shape) -> float:
+        """Modeled completion time for a request admitted *now*.
+
+        Serial waves the backlog implies — this request's group, every
+        group already queued (any bucket), and everything in flight,
+        over the applied worker count — times the modeled latency of
+        the request's own bucket.  Deliberately coarse: admission
+        control needs a monotone load signal, not a simulation (the
+        same modeled-latency source the deadline launch trigger uses,
+        so the two SLO mechanisms agree on what "too slow" means).
+        """
+        qlen = len(self._queues.get(bshape, ()))
+        est = self._modeled_latency(bshape,
+                                    self.policy.bucket_n(qlen + 1))
+        groups = 1 + self._inflight + sum(
+            (len(q) + self.policy.max_n - 1) // self.policy.max_n
+            for q in self._queues.values())
+        waves = -(-groups // max(1, self._workers_applied))
+        return self.shed_safety * est * waves
 
     def submit_many(self, xs: Sequence[np.ndarray], *,
                     slo_s: Optional[float] = None) -> List[Future]:
@@ -314,6 +361,13 @@ class ContinuousScheduler:
     # -----------------------------------------------------------------
     def _run_batch(self, bshape: Shape, group: List[_Pending],
                    reason: str) -> None:
+        if self.fault_injector is not None:
+            spec = self.fault_injector.check(
+                "worker", key=bucket_key(bshape,
+                                         self.policy.bucket_n(len(group))))
+            if spec is not None:
+                self._worker_died(bshape, group, spec)
+                return
         try:
             outs = self.server.infer_batch([p.x for p in group])
         except BaseException as exc:  # noqa: BLE001 — must resolve futs
@@ -341,6 +395,37 @@ class ContinuousScheduler:
             with self._cond:
                 self._inflight -= 1
                 self._cond.notify_all()
+
+    def _worker_died(self, bshape: Shape, group: List[_Pending],
+                     spec) -> None:
+        """An injected worker-slot death mid-dispatch.
+
+        The group's requests go back to the *front* of their bucket
+        queue (they are the oldest work — deadline ordering must hold),
+        each at most once: a request that has already killed a worker
+        is treated as the poison and fails with
+        :class:`~repro.reliability.InjectedFault` rather than cycling
+        through the pool forever.
+        """
+        from ..reliability.errors import InjectedFault
+        self.server.counters.add(worker_deaths=1)
+        requeued = 0
+        with self._cond:
+            q = self._queues.setdefault(bshape, deque())
+            for p in reversed(group):
+                if p.requeues < 1:
+                    p.requeues += 1
+                    q.appendleft(p)
+                    requeued += 1
+                else:
+                    p.fut.set_exception(InjectedFault(
+                        "worker", spec.kind, spec.match))
+            if not q:
+                del self._queues[bshape]
+            self._inflight -= 1
+            self._cond.notify_all()
+        if requeued:
+            self.server.counters.add(worker_requeues=requeued)
 
     # -----------------------------------------------------------------
     def stats(self) -> Dict[str, float]:

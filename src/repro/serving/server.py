@@ -54,6 +54,7 @@ tests/test_serving.py pins down via the counters).
 """
 from __future__ import annotations
 
+import random
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -66,9 +67,13 @@ from ..core import plan as plan_mod
 from ..core.costs import CostModel
 from ..core.graph import Net
 from ..core.plan import CompiledNet, compile_plan
-from ..core.selection import SelectionResult, select_pbqp
+from ..core.selection import SelectionResult, select_local_optimal
 from ..launch.mesh import mesh_fingerprint, mesh_shape_dict
 from ..obs.trace import get_tracer
+from ..reliability import (FallbackLadder, FaultInjector, KernelFailure,
+                           PrimitiveQuarantine, diagnose_nonfinite,
+                           reference_selection, retry_call)
+from ..reliability.errors import InjectedFault
 from .bucketing import BucketPolicy, bucket_key, bucket_shape
 from .metrics import ServingCounters
 from .plan_cache import (
@@ -108,7 +113,14 @@ class PlanServer:
                  cache_dir=None, lru_capacity: int = 8,
                  exact: bool = True, params_seed: int = 0,
                  jit: bool = True, max_workers: int = 2,
-                 fuse: bool = False, mesh=None) -> None:
+                 fuse: bool = False, mesh=None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 solve_deadline_s: Optional[float] = None,
+                 quarantine: Optional[PrimitiveQuarantine] = None,
+                 compile_retries: int = 2,
+                 compile_backoff_s: float = 0.05,
+                 kernel_retries: int = 1,
+                 guard_outputs: bool = True) -> None:
         self.net_builder = net_builder
         self.cost = cost_model
         self.fuse = fuse
@@ -132,10 +144,31 @@ class PlanServer:
         self.params_seed = params_seed
         self.jit = jit
         self.counters = ServingCounters()
+        # --- reliability layer (docs/reliability.md) ---
+        self.fault_injector = fault_injector
+        self.quarantine = quarantine if quarantine is not None \
+            else PrimitiveQuarantine()
+        self.compile_retries = int(compile_retries)
+        self.compile_backoff_s = float(compile_backoff_s)
+        self.kernel_retries = int(kernel_retries)
+        self.guard_outputs = guard_outputs
+        #: solve rungs: exact (or anytime under the deadline) -> greedy
+        #: -> reference; every selection goes through the ladder
+        self.ladder = FallbackLadder(
+            cost_model, exact=exact, deadline_s=solve_deadline_s,
+            counters=self.counters, fault_injector=fault_injector)
+        #: seeded so chaos runs replay their retry backoff exactly
+        self._retry_rng = random.Random(params_seed)
+        #: prior plan of a bucket whose plan-tier entry was evicted by a
+        #: quarantine trip — the warm-start incumbent for the re-solve
+        self._quar_warm: Dict[PlanKey, SelectionResult] = {}
         self._plans: Dict[PlanKey, SelectionResult] = {}
         self._compiled = LRU(lru_capacity)
         self._building: Dict[PlanKey, Future] = {}
-        self._disk = PlanDiskCache(cache_dir) if cache_dir else None
+        self._disk = PlanDiskCache(
+            cache_dir,
+            on_corrupt=lambda _k: self.counters.add(plan_cache_corrupt=1),
+            fault_injector=fault_injector) if cache_dir else None
         self._lock = RLock()
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="planserver")
@@ -165,31 +198,46 @@ class PlanServer:
                 sp.set(source="mem")
                 return sel
             net = self.net_builder(bshape).with_batch(nb)
-            key = plan_key(net.fingerprint(), bkey, self.cost_version)
+            # active quarantines rotate the cache key per bucket (PR 6's
+            # cost-version rotation, scoped): a plan solved around a
+            # banned primitive never collides with the healthy plan, and
+            # when the quarantine lifts the token empties — the original
+            # on-disk plan becomes a hit again, which *is* recovery
+            key = plan_key(net.fingerprint(), bkey, self.cost_version
+                           + self.quarantine.version_token(bkey))
             if self._disk is not None:
                 payload = self._disk.get(key)
                 if payload is not None:
                     try:
                         sel = selection_from_payload(payload, net)
-                    except (KeyError, ValueError):
-                        sel = None  # unknown primitive / schema: re-solve
+                    except (KeyError, ValueError) as exc:
+                        # unknown primitive / malformed payload: same
+                        # corrupt-entry path as unreadable JSON
+                        self._disk.discard(key, f"payload invalid ({exc})")
+                        sel = None
                 if sel is not None:
                     self.counters.add(plan_disk_hits=1)
                     self._plans[pkey] = sel
                     sp.set(source="disk")
                     return sel
             self.counters.add(plan_misses=1)
-            warm = self._nearest_plan(pkey)
+            banned = self.quarantine.banned_for(bkey)
+            # warm start: the bucket's own pre-quarantine plan beats the
+            # nearest-bucket incumbent when re-solving after a trip
+            warm = self._quar_warm.pop(pkey, None) or \
+                self._nearest_plan(pkey)
             t0 = time.perf_counter()
-            # select_pbqp opens the nested pbqp.solve/solve_warm spans
-            sel = select_pbqp(net, self.cost, exact=self.exact,
-                              warm_start=warm, fuse=self.fuse,
-                              mesh_axes=self._mesh_axes)
+            # the ladder runs select_pbqp (which opens the nested
+            # pbqp.solve/solve_warm spans) and degrades on failure:
+            # exact -> anytime -> greedy -> reference
+            sel, rung = self.ladder.select(
+                net, bucket=bkey, warm_start=warm, fuse=self.fuse,
+                mesh_axes=self._mesh_axes, banned=banned or None)
             self.counters.add(
                 _bucket=bkey, solves=1,
                 solve_s=time.perf_counter() - t0,
                 warm_solves=int(sel.solver_stats.get("WARM", 0)))
-            sp.set(source="solve",
+            sp.set(source="solve", rung=rung,
                    warm_dist=sel.solver_stats.get("WARM_DIST", -1))
             self._plans[pkey] = sel
             if self._disk is not None:
@@ -234,21 +282,10 @@ class PlanServer:
         try:
             with self._lock:
                 sel = self._plan_locked(bshape, nb)
-            params = sel.net.init_params(self.params_seed)
             t0 = time.perf_counter()
             # XLA compile + warm-up outside the lock: hot buckets must
-            # not stall behind a cold bucket compiling.  Mesh-sharded
-            # compilation only when the plan actually carries sharded
-            # (dp/tp/pp) nodes — an all-rep plan on a mesh is just the
-            # plain executable.
-            mesh = self.mesh if nb > 1 and any(
-                ch.placement != "rep" for ch in sel.choices.values()) \
-                else None
-            cnet = compile_plan(sel, params, jit=self.jit, batch=nb,
-                                mesh=mesh)
-            warm_in = np.zeros(bshape if nb == 1 else (nb, *bshape),
-                               np.float32)
-            _block(cnet(warm_in))
+            # not stall behind a cold bucket compiling.
+            cnet = self._compile_with_retry(sel, bshape, nb)
             with self._lock:
                 ev0 = self._compiled.evictions
                 self._compiled.put(pkey, cnet)
@@ -265,6 +302,78 @@ class PlanServer:
                 self._building.pop(pkey, None)
             fut.set_exception(exc)
             raise
+
+    def _compile_with_retry(self, sel: SelectionResult, bshape: Shape,
+                            nb: int) -> CompiledNet:
+        """Compile + warm up ``sel``, surviving transient failures.
+
+        Each attempt (``1 + compile_retries`` total) backs off with
+        seeded jitter (:func:`~repro.reliability.retry_call`).  If every
+        retry fails the *plan itself* is demoted one-shot down the
+        ladder (greedy, then reference) and compiled with the same
+        retry budget — a plan that cannot compile must not take the
+        bucket down with it.  The fault injector's ``compile`` site
+        fires inside each attempt, so chaos runs exercise the real
+        retry and demotion paths.
+        """
+        bkey = bucket_key(bshape, nb)
+
+        def build(s: SelectionResult) -> CompiledNet:
+            if self.fault_injector is not None:
+                self.fault_injector.raise_if("compile", key=bkey)
+            params = s.net.init_params(self.params_seed)
+            # Mesh-sharded compilation only when the plan actually
+            # carries sharded (dp/tp/pp) nodes — an all-rep plan on a
+            # mesh is just the plain executable.
+            mesh = self.mesh if nb > 1 and any(
+                ch.placement != "rep" for ch in s.choices.values()) \
+                else None
+            cnet = compile_plan(s, params, jit=self.jit, batch=nb,
+                                mesh=mesh)
+            warm_in = np.zeros(bshape if nb == 1 else (nb, *bshape),
+                               np.float32)
+            _block(cnet(warm_in))
+            return cnet
+
+        def on_retry(attempt: int, exc: BaseException) -> None:
+            self.counters.add(compile_retries=1)
+
+        try:
+            return retry_call(lambda: build(sel),
+                              retries=self.compile_retries,
+                              base_delay_s=self.compile_backoff_s,
+                              rng=self._retry_rng, on_retry=on_retry)
+        except Exception:
+            if sel.strategy == "reference":
+                raise  # already the last rung: nothing left to demote to
+            self.counters.add(compile_fallbacks=1)
+            fb, rung = self._compile_fallback_plan(sel, bkey)
+            now = time.perf_counter()
+            get_tracer().emit("ladder_demotion", now, now, rung=rung,
+                              bucket=bkey, stage="compile")
+            return retry_call(lambda: build(fb),
+                              retries=self.compile_retries,
+                              base_delay_s=self.compile_backoff_s,
+                              rng=self._retry_rng, on_retry=on_retry)
+
+    def _compile_fallback_plan(self, sel: SelectionResult, bkey: str
+                               ) -> Tuple[SelectionResult, str]:
+        """Demote a plan that would not compile: greedy, else reference.
+
+        Not persisted to any cache tier — the demotion is scoped to the
+        executable being built, so once the transient trouble clears the
+        bucket's next (evicted/re-keyed) build compiles the real plan.
+        """
+        banned = self.quarantine.banned_for(bkey)
+        try:
+            fb = select_local_optimal(sel.net, self.cost,
+                                      banned=banned or None)
+            rung = "greedy"
+        except Exception:
+            fb = reference_selection(sel.net, self.cost)
+            rung = "reference"
+        self.counters.add(**{f"ladder_{rung}": 1})
+        return fb, rung
 
     def prefetch(self, shape_chw: Shape, n: int = 1) -> Future:
         """Async solve+compile for a bucket (returns a Future[CompiledNet]).
@@ -297,6 +406,129 @@ class PlanServer:
         """Current concurrency target of the worker pool."""
         with self._lock:
             return self._pool._max_workers
+
+    # -----------------------------------------------------------------
+    # guarded execution + quarantine
+    # -----------------------------------------------------------------
+    def _execute_guarded(self, cnet: CompiledNet, xb, bshape: Shape,
+                         nb: int
+                         ) -> Tuple[Dict[str, np.ndarray], CompiledNet]:
+        """Run the executable under the kernel circuit breaker.
+
+        Crashes and non-finite outputs count as kernel failures: the
+        culprit primitive is attributed (the injected spec's target, or
+        :func:`~repro.reliability.diagnose_nonfinite` for real NaNs) and
+        fed to the quarantine.  A *tripped* breaker evicts the bucket's
+        plan + executable, re-solves with the culprit banned (warm-
+        started from the poisoned plan), recompiles, and retries the
+        request — up to ``kernel_retries`` times — so the caller gets a
+        correct answer from the degraded plan instead of an error.  An
+        unattributable failure re-raises: retrying the identical plan
+        would loop.  Returns ``(outputs, executable)``; the executable
+        may differ from the argument after a quarantine re-solve.
+        """
+        if not self.guard_outputs and self.fault_injector is None:
+            return {nid: np.asarray(v)
+                    for nid, v in cnet(xb).items()}, cnet
+        bkey = bucket_key(bshape, nb)
+        attempts = 0
+        while True:
+            out: Optional[Dict[str, np.ndarray]] = None
+            failure: Optional[BaseException] = None
+            culprit: Optional[str] = None
+            try:
+                out = {nid: np.asarray(v)
+                       for nid, v in cnet(xb).items()}
+            except Exception as exc:
+                failure = exc
+            if self.fault_injector is not None:
+                # keyed on bucket + the plan's conv primitives so a
+                # spec's ``match`` can target one primitive by name
+                prims = sorted({ch.primitive.name
+                                for ch in cnet.sel.choices.values()
+                                if ch.primitive is not None})
+                spec = self.fault_injector.check(
+                    "kernel", key=f"{bkey}|{','.join(prims)}")
+                if spec is not None:
+                    culprit = next(
+                        (p for p in prims if spec.match in p), None) \
+                        if spec.match else (prims[0] if prims else None)
+                    if spec.kind == "delay":
+                        time.sleep(spec.value)
+                        culprit = None
+                    elif spec.kind == "nan" and out is not None:
+                        out = {nid: np.full_like(v, np.nan)
+                               for nid, v in out.items()}
+                    else:
+                        failure = InjectedFault("kernel", spec.kind,
+                                                culprit or bkey)
+                        out = None
+            if out is not None:
+                if not self.guard_outputs:
+                    return out, cnet
+                if all(np.isfinite(v).all() for v in out.values()):
+                    return out, cnet
+                failure = KernelFailure(bkey, culprit,
+                                        "non-finite outputs")
+            # ---- failure path ----
+            self.counters.add(kernel_failures=1)
+            if culprit is None:
+                culprit = diagnose_nonfinite(cnet, xb)
+            tripped = culprit is not None and \
+                self._quarantine_bucket(bshape, nb, culprit)
+            attempts += 1
+            if not tripped or attempts > self.kernel_retries:
+                if failure is not None:
+                    raise failure
+                raise KernelFailure(bkey, culprit)
+            # the trip rotated the bucket's cache key and evicted its
+            # plan + executable: this re-solves (culprit banned, warm-
+            # started from the poisoned plan), recompiles, and retries
+            cnet = self.compiled_for(bshape, n=nb)
+
+    def _quarantine_bucket(self, bshape: Shape, nb: int,
+                           primitive: str) -> bool:
+        """Record a kernel failure; on a breaker trip evict the bucket.
+
+        The plan tier and executable LRU are keyed on the raw
+        (bucket, batch) pair — they never see the quarantine token — so
+        the trip must evict them explicitly.  The evicted plan is
+        stashed as the warm-start incumbent for the banned re-solve.
+        """
+        pkey: PlanKey = (*bshape, nb)
+        bkey = bucket_key(bshape, nb)
+        tripped = self.quarantine.record_failure(primitive, bkey)
+        if tripped:
+            with self._lock:
+                old = self._plans.pop(pkey, None)
+                if old is not None:
+                    self._quar_warm[pkey] = old
+                self._compiled.pop(pkey)
+            self.counters.add(quarantines=1)
+            now = time.perf_counter()
+            get_tracer().emit("quarantine", now, now,
+                              primitive=primitive, bucket=bkey)
+        return tripped
+
+    def release_quarantine(self, primitive: str, shape_chw: Shape,
+                           n: int = 1) -> bool:
+        """Lift a quarantine for the shape's bucket (half-open retry).
+
+        Evicts the bucket's in-memory tiers so the next request
+        re-keys — with the quarantine set empty again the rotation
+        token vanishes and the bucket's *original* disk plan is a hit.
+        Returns True if a quarantine was actually lifted.
+        """
+        bshape = bucket_shape(shape_chw, self.policy)
+        nb = self.policy.bucket_n(n)
+        if not self.quarantine.release(primitive,
+                                       bucket_key(bshape, nb)):
+            return False
+        with self._lock:
+            self._plans.pop((*bshape, nb), None)
+            self._compiled.pop((*bshape, nb))
+            self._quar_warm.pop((*bshape, nb), None)
+        return True
 
     # -----------------------------------------------------------------
     # output cropping
@@ -363,11 +595,12 @@ class PlanServer:
             expected = self._expected_out_shapes(x.shape)
             t0 = time.perf_counter()
             with tracer.span("execute", bucket=bkey):
-                out = cnet(xb)
+                out, cnet = self._execute_guarded(cnet, xb, bshape,
+                                                  cnet.batch)
             with tracer.span("crop"):
                 out = {nid: self._crop(
-                           np.asarray(v)[0] if cnet.batch > 1
-                           else np.asarray(v), expected.get(nid, ()))
+                           v[0] if cnet.batch > 1 else v,
+                           expected.get(nid, ()))
                        for nid, v in out.items()}
             self.counters.add(_bucket=bkey, requests=1,
                               execute_s=time.perf_counter() - t0)
@@ -434,8 +667,8 @@ class PlanServer:
             t0 = time.perf_counter()
             with tracer.span("execute", bucket=bkey,
                              coalesced=len(chunk)):
-                out = cnet(xb if nb > 1 else xb[0])
-                out = {nid: np.asarray(v) for nid, v in out.items()}
+                out, cnet = self._execute_guarded(
+                    cnet, xb if nb > 1 else xb[0], bshape, nb)
             # coalesced counts per *invocation*: requests that
             # shared this executable call with at least one other
             self.counters.add(_bucket=bkey, batch_calls=1,
@@ -504,6 +737,9 @@ class PlanServer:
         d = self.counters.snapshot()
         d["buckets"] = len(self._plans)
         d["live_executables"] = len(self._compiled)
+        #: active circuit-breaker entries, as "primitive@bucket" strings
+        d["quarantined"] = [f"{p}@{b}"
+                            for p, b in self.quarantine.active()]
         if self._disk is not None:
             d["disk_plans"] = len(self._disk)
         #: histogram-backed latency percentiles per phase — entries

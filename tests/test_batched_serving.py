@@ -359,4 +359,5 @@ class TestServeLoopCoalescing:
         assert s["requests"] == 2
         assert s["coalesced"] == 1
         assert s["solves"] == 1 and s["compiles"] == 1
+        loop.close()
         srv.close()

@@ -95,25 +95,39 @@ class TestSerialization:
             selection_from_payload(payload, net)
 
 
+def _payload(**kw):
+    """A schema-valid cache payload (get() treats others as corrupt)."""
+    from repro.serving.plan_cache import PLAN_SCHEMA
+    return {"schema": PLAN_SCHEMA, **kw}
+
+
 class TestDiskCacheAccounting:
     def test_hit_miss_counters(self, tmp_path):
         cache = PlanDiskCache(tmp_path)
         assert cache.get("abc") is None
         assert (cache.hits, cache.misses) == (0, 1)
-        cache.put("abc", {"x": 1})
-        assert cache.get("abc") == {"x": 1}
+        cache.put("abc", _payload(x=1))
+        assert cache.get("abc") == _payload(x=1)
         assert (cache.hits, cache.misses) == (1, 1)
         assert len(cache) == 1
 
     def test_corrupt_file_is_a_miss(self, tmp_path):
         cache = PlanDiskCache(tmp_path)
-        cache.put("abc", {"x": 1})
+        cache.put("abc", _payload(x=1))
         (tmp_path / "plan_abc.json").write_text("{not json")
         assert cache.get("abc") is None
         assert cache.misses == 1
+        assert cache.corrupt == 1
+        assert not (tmp_path / "plan_abc.json").exists()  # deleted
         # and a subsequent put repairs the entry
-        cache.put("abc", {"x": 2})
-        assert cache.get("abc") == {"x": 2}
+        cache.put("abc", _payload(x=2))
+        assert cache.get("abc") == _payload(x=2)
+
+    def test_stale_schema_is_a_miss(self, tmp_path):
+        cache = PlanDiskCache(tmp_path)
+        cache.put("abc", {"schema": 1, "x": 1})   # ancient format
+        assert cache.get("abc") is None
+        assert cache.corrupt == 1
 
     def test_concurrent_puts_same_key(self, tmp_path):
         """Satellite fix: writers used to share one plan_<key>.tmp name,
@@ -129,7 +143,8 @@ class TestDiskCacheAccounting:
         def writer(i):
             try:
                 for _ in range(50):
-                    cache.put("shared", {"writer": i, "x": list(range(64))})
+                    cache.put("shared",
+                              _payload(writer=i, x=list(range(64))))
             except BaseException as e:  # noqa: BLE001 - record any crash
                 errors.append(e)
 

@@ -1,0 +1,495 @@
+"""Reliability-layer tests (PR 9 acceptance).
+
+The contract under test, per docs/reliability.md: faults are injected
+deterministically and replayably; a solve that cannot finish degrades
+down the ladder (anytime -> greedy -> reference) instead of failing the
+request; corrupt plan-cache entries are misses, never errors; compiles
+retry with bounded backoff and demote the plan as a last resort; a
+crashing/NaN kernel trips a per-(primitive, bucket) breaker whose
+re-solve excludes it and whose release restores the original plan; and
+a scheduler with shedding enabled rejects unmeetable deadlines at
+admission with a typed error.
+"""
+import json
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.costs import AnalyticCostModel
+from repro.core.pbqp import PBQP, solve
+from repro.core.selection import select_local_optimal, select_pbqp
+from repro.reliability import (
+    FallbackLadder, FaultInjector, FaultSpec, InjectedFault,
+    KernelFailure, PrimitiveQuarantine, ShedError, diagnose_nonfinite,
+    parse_fault_plan, reference_selection, retry_call,
+)
+from repro.serving import (
+    BucketPolicy, ContinuousScheduler, PlanDiskCache, PlanServer,
+    conv_tower,
+)
+
+CM = AnalyticCostModel()
+POLICY = BucketPolicy(min_hw=8, max_hw=64, max_n=4)
+
+
+def _server(**kw):
+    kw.setdefault("policy", POLICY)
+    kw.setdefault("lru_capacity", 8)
+    kw.setdefault("compile_backoff_s", 0.001)
+    return PlanServer(lambda s: conv_tower(s, depth=2, width=4), CM,
+                      **kw)
+
+
+def _injector(plan: str, seed: int = 0) -> FaultInjector:
+    return FaultInjector(parse_fault_plan(plan), seed=seed)
+
+
+def _dense_pbqp(seed: int, n: int = 9, k: int = 4) -> PBQP:
+    """B&B-heavy instance (reductions alone cannot finish it)."""
+    rng = np.random.default_rng(seed)
+    pb = PBQP()
+    for i in range(n):
+        pb.add_node(i, rng.uniform(1, 100, size=k))
+    for i in range(n):
+        for j in range(i + 1, n):
+            pb.add_edge(i, j, rng.uniform(0, 50, size=(k, k)))
+    return pb
+
+
+def _prims(sel):
+    return sorted({c.primitive.name for c in sel.choices.values()
+                   if c.primitive is not None})
+
+
+def _nanify(node_params):
+    """NaN-poison every float leaf of one node's packed parameters."""
+    import jax
+    return jax.tree.map(
+        lambda v: np.full_like(v, np.nan)
+        if np.issubdtype(np.asarray(v).dtype, np.floating) else v,
+        node_params)
+
+
+# ======================================================================
+# anytime branch-and-bound
+# ======================================================================
+class TestAnytimeSolve:
+    def test_expired_deadline_returns_best_so_far(self):
+        pb = _dense_pbqp(1)
+        exact = solve(pb, exact=True)
+        anytime = solve(pb, exact=True, deadline_s=0.0)
+        assert not anytime.optimal
+        assert anytime.stats["DEADLINE"] == 1
+        # a full, valid assignment — degraded in proof, not in shape
+        assert set(anytime.assignment) == set(pb.nodes)
+        assert np.isfinite(anytime.cost)
+        assert anytime.cost >= exact.cost - 1e-9
+
+    def test_generous_deadline_stays_exact(self):
+        pb = _dense_pbqp(1)
+        sol = solve(pb, exact=True, deadline_s=60.0)
+        assert sol.optimal
+        assert sol.stats.get("DEADLINE", 0) == 0
+
+    def test_no_deadline_is_unchanged(self):
+        pb = _dense_pbqp(0)
+        assert solve(pb, exact=True).optimal
+
+    def test_selection_threads_deadline_through(self):
+        net = conv_tower((4, 16, 16), depth=2, width=4)
+        sel = select_pbqp(net, CM, deadline_s=60.0)
+        assert sel.optimal  # tiny instance: deadline never binds
+
+
+# ======================================================================
+# fault injector
+# ======================================================================
+class TestFaultInjector:
+    def test_window_semantics(self):
+        inj = FaultInjector([FaultSpec("compile", start=1, count=2)])
+        fired = [inj.check("compile") is not None for _ in range(5)]
+        assert fired == [False, True, True, False, False]
+
+    def test_deterministic_replay(self):
+        plan = (FaultSpec("kernel", kind="nan", p=0.5, count=0),)
+        a = FaultInjector(plan, seed=7)
+        b = FaultInjector(plan, seed=7)
+        ticks_a = [a.check("kernel") is not None for _ in range(50)]
+        ticks_b = [b.check("kernel") is not None for _ in range(50)]
+        assert ticks_a == ticks_b
+        assert any(ticks_a) and not all(ticks_a)
+
+    def test_match_filters_by_key(self):
+        inj = FaultInjector([FaultSpec("kernel", match="winograd",
+                                       count=0)])
+        assert inj.check("kernel", key="direct_lax") is None
+        assert inj.check("kernel", key="winograd_f2") is not None
+
+    def test_sites_isolated(self):
+        inj = FaultInjector([FaultSpec("compile", start=0, count=1)])
+        assert inj.check("solve") is None       # does not tick compile
+        assert inj.check("compile") is not None
+
+    def test_fired_log_records_history(self):
+        inj = FaultInjector([FaultSpec("compile", count=1)])
+        inj.check("compile", key="b1")
+        assert inj.fired == [("compile", "raise", 0, "b1")]
+
+    def test_raise_if_raises_typed_error(self):
+        inj = FaultInjector([FaultSpec("compile", count=1)])
+        with pytest.raises(InjectedFault) as ei:
+            inj.raise_if("compile", key="b1")
+        assert ei.value.site == "compile"
+
+    def test_parse_inline_dsl(self):
+        specs = parse_fault_plan(
+            "kernel:nan@5+3~winograd,compile:raise@0+2,"
+            "solve:budget@1=5000")
+        assert specs[0] == FaultSpec("kernel", kind="nan", start=5,
+                                     count=3, match="winograd")
+        assert specs[1] == FaultSpec("compile", kind="raise", start=0,
+                                     count=2)
+        assert specs[2].value == 5000.0
+
+    def test_parse_json_file(self, tmp_path):
+        p = tmp_path / "plan.json"
+        p.write_text(json.dumps(
+            [{"site": "worker", "kind": "raise", "start": 3}]))
+        specs = parse_fault_plan(str(p))
+        assert specs == [FaultSpec("worker", start=3)]
+
+    def test_invalid_site_rejected(self):
+        with pytest.raises(ValueError):
+            FaultSpec("nonsense")
+        with pytest.raises(ValueError):
+            parse_fault_plan("nonsense:raise")
+
+
+# ======================================================================
+# retry helper
+# ======================================================================
+class TestRetryCall:
+    def test_retries_then_succeeds(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise RuntimeError("transient")
+            return "ok"
+
+        assert retry_call(flaky, retries=2, base_delay_s=0.0) == "ok"
+        assert len(calls) == 3
+
+    def test_exhausted_reraises_and_backoff_grows(self):
+        sleeps = []
+        calls = []
+
+        def always_fails():
+            calls.append(1)
+            raise RuntimeError("permanent")
+
+        import repro.reliability.fallback as fb
+        orig = fb.time.sleep
+        fb.time.sleep = sleeps.append
+        try:
+            with pytest.raises(RuntimeError, match="permanent"):
+                retry_call(always_fails, retries=2, base_delay_s=0.01)
+        finally:
+            fb.time.sleep = orig
+        assert len(calls) == 3
+        assert len(sleeps) == 2
+        assert sleeps[1] > sleeps[0]  # exponential with jitter in [1,2)
+
+
+# ======================================================================
+# corrupt plan cache (satellite regression)
+# ======================================================================
+class TestCorruptPlanCache:
+    def _seed_cache(self, tmp_path):
+        srv = _server(cache_dir=tmp_path)
+        srv.plan_for((3, 16, 16))
+        srv.close()
+        return next(pathlib.Path(tmp_path).glob("plan_*.json"))
+
+    def test_truncated_payload_is_miss_delete_resolve(self, tmp_path):
+        f = self._seed_cache(tmp_path)
+        raw = f.read_text()
+        f.write_text(raw[:len(raw) // 2])   # hand-truncated payload
+        srv = _server(cache_dir=tmp_path)
+        sel = srv.plan_for((3, 16, 16))
+        s = srv.stats()
+        assert sel.optimal
+        assert s["plan_cache_corrupt"] == 1
+        assert s["plan_disk_hits"] == 0 and s["solves"] == 1
+        # bad file was deleted and the re-solve re-persisted a good one
+        assert json.loads(f.read_text())["schema"] is not None
+        srv.close()
+
+    def test_schema_mismatch_is_corrupt_not_error(self, tmp_path):
+        f = self._seed_cache(tmp_path)
+        payload = json.loads(f.read_text())
+        payload["schema"] = 1  # ancient plan format
+        f.write_text(json.dumps(payload))
+        srv = _server(cache_dir=tmp_path)
+        srv.plan_for((3, 16, 16))
+        assert srv.stats()["plan_cache_corrupt"] == 1
+        srv.close()
+
+    def test_non_dict_payload_is_corrupt(self, tmp_path):
+        f = self._seed_cache(tmp_path)
+        f.write_text("[1, 2, 3]")
+        srv = _server(cache_dir=tmp_path)
+        srv.plan_for((3, 16, 16))
+        assert srv.stats()["plan_cache_corrupt"] == 1
+        srv.close()
+
+    def test_on_corrupt_callback_and_counter(self, tmp_path):
+        cache = PlanDiskCache(tmp_path, on_corrupt=lambda k: seen.append(k))
+        seen = []
+        cache.put("abc", {"schema": -1})
+        assert cache.get("abc") is None
+        assert cache.corrupt == 1 and seen == ["abc"]
+
+    def test_injected_corruption_truncates_real_file(self, tmp_path):
+        self._seed_cache(tmp_path)
+        srv = _server(cache_dir=tmp_path,
+                      fault_injector=_injector("plan_cache:corrupt@0+1"))
+        srv.plan_for((3, 16, 16))
+        assert srv.stats()["plan_cache_corrupt"] == 1
+        srv.close()
+
+
+# ======================================================================
+# fallback ladder
+# ======================================================================
+class TestFallbackLadder:
+    def test_reference_selection_executes_and_matches(self):
+        from repro.core.plan import compile_plan
+        net = conv_tower((3, 16, 16), depth=2, width=4)
+        ref = reference_selection(net, CM)
+        assert ref.strategy == "reference" and not ref.optimal
+        exact = select_pbqp(net, CM)
+        params = net.init_params(0)
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        out_ref = compile_plan(ref, params)(x)
+        out_exact = compile_plan(exact, params)(x)
+        for nid in out_exact:
+            np.testing.assert_allclose(out_ref[nid], out_exact[nid],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_solve_fault_demotes_to_greedy(self):
+        lad = FallbackLadder(CM,
+                             fault_injector=_injector("solve:raise@0+1"))
+        net = conv_tower((4, 16, 16), depth=2, width=4)
+        sel, rung = lad.select(net, bucket="b")
+        assert rung == "greedy"
+        assert sel.strategy == "local_optimal"
+        # next solve is healthy again
+        _, rung2 = lad.select(net, bucket="b")
+        assert rung2 == "exact"
+
+    def test_rung_counters_bump(self):
+        from repro.serving.metrics import ServingCounters
+        ctr = ServingCounters()
+        lad = FallbackLadder(CM, counters=ctr,
+                             fault_injector=_injector("solve:raise@0+1"))
+        net = conv_tower((4, 16, 16), depth=2, width=4)
+        lad.select(net, bucket="b")
+        lad.select(net, bucket="b")
+        snap = ctr.snapshot()
+        assert snap["ladder_greedy"] == 1
+        assert snap["ladder_exact"] == 1
+        assert snap["ladder_demotions"] == 1
+
+    def test_server_serves_correct_output_from_greedy_rung(self):
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        srv = _server()
+        healthy = srv.infer(x)
+        srv.close()
+        srv = _server(fault_injector=_injector("solve:raise@0+1"))
+        out = srv.infer(x)
+        assert srv.stats()["ladder_greedy"] == 1
+        for nid in healthy:
+            np.testing.assert_allclose(out[nid], healthy[nid],
+                                       rtol=1e-3, atol=1e-5)
+        srv.close()
+
+
+# ======================================================================
+# compile retry + demotion
+# ======================================================================
+class TestCompileRetry:
+    def test_transient_failure_retries_and_counts(self):
+        srv = _server(fault_injector=_injector("compile:raise@0+2"))
+        out = srv.infer(np.zeros((3, 16, 16), np.float32))
+        s = srv.stats()
+        assert s["compile_retries"] == 2
+        assert s["compile_fallbacks"] == 0
+        assert all(np.isfinite(v).all() for v in out.values())
+        srv.close()
+
+    def test_persistent_failure_demotes_plan(self):
+        # 3 failures = 1 + compile_retries(2) attempts: the exact plan
+        # never compiles, the greedy fallback does
+        srv = _server(fault_injector=_injector("compile:raise@0+3"))
+        out = srv.infer(np.zeros((3, 16, 16), np.float32))
+        s = srv.stats()
+        assert s["compile_fallbacks"] == 1
+        assert s["ladder_greedy"] == 1
+        assert all(np.isfinite(v).all() for v in out.values())
+        srv.close()
+
+    def test_unrecoverable_compile_raises(self):
+        # every attempt of both the exact and the fallback plan fails
+        srv = _server(fault_injector=_injector("compile:raise@0+6"),
+                      compile_retries=1)
+        with pytest.raises(InjectedFault):
+            srv.infer(np.zeros((3, 16, 16), np.float32))
+        srv.close()
+
+
+# ======================================================================
+# quarantine
+# ======================================================================
+class TestQuarantineUnit:
+    def test_threshold_and_release(self):
+        q = PrimitiveQuarantine(threshold=2)
+        assert not q.record_failure("p", "b")
+        assert q.record_failure("p", "b")       # second failure trips
+        assert q.is_quarantined("p", "b")
+        assert q.banned_for("b") == frozenset({"p"})
+        assert q.banned_for("other") == frozenset()
+        assert q.release("p", "b")
+        assert not q.release("p", "b")          # already released
+        assert not q.record_failure("p", "b")   # count was reset
+
+    def test_version_token_rotates_and_recovers(self):
+        q = PrimitiveQuarantine()
+        assert q.version_token("b") == ""
+        q.record_failure("p", "b")
+        tok = q.version_token("b")
+        assert tok.startswith("+quar=")
+        assert q.version_token("other") == ""
+        q.release("p", "b")
+        assert q.version_token("b") == ""       # original keys again
+
+    def test_diagnose_blames_nan_kernel(self):
+        from repro.core.plan import compile_plan
+        net = conv_tower((3, 16, 16), depth=2, width=4)
+        sel = select_pbqp(net, CM)
+        cnet = compile_plan(sel, net.init_params(0))
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        assert diagnose_nonfinite(cnet, x) is None  # healthy
+        first_conv = next(n.id for n in sel.net.conv_nodes())
+        cnet.params[first_conv] = _nanify(cnet.params[first_conv])
+        assert diagnose_nonfinite(cnet, x) == \
+            sel.choices[first_conv].primitive.name
+
+
+class TestQuarantineEndToEnd:
+    def test_trip_resolve_release_cycle(self, tmp_path):
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        srv = _server(cache_dir=tmp_path)
+        healthy = srv.infer(x)
+        prims0 = _prims(srv.plan_for(x.shape))
+        srv.close()
+
+        target = prims0[0]
+        srv = _server(cache_dir=tmp_path,
+                      fault_injector=_injector(f"kernel:nan@0+1~{target}"))
+        out = srv.infer(x)          # NaN -> trip -> re-solve -> retry
+        s = srv.stats()
+        assert s["kernel_failures"] == 1 and s["quarantines"] == 1
+        assert s["quarantined"] and target in s["quarantined"][0]
+        for nid in healthy:         # the request still answered right
+            np.testing.assert_allclose(out[nid], healthy[nid],
+                                       rtol=1e-3, atol=1e-5)
+        assert target not in _prims(srv.plan_for(x.shape))
+
+        hits = srv.stats()["plan_disk_hits"]
+        assert srv.release_quarantine(target, x.shape)
+        assert _prims(srv.plan_for(x.shape)) == prims0
+        # recovery keyed back onto the ORIGINAL persisted plan: a disk
+        # hit, not a re-solve
+        assert srv.stats()["plan_disk_hits"] == hits + 1
+        srv.close()
+
+    def test_unattributable_failure_raises_kernel_failure(self):
+        # kernel fault with kind=raise and no match: culprit is the
+        # plan's first primitive, quarantine still recovers; but an
+        # exhausted retry budget surfaces the typed error
+        srv = _server(fault_injector=_injector("kernel:raise@0+9"),
+                      kernel_retries=1)
+        with pytest.raises((InjectedFault, KernelFailure)):
+            srv.infer(np.zeros((3, 16, 16), np.float32))
+        assert srv.stats()["kernel_failures"] >= 1
+        srv.close()
+
+    def test_real_nan_attributed_and_quarantined(self):
+        # no injector at all: poison the compiled executable's params
+        # so the kernel REALLY emits NaN, then let the guard attribute
+        # and quarantine it
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        srv = _server()
+        cnet = srv.compiled_for(x.shape)
+        first_conv = next(n.id for n in cnet.sel.net.conv_nodes())
+        cnet.params[first_conv] = _nanify(cnet.params[first_conv])
+        out = srv.infer(x)
+        s = srv.stats()
+        assert s["quarantines"] == 1
+        assert all(np.isfinite(v).all() for v in out.values())
+        srv.close()
+
+
+# ======================================================================
+# load shedding
+# ======================================================================
+class TestLoadShedding:
+    def test_unmeetable_deadline_shed_at_admission(self):
+        srv = _server()
+        sched = ContinuousScheduler(srv, batch_window_s=0.01, shed=True)
+        sched.prewarm([(3, 16, 16)])
+        x = np.zeros((3, 16, 16), np.float32)
+        with pytest.raises(ShedError) as ei:
+            sched.submit(x, slo_s=1e-12)
+        assert ei.value.eta_s > 0
+        assert sched.stats()["shed_requests"] == 1
+        # a feasible deadline is admitted and served
+        out = sched.submit(x, slo_s=60.0).result(timeout=60)
+        assert all(np.isfinite(v).all() for v in out.values())
+        sched.close()
+        srv.close()
+
+    def test_shed_off_by_default(self):
+        srv = _server()
+        sched = ContinuousScheduler(srv, batch_window_s=0.01)
+        sched.prewarm([(3, 16, 16)])
+        x = np.zeros((3, 16, 16), np.float32)
+        # hopeless deadline: admitted anyway, counted as a miss
+        out = sched.submit(x, slo_s=1e-12).result(timeout=60)
+        s = sched.stats()
+        assert s["shed_requests"] == 0
+        assert s["deadline_miss"] == 1
+        assert all(np.isfinite(v).all() for v in out.values())
+        sched.close()
+        srv.close()
+
+    def test_deadline_less_requests_never_shed(self):
+        srv = _server()
+        sched = ContinuousScheduler(srv, batch_window_s=0.01, shed=True,
+                                    shed_safety=1e9)
+        sched.prewarm([(3, 16, 16)])
+        out = sched.submit(np.zeros((3, 16, 16), np.float32)) \
+            .result(timeout=60)
+        assert sched.stats()["shed_requests"] == 0
+        assert all(np.isfinite(v).all() for v in out.values())
+        sched.close()
+        srv.close()

@@ -276,3 +276,130 @@ class TestServeLoopOpenLoop:
         assert all(r.done for r in reqs)
         assert wall >= 0.2  # the last arrival gated the run
         loop.close()
+
+
+class TestWorkerDeath:
+    """Injected worker-slot deaths mid-dispatch (PR 9 reliability)."""
+
+    def _chaos_sched(self, plan: str):
+        from repro.reliability import FaultInjector, parse_fault_plan
+        srv = _server(fault_injector=FaultInjector(parse_fault_plan(plan)))
+        sched = ContinuousScheduler(srv, batch_window_s=0.01)
+        sched.prewarm([(3, 16, 16)], batches=(1, 2))
+        return srv, sched
+
+    def test_death_requeues_group_and_completes(self):
+        srv, sched = self._chaos_sched("worker:raise@0+1")
+        x = np.random.default_rng(0).normal(size=(3, 16, 16)) \
+            .astype(np.float32)
+        healthy = srv.infer(x)
+        out = sched.submit(x).result(timeout=60)
+        s = sched.stats()
+        assert s["worker_deaths"] == 1
+        assert s["worker_requeues"] == 1
+        for nid in healthy:
+            np.testing.assert_allclose(out[nid], healthy[nid],
+                                       rtol=1e-5, atol=1e-6)
+        sched.close()
+        srv.close()
+
+    def test_second_death_poisons_the_request(self):
+        from repro.reliability import InjectedFault
+        srv, sched = self._chaos_sched("worker:raise@0+2")
+        x = np.zeros((3, 16, 16), np.float32)
+        fut = sched.submit(x)
+        with pytest.raises(InjectedFault):
+            fut.result(timeout=60)
+        s = sched.stats()
+        assert s["worker_deaths"] == 2
+        assert s["worker_requeues"] == 1  # requeued once, then poison
+        sched.close()
+        srv.close()
+
+    def test_death_in_coalesced_group_requeues_all(self):
+        srv, sched = self._chaos_sched("worker:raise@0+1")
+        xs = [np.random.default_rng(i).normal(size=(3, 16, 16))
+              .astype(np.float32) for i in range(2)]
+        healthy = [srv.infer(x) for x in xs]
+        futs = sched.submit_many(xs)
+        outs = [f.result(timeout=60) for f in futs]
+        s = sched.stats()
+        assert s["worker_deaths"] >= 1
+        assert s["worker_requeues"] >= 1
+        for h, out in zip(healthy, outs):
+            for nid in h:
+                np.testing.assert_allclose(out[nid], h[nid],
+                                           rtol=1e-5, atol=1e-6)
+        sched.close()
+        srv.close()
+
+
+class TestLifecycleRaces:
+    """close()/resize_workers() racing in-flight bucket groups."""
+
+    def test_close_races_inflight_groups(self):
+        # a burst across two buckets is still in flight when close()
+        # lands; drain semantics say every submitted future resolves
+        srv = _server()
+        sched = ContinuousScheduler(srv, batch_window_s=0.002)
+        sched.prewarm([(3, 16, 16), (3, 24, 24)], batches=(1, 2, 4))
+        rng = np.random.default_rng(0)
+        futs = [sched.submit(rng.normal(size=shape).astype(np.float32))
+                for _ in range(8)
+                for shape in ((3, 16, 16), (3, 24, 24))]
+        sched.close()  # drain=True: must not strand any future
+        assert all(f.done() for f in futs)
+        for f in futs:
+            out = f.result(timeout=0)
+            assert all(np.isfinite(v).all() for v in out.values())
+        srv.close()
+
+    def test_resize_thrash_races_inflight_groups(self):
+        # the worker pool is retargeted continuously while groups are
+        # being dispatched; nothing may be lost or computed wrong
+        import threading
+        srv = _server()
+        sched = ContinuousScheduler(srv, batch_window_s=0.002)
+        sched.prewarm([(3, 16, 16)], batches=(1, 2, 4))
+        stop = threading.Event()
+
+        def thrash():
+            n = 0
+            while not stop.is_set():
+                srv.resize_workers(1 + n % 4)
+                n += 1
+                time.sleep(0.001)
+
+        t = threading.Thread(target=thrash, name="resize-thrash")
+        t.start()
+        try:
+            x = np.random.default_rng(1).normal(size=(3, 16, 16)) \
+                .astype(np.float32)
+            healthy = srv.infer(x)
+            futs = [sched.submit(x) for _ in range(24)]
+            for f in futs:
+                out = f.result(timeout=60)
+                for nid in healthy:
+                    np.testing.assert_allclose(out[nid], healthy[nid],
+                                               rtol=1e-5, atol=1e-6)
+        finally:
+            stop.set()
+            t.join(timeout=10)
+        sched.close()
+        srv.close()
+
+    def test_worker_death_during_close_still_drains(self):
+        # a group requeued by a dying worker after close() was called
+        # must still be served by the drain, not stranded
+        from repro.reliability import FaultInjector, parse_fault_plan
+        srv = _server(fault_injector=FaultInjector(
+            parse_fault_plan("worker:raise@0+1")))
+        sched = ContinuousScheduler(srv, batch_window_s=0.05)
+        sched.prewarm([(3, 16, 16)])
+        x = np.zeros((3, 16, 16), np.float32)
+        fut = sched.submit(x)   # sits in the window when close() lands
+        sched.close()
+        out = fut.result(timeout=0)
+        assert all(np.isfinite(v).all() for v in out.values())
+        assert sched.stats()["worker_deaths"] == 1
+        srv.close()

@@ -174,6 +174,7 @@ class TestServeLoopVisionBridge:
         s = srv.stats()
         assert s["requests"] == 2 and s["solves"] == 1 \
             and s["compiles"] == 1
+        loop.close()
         srv.close()
 
 

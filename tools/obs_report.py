@@ -21,6 +21,14 @@ written by ``repro.launch.serve --trace`` (count/total/p50 per span
 name):
 
   python tools/obs_report.py --trace-file trace.jsonl
+
+``--metrics-file``: render the *degradation* report from a stats
+snapshot written by ``repro.launch.serve --metrics-json`` — fallback-
+ladder rung counts, quarantined primitives, shed/requeued requests —
+the reliability-layer events (docs/reliability.md) that belong next to
+the drift table when debugging a fleet serving below-optimal plans:
+
+  python tools/obs_report.py --metrics-file metrics.json
 """
 from __future__ import annotations
 
@@ -112,6 +120,44 @@ def trace_summary(args) -> int:
     return 0
 
 
+def degradation_report(args) -> int:
+    """Reliability-event table from a server stats snapshot."""
+    with open(args.metrics_file) as fh:
+        s = json.load(fh)
+
+    def g(key, default=0):
+        return s.get(key, default)
+
+    total = sum(int(g(f"ladder_{r}"))
+                for r in ("exact", "anytime", "greedy", "reference"))
+    print("fallback ladder (selections per rung)")
+    print(f"{'rung':<12} {'count':>7} {'share':>8}")
+    for rung in ("exact", "anytime", "greedy", "reference"):
+        n = int(g(f"ladder_{rung}"))
+        share = n / total if total else 0.0
+        print(f"{rung:<12} {n:>7} {share:>7.1%}")
+    print(f"\nquarantine: {int(g('quarantines'))} trips, "
+          f"{int(g('kernel_failures'))} kernel failures")
+    active = g("quarantined", [])
+    for entry in active:
+        print(f"  active: {entry}")
+    if not active:
+        print("  active: none")
+    print(f"shed: {int(g('shed_requests'))} requests rejected at "
+          f"admission")
+    print(f"workers: {int(g('worker_deaths'))} deaths, "
+          f"{int(g('worker_requeues'))} requests re-queued")
+    print(f"plan cache: {int(g('plan_cache_corrupt'))} corrupt entries "
+          f"deleted; compile: {int(g('compile_retries'))} retries, "
+          f"{int(g('compile_fallbacks'))} plan demotions")
+    demoted = int(g("ladder_demotions"))
+    flag = demoted or active or int(g("shed_requests"))
+    print(f"\n{'DEGRADED' if flag else 'healthy'}: "
+          f"{demoted} below-exact selections, "
+          f"{len(active)} active quarantines")
+    return 1 if (flag and args.strict) else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="predicted-vs-observed drift table / trace summary")
@@ -137,9 +183,14 @@ def main(argv=None) -> int:
                     help="exit 1 when recalibration is recommended")
     ap.add_argument("--trace-file", default=None,
                     help="summarize a span JSONL instead of measuring")
+    ap.add_argument("--metrics-file", default=None,
+                    help="render the degradation report from a stats "
+                         "snapshot (repro.launch.serve --metrics-json)")
     args = ap.parse_args(argv)
     if args.trace_file:
         return trace_summary(args)
+    if args.metrics_file:
+        return degradation_report(args)
     return drift_table(args)
 
 
