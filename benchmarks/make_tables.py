@@ -138,11 +138,45 @@ def observability_table():
               f"(within threshold: {dr['final_within_threshold']}) |")
 
 
+def primitives_table():
+    """Summarize benchmarks/results/BENCH_primitives.json (written by
+    bench_primitives / run.py): the autotuned-variant gates and the
+    paper's ">70 primitives" comparison row."""
+    p = pathlib.Path(__file__).parent / "results" / \
+        "BENCH_primitives.json"
+    if not p.exists():
+        print("(no BENCH_primitives.json — run "
+              "`python -m benchmarks.bench_primitives` first)")
+        return
+    d = json.loads(p.read_text())
+    print("| registry | primitives |")
+    print("|---|---|")
+    print(f"| paper claim (Section 2) | "
+          f"{d.get('paper_claim_min_primitives', 70)}+ |")
+    print(f"| hand-written | {d['registry_handwritten']} |")
+    print(f"| + autotuned survivors | {d['registry_tuned']} "
+          f"({d['variants_surviving']} of {d['variants_generated']} "
+          f"generated; {d['variants_pruned']} dominated) |")
+    print("\n| tower | gap naive/solved | variant wins | solve time |")
+    print("|---|---|---|---|")
+    for name, t in sorted(d["towers"].items()):
+        print(f"| {name} | {t['gap_base']:.3f} -> "
+              f"{t['gap_tuned']:.3f} | {t['variant_wins']} | "
+              f"{t['solve_s_base']*1e3:.1f} -> "
+              f"{t['solve_s_tuned']*1e3:.1f} ms "
+              f"({t['solve_ratio']:.2f}x) |")
+    gates = d.get("gates", {})
+    print("\n| gate | status |")
+    print("|---|---|")
+    for g, ok in sorted(gates.items()):
+        print(f"| {g} | {'ok' if ok else 'FAIL'} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "hillclimb",
-                             "observability"])
+                             "observability", "primitives"])
     args = ap.parse_args()
     if args.section in ("all", "dryrun"):
         print("## Dry-run matrix\n")
@@ -156,6 +190,9 @@ def main():
     if args.section in ("all", "observability"):
         print("\n## Observability\n")
         observability_table()
+    if args.section in ("all", "primitives"):
+        print("\n## Autotuned primitives\n")
+        primitives_table()
 
 
 if __name__ == "__main__":

@@ -120,6 +120,29 @@ def run_observability(args) -> None:
          f"converged={d['final_converged']}")
 
 
+def run_primitives(args) -> None:
+    """Autotuned-variant section: tune, install, re-solve the reference
+    towers (benchmarks/bench_primitives, folded into
+    results/BENCH_primitives.json)."""
+    from .bench_primitives import bench_primitives
+
+    rows = bench_primitives()
+    _emit(rows, "BENCH_primitives.json")
+    _csv("primitives/registry", 0.0,
+         f"base={rows['registry_base']};tuned={rows['registry_tuned']};"
+         f"claim>={rows['paper_claim_min_primitives']}")
+    _csv("primitives/variants", rows["tune_s"] * 1e6,
+         f"generated={rows['variants_generated']};"
+         f"surviving={rows['variants_surviving']};"
+         f"pruned={rows['variants_pruned']}")
+    for name, t in rows["towers"].items():
+        _csv(f"primitives/{name}", t["solve_s_tuned"] * 1e6,
+             f"gap={t['gap_base']:.3f}->{t['gap_tuned']:.3f};"
+             f"wins={t['variant_wins']};"
+             f"solve_ratio={t['solve_ratio']:.2f}")
+    print(f"# gates: {rows['gates']}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nets", nargs="+",
@@ -135,10 +158,15 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--observability-only", action="store_true")
     ap.add_argument("--skip-observability", action="store_true")
+    ap.add_argument("--primitives-only", action="store_true")
+    ap.add_argument("--skip-primitives", action="store_true")
     args = ap.parse_args()
 
     if args.observability_only:
         run_observability(args)
+        return
+    if args.primitives_only:
+        run_primitives(args)
         return
     if not args.roofline_only:
         run_paper_tables(args)
@@ -146,6 +174,8 @@ def main() -> None:
         run_roofline(args)
     if not args.skip_observability:
         run_observability(args)
+    if not args.skip_primitives:
+        run_primitives(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,148 @@
+"""Tuning sweep: measure candidate variants through the calibrate
+machinery.
+
+The tuner reuses the calibration subsystem wholesale: measurements are
+:class:`~repro.calibrate.sweep.SweepItem`\\ s executed by
+:func:`~repro.calibrate.sweep.run_sweep` against a resumable
+:class:`~repro.calibrate.profile.HardwareProfile`, keyed with the same
+``prim::<name>::<bucket>`` keys the :class:`~repro.calibrate.model.
+CalibratedCostModel` serves — so a tuning profile *is* a calibration
+profile covering the generated variants.
+
+On real TPU hardware items time the kernels (``measure_primitive`` /
+the space's benchmark builder).  On CPU the Pallas kernels only run in
+interpret mode, whose timings price nothing real — there
+:func:`analytic_measurer` injects the tile-aware analytic TPU model
+through ``run_sweep(measure=...)``, which keeps the whole pipeline
+(resume, budget caps, pruning, catalog) deterministic and exercisable
+anywhere.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from ..calibrate.sweep import SweepItem
+from ..core.costs import (
+    AnalyticCostModel, HardwareSpec, TPU_V5E_SPEC, measure_primitive,
+    prim_cost_key, time_callable,
+)
+from ..core.primitives import Primitive, registry
+from ..core.scenario import Scenario
+from ..serving.bucketing import BucketPolicy, bucket_scenario
+from .space import TunableSpace, variant_suffix
+
+__all__ = ["plan_tune_sweep", "analytic_measurer", "kernel_variant_key",
+           "default_measure_mode"]
+
+
+def kernel_variant_key(space: TunableSpace, params: Dict[str, int],
+                       scn: Scenario) -> str:
+    """Profile key of one kernel-only variant measurement."""
+    suffix = variant_suffix(params, space.axis_order)
+    return f"kernel::{space.kernel}@{suffix}::{scn.key()}"
+
+
+def default_measure_mode() -> str:
+    """``real`` on TPU, ``analytic`` everywhere else."""
+    return "real" if jax.devices()[0].platform == "tpu" else "analytic"
+
+
+def plan_tune_sweep(variants: Sequence[Primitive],
+                    scenarios: Sequence[Scenario], *,
+                    kernel_only: Sequence[Tuple[TunableSpace,
+                                                List[Dict[str, int]]]] = (),
+                    include_base: bool = True,
+                    policy: Optional[BucketPolicy] = None):
+    """Enumerate the tuning measurements.
+
+    Returns ``(items, index)``: the :class:`SweepItem` list for
+    ``run_sweep`` plus an index ``key -> ("prim", prim, scn) |
+    ("kernel", space, params, scn)`` that the analytic measurer and the
+    dominance pruner use to interpret profile entries.
+
+    ``include_base`` adds the hand-written ``pallas``-family entries as
+    competitors: a variant that never beats its hand-written cousin on
+    any bucket is dominated and pruned, keeping the catalog tight.
+    """
+    policy = policy or BucketPolicy()
+    buckets: List[Scenario] = []
+    seen = set()
+    for raw in scenarios:
+        scn = bucket_scenario(raw, policy)
+        if scn.key() not in seen:
+            seen.add(scn.key())
+            buckets.append(scn)
+
+    pool: List[Primitive] = list(variants)
+    if include_base:
+        vnames = {p.name for p in variants}
+        pool += [p for p in registry()
+                 if p.family == "pallas" and not p.params
+                 and p.name not in vnames]
+
+    items: List[SweepItem] = []
+    index: Dict[str, tuple] = {}
+
+    def add(item: SweepItem, entry: tuple) -> None:
+        if item.key not in index:
+            index[item.key] = entry
+            items.append(item)
+
+    for p in pool:
+        for scn in buckets:
+            if not p.supports(scn):
+                continue
+            add(SweepItem(
+                "prim", prim_cost_key(p.name, scn),
+                f"{p.family}:{p.name} @ {scn.key()}",
+                lambda reps, min_time, p=p, scn=scn:
+                    measure_primitive(p, scn, reps=reps,
+                                      min_time=min_time)),
+                ("prim", p, scn))
+
+    for space, cfgs in kernel_only:
+        for params in cfgs:
+            for scn in buckets:
+                builder = space.benchmark(scn, params) \
+                    if space.benchmark else None
+                if builder is None:
+                    continue
+                add(SweepItem(
+                    "kernel", kernel_variant_key(space, params, scn),
+                    f"kernel:{space.kernel}"
+                    f"@{variant_suffix(params, space.axis_order)}"
+                    f" @ {scn.key()}",
+                    lambda reps, min_time, b=builder:
+                        _measure_builder(b, reps, min_time)),
+                    ("kernel", space, params, scn))
+    return items, index
+
+
+def _measure_builder(builder, reps: int, min_time: float) -> float:
+    fn, args = builder()
+    return time_callable(fn, args, reps=reps, min_time=min_time)
+
+
+def analytic_measurer(index: Dict[str, tuple],
+                      spec: HardwareSpec = TPU_V5E_SPEC
+                      ) -> Callable[[SweepItem], float]:
+    """``run_sweep(measure=...)`` override pricing items analytically.
+
+    Uses the tile-aware :class:`AnalyticCostModel` (padding waste, MXU
+    alignment, grid-step dispatch — see ``core.costs``), so different
+    block configurations price deterministically differently and the
+    dominance structure is real even without TPU hardware.
+    """
+    cm = AnalyticCostModel(spec, include_tpu_only=True)
+
+    def measure(item: SweepItem) -> float:
+        entry = index[item.key]
+        if entry[0] == "prim":
+            _, prim, scn = entry
+            return cm.primitive_cost(prim, scn)
+        _, space, params, scn = entry
+        return space.analytic(scn, params, spec)
+
+    return measure

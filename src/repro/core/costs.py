@@ -42,7 +42,7 @@ import numpy as np
 
 from .ioutil import atomic_write_text
 from .layouts import LAYOUT_BY_NAME, DTGraph, default_dt_graph
-from .primitives import Primitive, convert_layout
+from .primitives import Primitive, convert_layout, extension_token
 from .scenario import Scenario
 
 __all__ = ["CostModel", "ProfiledCostModel", "AnalyticCostModel",
@@ -145,9 +145,15 @@ class CostModel:
         hardware spec, schema) must change this string: the serving plan
         cache (repro/serving/plan_cache.py) keys persisted PBQP solutions
         on it, so a stale cost model can never serve a stale plan.
+
+        The registry extension token is folded in for every model: a
+        solve's choice space is the registry, so installing/removing an
+        autotuned variant catalog (``primitives.register_extension``)
+        must rotate every cached plan key even though no individual cost
+        changed.
         """
         return _digest(f"schema{COST_MODEL_SCHEMA}", type(self).__name__,
-                       self._version_fields())
+                       f"ext={extension_token()}", self._version_fields())
 
     def _version_fields(self) -> str:
         """Subclass hook: stringify everything costs depend on."""
@@ -528,6 +534,40 @@ def collective_cost_key(kind: str, nbytes: int, n: int) -> str:
     return f"coll::{kind}::b{int(nbytes)}::n{int(n)}"
 
 
+#: per-grid-step dispatch cost of a Pallas kernel (seconds): each tile
+#: of the grid pays a fetch/issue overhead, so undersized tiles on large
+#: problems price slower — the term that bounds how small a useful
+#: autotuned block can be.
+PALLAS_GRID_STEP_S = 2e-8
+
+
+def _tile_waste(dim: int, b: int) -> float:
+    """Flop inflation from padding ``dim`` up to a multiple of ``b``."""
+    if dim <= 0:
+        return 1.0
+    return (-(-dim // b) * b) / dim
+
+
+def _tile_steps(dim: int, b: int) -> int:
+    return max(1, -(-dim // b))
+
+
+def _clamp_block(b: int, dim: int) -> int:
+    """The block size the kernel wrappers actually run: requested block
+    clamped to the (>=8) problem dim — mirrors ``min(b, max(8, dim))``
+    in every ``repro.kernels.*.ops`` wrapper."""
+    return min(int(b), max(8, int(dim)))
+
+
+def _lane_eff(b: int) -> float:
+    """MXU efficiency of a tile whose minor (lane) extent is ``b``."""
+    return 1.0 if b % 128 == 0 else (0.9 if b % 8 == 0 else 0.7)
+
+
+def _sublane_eff(b: int) -> float:
+    return 1.0 if b % 8 == 0 else 0.75
+
+
 class AnalyticCostModel(CostModel):
     """Roofline estimate of one (possibly batched) invocation:
 
@@ -614,6 +654,57 @@ class AnalyticCostModel(CostModel):
                 w_bytes *= 2.5
         return f, float(act_bytes), float(w_bytes)
 
+    def _pallas_tile_terms(self, prim: Primitive, scn: Scenario):
+        """(flop waste, MXU alignment efficiency, extra setup seconds)
+        of a Pallas kernel's tiling at this scenario.
+
+        Generated variants carry their block sizes in ``prim.params``;
+        hand-written entries price at the wrappers' 128-defaults.  Both
+        go through the same clamping the ops wrappers apply, so the
+        model prices the tiles the kernel actually runs: padding waste
+        (dims rounded up to tile multiples burn real MXU cycles on
+        zeros), lane/sublane alignment (tiles off the (8, 128) register
+        tiling stall the MXU), and per-grid-step dispatch (the
+        software-pipeline depth cost of slicing a problem into many
+        tiny tiles).
+        """
+        p = dict(prim.params)
+        name = prim.name
+        ohow = scn.out_h * scn.out_w
+        if "pw_gemm" in name or "im2col" in name:
+            kdim = scn.c if "pw_gemm" in name else scn.c * scn.k * scn.k
+            bm = _clamp_block(p.get("bm", 128), scn.m)
+            bn = _clamp_block(p.get("bn", 128), ohow)
+            bk = _clamp_block(p.get("bk", 128), kdim)
+            waste = (_tile_waste(scn.m, bm) * _tile_waste(ohow, bn)
+                     * _tile_waste(kdim, bk))
+            align = _lane_eff(bn) * _lane_eff(bk) * _sublane_eff(bm)
+            steps = (_tile_steps(scn.m, bm) * _tile_steps(ohow, bn)
+                     * _tile_steps(kdim, bk))
+        elif "wino" in name:
+            m_ = int(name.split("_f")[1][0])
+            a = m_ + scn.k - 1
+            ntiles = -(-scn.out_h // m_) * -(-scn.out_w // m_)
+            bn = _clamp_block(p.get("bn", 128), ntiles)
+            bc = _clamp_block(p.get("bc", 128), scn.c)
+            waste = _tile_waste(ntiles, bn) * _tile_waste(scn.c, bc)
+            align = _lane_eff(bn) * _sublane_eff(bc)
+            steps = a * a * _tile_steps(ntiles, bn) * _tile_steps(scn.c, bc)
+        elif "direct" in name:
+            bm = _clamp_block(p.get("bm", 128), scn.m)
+            kk = scn.k * scn.k
+            waste = _tile_waste(scn.m, bm)
+            align = _lane_eff(bm)
+            steps = _tile_steps(scn.m, bm) * kk
+            if p.get("unroll", 1):
+                if kk >= 25:  # 5x5 fully unrolled: code-size pressure
+                    align *= 0.95
+            else:  # rolled tap loop: per-tap control flow
+                steps += 4 * kk
+        else:
+            return 1.0, 1.0, 0.0
+        return waste, align, PALLAS_GRID_STEP_S * steps * scn.n
+
     def primitive_cost(self, prim: Primitive, scn: Scenario) -> float:
         if "tpu-only" in prim.tags and not self.include_tpu_only:
             return float("inf")
@@ -622,6 +713,11 @@ class AnalyticCostModel(CostModel):
             return float("inf")
         f, act_b, w_b = self._alg_flops_bytes(prim, scn)
         setup = self.spec.family_setup.get(prim.family, 0.0)
+        if prim.family == "pallas":
+            waste, align, extra = self._pallas_tile_terms(prim, scn)
+            f *= waste
+            eff *= align
+            setup += extra
         return max(f / (eff * self.spec.peak_flops),
                    (scn.n * act_b + w_b) / self.spec.mem_bw) + setup
 

@@ -30,6 +30,7 @@ of scenarios in tests/test_primitives.py.
 from __future__ import annotations
 
 import functools
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -43,7 +44,9 @@ from .scenario import Scenario
 from .winograd_transforms import winograd_matrices
 
 __all__ = ["Primitive", "build_registry", "convert_layout", "registry",
-           "FUSABLE_LAYOUTS"]
+           "FUSABLE_LAYOUTS", "register_extension", "unregister_extension",
+           "clear_extensions", "extension_token",
+           "invalidate_registry_cache"]
 
 #: layouts the generic jnp prologue/epilogue wrapper can absorb — every
 #: permutation layout plus the blocked HWC8 (whose feasibility is gated
@@ -112,6 +115,11 @@ class Primitive:
     #: maps remap the grid (true in-kernel prologue/epilogue fusion);
     #: jnp primitives fall back to the generic wrapper below.
     fused: Optional[Callable] = None
+    #: tuning parameters of a generated variant (sorted (name, value)
+    #: pairs — hashable).  Empty for hand-written entries; the analytic
+    #: TPU model prices tile quantization/alignment from these, and the
+    #: autotune catalog round-trips them (see repro/autotune/).
+    params: Tuple[Tuple[str, int], ...] = ()
 
     def make_fused(self, scn: Scenario, l_in: Optional[str] = None,
                    l_out: Optional[str] = None) -> Callable:
@@ -865,8 +873,97 @@ def build_registry() -> Tuple[Primitive, ...]:
     return tuple(prims)
 
 
+# ----------------------------------------------------------------------
+# registry extensions + memoization
+#
+# ``registry()`` is on the hot path of every solve (``primitives_for``
+# walks it once per node), so the base + extension concatenation is
+# memoized; mutators below invalidate explicitly.  Extensions are how
+# the autotuner (repro/autotune/) registers generated Pallas variants as
+# first-class primitives without rebuilding the hand-written library.
+# ----------------------------------------------------------------------
+_REG_LOCK = threading.Lock()
+#: name -> (primitives, token); token feeds CostModel.version() so
+#: installing/removing an extension rotates every cached plan key.
+_EXTENSIONS: Dict[str, Tuple[Tuple[Primitive, ...], str]] = {}
+_REG_CACHE: Optional[Tuple[Primitive, ...]] = None
+
+
+def invalidate_registry_cache() -> None:
+    """Drop the memoized registry; next ``registry()`` rebuilds it."""
+    global _REG_CACHE
+    with _REG_LOCK:
+        _REG_CACHE = None
+
+
+def register_extension(name: str, prims: Sequence[Primitive],
+                       token: str = "") -> None:
+    """Install (or replace) an extension set of primitives.
+
+    ``token`` should digest the extension's content (the autotuner
+    passes the variant catalog's content hash): it is folded into
+    ``extension_token()`` and hence every ``CostModel.version()``, so
+    plans cached against a different variant set can never be served.
+    """
+    prims = tuple(prims)
+    with _REG_LOCK:
+        base_names = {p.name for p in build_registry()}
+        for other, (ps, _) in _EXTENSIONS.items():
+            if other != name:
+                base_names.update(p.name for p in ps)
+        names = [p.name for p in prims]
+        dup = (set(names) & base_names) or \
+            {n for n in names if names.count(n) > 1}
+        if dup:
+            raise ValueError(f"extension {name!r}: duplicate primitive "
+                             f"names {sorted(dup)}")
+        _EXTENSIONS[name] = (prims, str(token))
+        global _REG_CACHE
+        _REG_CACHE = None
+
+
+def unregister_extension(name: str) -> bool:
+    """Remove one extension; returns whether it was installed."""
+    with _REG_LOCK:
+        found = _EXTENSIONS.pop(name, None) is not None
+        if found:
+            global _REG_CACHE
+            _REG_CACHE = None
+        return found
+
+
+def clear_extensions() -> None:
+    """Remove every extension (tests; serve-path reset)."""
+    with _REG_LOCK:
+        _EXTENSIONS.clear()
+        global _REG_CACHE
+        _REG_CACHE = None
+
+
+def extension_token() -> str:
+    """Digest of the installed extensions (empty string when none).
+
+    Folded into ``CostModel.version()`` (see ``core.costs``): the plan
+    cache key moves whenever the variant set changes.
+    """
+    if not _EXTENSIONS:
+        return ""
+    return ";".join(f"{n}:{_EXTENSIONS[n][1] or len(_EXTENSIONS[n][0])}"
+                    for n in sorted(_EXTENSIONS))
+
+
 def registry() -> Tuple[Primitive, ...]:
-    return build_registry()
+    """The full primitive library: hand-written base + extensions."""
+    global _REG_CACHE
+    cache = _REG_CACHE
+    if cache is None:
+        with _REG_LOCK:
+            cache = _REG_CACHE
+            if cache is None:
+                ext = tuple(p for n in sorted(_EXTENSIONS)
+                            for p in _EXTENSIONS[n][0])
+                cache = _REG_CACHE = build_registry() + ext
+    return cache
 
 
 def primitives_for(scn: Scenario,

@@ -21,7 +21,8 @@ from ..common import use_interpret
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
-                 oh: int, ow: int, c: int, chw_in: bool, chw_out: bool):
+                 oh: int, ow: int, c: int, chw_in: bool, chw_out: bool,
+                 unroll: bool = True):
     acc_ref[...] = jnp.zeros_like(acc_ref)
     span_h = (oh - 1) * stride + 1
     span_w = (ow - 1) * stride + 1
@@ -31,14 +32,33 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
         # kernel's HWC working order while the strip is VMEM-resident
         # (no HBM transpose round trip)
         xa = jnp.transpose(xa, (1, 2, 0))
-    for i in range(k):
-        for j in range(k):
-            win = jax.lax.slice(
-                xa, (i, j, 0), (i + span_h, j + span_w, c),
-                (stride, stride, 1))
-            acc_ref[...] += jnp.dot(
-                win.reshape(oh * ow, c), w_ref[i, j],
-                preferred_element_type=jnp.float32)
+    if unroll:
+        # fully unrolled K x K tap loop: one static MXU dot per tap
+        for i in range(k):
+            for j in range(k):
+                win = jax.lax.slice(
+                    xa, (i, j, 0), (i + span_h, j + span_w, c),
+                    (stride, stride, 1))
+                acc_ref[...] += jnp.dot(
+                    win.reshape(oh * ow, c), w_ref[i, j],
+                    preferred_element_type=jnp.float32)
+    else:
+        # rolled tap loop (autotune variant): one fori_loop iteration
+        # per tap — smaller program at the price of per-tap control flow
+        wa = w_ref[...]  # (K, K, C, bm)
+        bm = wa.shape[3]
+
+        def tap(t, _):
+            i, j = t // k, t % k
+            win = jax.lax.dynamic_slice(
+                xa, (i, j, 0), (span_h, span_w, c))[::stride, ::stride]
+            wt = jax.lax.dynamic_slice(
+                wa, (i, j, 0, 0), (1, 1, c, bm)).reshape(c, bm)
+            acc_ref[...] += jnp.dot(win.reshape(oh * ow, c), wt,
+                                    preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, k * k, tap, 0)
     out = acc_ref[...] + b_ref[...].astype(jnp.float32)
     if chw_out:
         # fused epilogue: emit the consumer's CHW layout through the
@@ -49,7 +69,7 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k: int, stride: int,
 
 def conv_direct_pallas(x, w, b, *, stride: int = 1, bm: int = 128,
                        in_layout: str = "HWC", out_layout: str = "HWC",
-                       interpret=None):
+                       unroll: bool = True, interpret=None):
     """Pre-padded single-image direct conv; w: (K, K, C, M), M % bm == 0.
 
     Layout-parameterized entry point: ``in_layout`` is the layout the
@@ -74,7 +94,8 @@ def conv_direct_pallas(x, w, b, *, stride: int = 1, bm: int = 128,
         interpret = use_interpret()
 
     kern = functools.partial(_conv_kernel, k=k, stride=stride, oh=oh,
-                             ow=ow, c=c, chw_in=chw_in, chw_out=chw_out)
+                             ow=ow, c=c, chw_in=chw_in, chw_out=chw_out,
+                             unroll=unroll)
     in_spec = pl.BlockSpec((c, hp, wp), lambda mi: (0, 0, 0)) if chw_in \
         else pl.BlockSpec((hp, wp, c), lambda mi: (0, 0, 0))
     out_spec = pl.BlockSpec((bm, oh * ow), lambda mi: (mi, 0)) if chw_out \

@@ -11,9 +11,11 @@ from .kernel import conv_direct_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "pad", "bm",
-                                             "in_layout", "out_layout"))
+                                             "in_layout", "out_layout",
+                                             "unroll"))
 def conv_direct(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128,
-                in_layout: str = "HWC", out_layout: str = "HWC"):
+                in_layout: str = "HWC", out_layout: str = "HWC",
+                unroll: bool = True):
     """Direct conv, layout-parameterized (transform fusion entry point).
 
     ``in_layout="HWC"``: x is (H, W, C); ``"CHW"``: x is (C, H, W) and
@@ -34,7 +36,8 @@ def conv_direct(x, w, b, *, stride: int = 1, pad: int = 0, bm: int = 128,
     wp, _ = pad_to(w, 3, bm_)
     bp, _ = pad_to(b, 0, bm_)
     out = conv_direct_pallas(xp, wp, bp, stride=stride, bm=bm_,
-                             in_layout=in_layout, out_layout=out_layout)
+                             in_layout=in_layout, out_layout=out_layout,
+                             unroll=unroll)
     if out_layout == "CHW":
         return out[:m].reshape(m, oh, ow)
     return out[:, :m].reshape(oh, ow, m)

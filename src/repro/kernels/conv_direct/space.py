@@ -1,0 +1,80 @@
+"""Tunable space of the direct NHWC kernel (autotune hook).
+
+Axes: ``bm`` — output-channel tile (the grid dimension); ``unroll`` —
+fully unrolled K x K tap loop (1) vs the rolled ``fori_loop`` variant
+(0), which trades per-tap control flow for a smaller kernel program.
+The input strip must fit VMEM, which depends on the scenario — that
+check lives in the generated primitive's ``supports``, same as the
+hand-written entry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from ...autotune.space import TunableSpace, params_tuple
+from ...core.primitives import Primitive, _sup
+from .ops import conv_direct
+
+BASE_NAME = "pallas_direct_hwc"
+
+AXES = (("bm", (32, 64, 128, 256)),
+        ("unroll", (0, 1)))
+
+
+def _valid(p) -> bool:
+    return p["bm"] % 8 == 0
+
+
+def _vmem_ok(scn) -> bool:
+    # the kernel keeps the padded input strip in VMEM (see
+    # kernels/__init__.py::register_pallas_primitives)
+    hp = scn.h + 2 * scn.pad
+    wp = scn.w + 2 * scn.pad
+    return hp * wp * scn.c * 4 <= 8 * 2 ** 20
+
+
+def _supports(scn) -> bool:
+    return _sup()(scn) and _vmem_ok(scn)
+
+
+def _prepare(scn, w, b):
+    return {"w": jnp.asarray(np.transpose(w, (2, 3, 1, 0)).copy()),
+            "b": jnp.asarray(b)}
+
+
+def _make(scn, *, bm, unroll):
+    def f(x, packed):  # x: HWC
+        return conv_direct(x, packed["w"], packed["b"], stride=scn.stride,
+                           pad=scn.pad, bm=bm, unroll=bool(unroll))
+    return f
+
+
+def _fused(bm, unroll):
+    def build(scn, l_in, l_out):
+        def f(x, packed):
+            return conv_direct(x, packed["w"], packed["b"],
+                               stride=scn.stride, pad=scn.pad, bm=bm,
+                               unroll=bool(unroll),
+                               in_layout=l_in, out_layout=l_out)
+        return f
+    return build
+
+
+def _make_primitive(params) -> Primitive:
+    bm, unroll = params["bm"], params["unroll"]
+    return Primitive(
+        name=SPACE.name_for(BASE_NAME, params),
+        family="pallas", l_in="HWC", l_out="HWC",
+        supports=_supports, prepare=_prepare,
+        make=functools.partial(_make, bm=bm, unroll=unroll),
+        tags=("tpu-only", "autotuned"),
+        fusable_in=("CHW",), fusable_out=("CHW",),
+        fused=_fused(bm, unroll),
+        params=params_tuple(params, SPACE.axis_order))
+
+
+SPACE = TunableSpace(kernel="conv_direct", axes=AXES, valid=_valid,
+                     make_primitive=_make_primitive)

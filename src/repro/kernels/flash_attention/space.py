@@ -1,0 +1,78 @@
+"""Tunable space of the flash-attention kernel (autotune hook).
+
+Flash attention is not a convolution primitive, so this is a
+*kernel-only* space: winning (bq, bk) tiles per scenario bucket are
+recorded in the variant catalog as ``kernel::`` entries for the ops
+layer, not registered with PBQP.  The scenario-induced attention
+problem matches :mod:`.bench` (sequence = OH*OW capped, 4 heads, head
+dim 64).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...autotune.space import TunableSpace
+
+_HEADS = 4
+_HEAD_DIM = 64
+_MAX_SEQ = 1024
+
+AXES = (("bq", (64, 128, 256)),
+        ("bk", (64, 128, 256)))
+
+
+def _valid(p) -> bool:
+    bq, bk = p["bq"], p["bk"]
+    if bq % 8 or bk % 8:
+        return False
+    # per step: q/o tiles (bq, D), k/v tiles (bk, D), scores (bq, bk)
+    return (2 * bq * _HEAD_DIM + 2 * bk * _HEAD_DIM + bq * bk) * 4 \
+        <= 2 * 2 ** 20
+
+
+def _seq(scn) -> int:
+    return min(scn.out_h * scn.out_w, _MAX_SEQ)
+
+
+def _benchmark(scn, params):
+    seq = _seq(scn)
+    if seq < 8:
+        return None
+    bq, bk = params["bq"], params["bk"]
+
+    def build():
+        import functools
+
+        import jax.numpy as jnp
+
+        from .ops import flash_attention
+        rng = np.random.default_rng(0)
+        shape = (1, _HEADS, seq, _HEAD_DIM)
+        q, k, v = (jnp.asarray(rng.normal(size=shape), jnp.float32)
+                   for _ in range(3))
+        fn = functools.partial(flash_attention, bq=bq, bk=bk)
+        return fn, (q, k, v)
+
+    return build
+
+
+def _analytic(scn, params, spec) -> float:
+    """Roofline of the scenario-induced attention at these tiles."""
+    seq = _seq(scn)
+    if seq < 8:
+        return float("inf")
+    bq = min(params["bq"], max(8, seq))
+    bk = min(params["bk"], max(8, seq))
+    sq = -(-seq // bq) * bq
+    sk = -(-seq // bk) * bk
+    flops = 4.0 * _HEADS * sq * sk * _HEAD_DIM
+    eff = spec.family_eff.get("pallas", 0.5)
+    lane = 1.0 if bk % 128 == 0 else (0.9 if bk % 8 == 0 else 0.7)
+    steps = _HEADS * (sq // bq) * (sk // bk)
+    bytes_ = 4.0 * 4 * _HEADS * seq * _HEAD_DIM
+    return max(flops / (eff * lane * spec.peak_flops),
+               bytes_ / spec.mem_bw) + 2e-8 * steps
+
+
+SPACE = TunableSpace(kernel="flash_attention", axes=AXES, valid=_valid,
+                     benchmark=_benchmark, analytic=_analytic)

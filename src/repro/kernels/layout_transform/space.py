@@ -1,0 +1,64 @@
+"""Tunable space of the tiled layout-transform kernels (autotune hook).
+
+Kernel-only space: the transpose kernels take (bh, bw) spatial tiles
+(currently hardcoded 8/128 in the ops wrappers); winning tiles per
+bucket land in the variant catalog as ``kernel::`` entries.  Transforms
+are pure data movement, so the analytic model is bandwidth-only with
+padding waste.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...autotune.space import TunableSpace
+
+AXES = (("bh", (8, 16, 32)),
+        ("bw", (64, 128, 256)))
+
+
+def _valid(p) -> bool:
+    bh, bw = p["bh"], p["bw"]
+    if bh % 8 or bw % 8:
+        return False
+    return bh * bw * 4 <= 2 ** 20  # one tile per step, both copies
+
+
+def _benchmark(scn, params):
+    bh, bw = params["bh"], params["bw"]
+
+    def build():
+        import jax
+        import jax.numpy as jnp
+
+        from ..common import pad_to
+        from .kernel import chw_to_hwc_pallas
+        rng = np.random.default_rng(0)
+        c, h, w = scn.in_shape_chw
+        x = jnp.asarray(rng.normal(size=(c, h, w)), jnp.float32)
+        bh_ = min(bh, max(8, h)) if h >= 8 else h
+        bw_ = min(bw, max(8, w)) if w >= 8 else w
+
+        def fn(a):
+            xp, _ = pad_to(a, 1, bh_)
+            xp, _ = pad_to(xp, 2, bw_)
+            return chw_to_hwc_pallas(xp, bh=bh_, bw=bw_)[:h, :w, :]
+
+        return jax.jit(fn), (x,)
+
+    return build
+
+
+def _analytic(scn, params, spec) -> float:
+    c, h, w = scn.in_shape_chw
+    bh = min(params["bh"], max(8, h))
+    bw = min(params["bw"], max(8, w))
+    hp = -(-h // bh) * bh
+    wp = -(-w // bw) * bw
+    nbytes = 2.0 * 4 * c * hp * wp  # read + write, padded
+    lane = 1.0 if bw % 128 == 0 else (0.9 if bw % 8 == 0 else 0.7)
+    steps = (hp // bh) * (wp // bw)
+    return nbytes / (lane * spec.mem_bw) + 2e-8 * steps
+
+
+SPACE = TunableSpace(kernel="layout_transform", axes=AXES, valid=_valid,
+                     benchmark=_benchmark, analytic=_analytic)

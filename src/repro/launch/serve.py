@@ -15,6 +15,13 @@ of the analytic roofline; uncovered buckets fall back analytically, and
 a recalibrated profile automatically invalidates previously persisted
 plans through the cost-model version key (docs/calibration.md).
 
+``--catalog <path>`` installs the surviving autotuned Pallas variants
+from a VariantCatalog (built by ``python -m repro.launch.tune``) into
+the primitive registry before serving: bucket solves can then assign
+tuned block configurations, and the catalog content hash is folded
+into every cost-model version — so swapping catalogs invalidates
+persisted plans exactly like recalibration does (docs/autotune.md).
+
 ``--slo-ms`` attaches a deadline to every vision request: the
 continuous-batching scheduler (docs/serving.md) launches partial
 batches early when slack runs out, and goodput (the deadline-met
@@ -59,6 +66,11 @@ def main():
     ap.add_argument("--profile", default=None,
                     help="measured HardwareProfile JSON driving PBQP "
                          "selection (see repro.launch.calibrate)")
+    ap.add_argument("--catalog", default=None,
+                    help="VariantCatalog JSON (repro.launch.tune): "
+                         "install its surviving autotuned variants as "
+                         "selectable primitives before serving; the "
+                         "catalog hash rotates every plan-cache key")
     ap.add_argument("--image-tokens", type=int, default=4)
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="vision SLO in ms: image requests carry a "
@@ -109,6 +121,9 @@ def main():
     if args.profile and args.vision_every <= 0:
         ap.error("--profile prices the vision plan path; it needs "
                  "--vision-every > 0 to have any effect")
+    if args.catalog and args.vision_every <= 0:
+        ap.error("--catalog extends the vision primitive registry; it "
+                 "needs --vision-every > 0 to have any effect")
     if args.mesh and args.dp_mesh > 1:
         ap.error("--dp-mesh is the shorthand for --mesh dp=N; pass "
                  "one or the other")
@@ -142,6 +157,13 @@ def main():
     if args.vision_every > 0:
         from ..core.costs import AnalyticCostModel
         from ..serving import BucketPolicy, PlanServer, conv_tower
+        if args.catalog:
+            from ..autotune import VariantCatalog
+            catalog = VariantCatalog.load(args.catalog)
+            n_inst = catalog.install()
+            print(f"catalog {args.catalog}: installed {n_inst} "
+                  f"autotuned variants (content "
+                  f"{catalog.content_hash()})")
         policy = BucketPolicy(min_hw=8, max_hw=128)
         cost_model = AnalyticCostModel()
         if args.profile:

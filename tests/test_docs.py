@@ -12,7 +12,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 
 def test_docs_exist():
     for name in ("architecture.md", "solver.md", "calibration.md",
-                 "observability.md"):
+                 "observability.md", "autotune.md"):
         assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
 
 
